@@ -1,0 +1,127 @@
+"""Shared benchmark infrastructure: trace + performance-database caching.
+
+Traces and the Tuna performance database are expensive to regenerate, so
+they are cached under ``benchmarks/_cache``. Delete the directory to force
+a rebuild.
+"""
+
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.perfdb import PerfDB
+from repro.core.telemetry import ConfigVector
+from repro.core.trace import Trace, load_trace, save_trace
+from repro.core.tuner import build_database
+from repro.sim.engine import run_trace, simulate
+from repro.sim.workloads import WORKLOADS
+
+CACHE = Path(__file__).parent / "_cache"
+
+# fm sizes the performance database is exercised at (offline sweep)
+DB_FM_FRACS = np.round(np.arange(1.0, 0.199, -0.04), 3)
+
+
+def get_trace(name: str) -> Trace:
+    CACHE.mkdir(exist_ok=True)
+    f = CACHE / f"trace_{name}.npz"
+    if f.exists():
+        return load_trace(f)
+    t0 = time.time()
+    tr = WORKLOADS[name]()
+    save_trace(tr, f)
+    print(f"# generated trace {name} in {time.time()-t0:.1f}s")
+    return tr
+
+
+def steady_configs(trace: Trace, fm_frac: float, skip: int = 3,
+                   min_pacc: float = 500.0) -> list:
+    """Per-interval config vectors of a workload at a given fm size.
+    Degenerate (near-empty) intervals are dropped — they would index
+    meaningless micro-benchmarks."""
+    res = simulate(trace, fm_frac=fm_frac)
+    return [c for c in res.configs[skip:] if c.pacc_f + c.pacc_s >= min_pacc]
+
+
+def representative_config(trace: Trace, fm_frac: float = 1.0) -> ConfigVector:
+    """The paper's Section 6.1 profiling step: run with the whole RSS in
+    fast memory, aggregate one configuration vector (mean profiling
+    interval; AI/intensity access-weighted)."""
+    cvs = steady_configs(trace, fm_frac)
+    arr = np.stack([c.as_array() for c in cvs])
+    mean = arr.mean(axis=0)
+    acc = arr[:, 0] + arr[:, 1]
+    w = acc / max(acc.sum(), 1.0)
+    mean[4] = float((arr[:, 4] * w).sum())  # ai
+    mean[5] = trace.rss_pages  # rss
+    mean[6] = cvs[0].hot_thr
+    mean[7] = cvs[0].num_threads
+    intensity = float(sum(c.intensity * wi for c, wi in zip(cvs, w)))
+    from repro.core.telemetry import ConfigVector as CV
+
+    cv = CV.from_array(mean, intensity=max(1.0, intensity))
+    warm_pages = float(np.mean([c.warm_pages for c in cvs]))
+    warm_touches = float(np.mean([c.warm_touches for c in cvs]))
+    import dataclasses
+
+    return dataclasses.replace(
+        cv, warm_pages=warm_pages, warm_touches=warm_touches
+    )
+
+
+def build_bench_db(
+    per_workload: int = 12,
+    fm_probe_points=(1.0, 0.9, 0.75, 0.6, 0.45, 0.3),
+    jitter: int = 1,
+    seed: int = 0,
+) -> PerfDB:
+    """Offline Tuna database for the benchmark suite.
+
+    The configuration-space sweep is seeded from the workloads' own
+    operating points across fast-memory sizes (plus multiplicative jitter),
+    standing in for the paper's 100 K-vector grid — the database still only
+    ever stores *micro-benchmark* execution times.
+    """
+    CACHE.mkdir(exist_ok=True)
+    f = CACHE / "perfdb"
+    if (f.with_suffix(".json")).exists():
+        return PerfDB.load(f)
+    rng = np.random.default_rng(seed)
+    configs: list[ConfigVector] = []
+    t0 = time.time()
+    import dataclasses
+
+    for name in WORKLOADS:
+        tr = get_trace(name)
+        # aggregated operating-point vectors (what runtime queries look
+        # like) — the paper's dense 100K-vector grid covers these; our
+        # sparse build must include them explicitly
+        for frac in (1.0, 0.95, 0.9, 0.8):
+            configs.append(representative_config(tr, fm_frac=frac))
+        pool: list[ConfigVector] = []
+        for frac in fm_probe_points:
+            pool.extend(steady_configs(tr, frac))
+        idx = rng.choice(len(pool), size=min(per_workload, len(pool)), replace=False)
+        for i in idx:
+            configs.append(pool[i])
+            for _ in range(jitter):
+                v = pool[i].as_array().copy()
+                v[:4] *= rng.uniform(0.7, 1.4, size=4)  # pacc/pm jitter
+                v[4] *= rng.uniform(0.8, 1.25)  # AI jitter
+                configs.append(dataclasses.replace(
+                    ConfigVector.from_array(v, intensity=pool[i].intensity),
+                    warm_pages=pool[i].warm_pages,
+                    warm_touches=pool[i].warm_touches,
+                ))
+    print(f"# perfdb: {len(configs)} configs, building...")
+    db = build_database(configs, run_trace, fm_fracs=DB_FM_FRACS, n_intervals=12)
+    db.save(f)
+    print(f"# perfdb built in {time.time()-t0:.1f}s")
+    return db
+
+
+def loss(t: float, baseline: float) -> float:
+    return (t - baseline) / baseline

@@ -1,0 +1,40 @@
+"""Fig. 8: TPP vs TPP+Tuna — page migrations and fast-memory size over time
+for BFS. Tuna's watermark changes perturb the migration activity TPP
+performs; the workload keeps its loss within target while fast memory
+shrinks."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.sim.engine import simulate
+
+from benchmarks.common import build_bench_db, get_trace
+from benchmarks.fig3_7_tuning import run_workload
+
+
+def run(report) -> None:
+    t0 = time.time()
+    db = build_bench_db()
+    tr = get_trace("bfs")
+    plain = simulate(tr, fm_frac=1.0)
+    tuned, saving, _, overall_loss = run_workload("bfs", db)
+    # migration activity per tuning window
+    n = min(len(plain.configs), len(tuned.configs))
+    pm_plain = np.array([c.pm_pr + c.pm_de for c in plain.configs[:n]])
+    pm_tuned = np.array([c.pm_pr + c.pm_de for c in tuned.configs[:n]])
+    for i in range(0, n, max(1, n // 8)):
+        report(
+            f"fig8/window_{i}",
+            (time.time() - t0) * 1e6,
+            f"pm_tpp={pm_plain[i]};pm_tpp_tuna={pm_tuned[i]}"
+            f";fm_pages={tuned.fm_sizes[i]}",
+        )
+    report(
+        "fig8/summary",
+        (time.time() - t0) * 1e6,
+        f"total_migr_tpp={pm_plain.sum()};total_migr_tpp_tuna={pm_tuned.sum()}"
+        f";saving={saving*100:.1f}%;loss={overall_loss*100:.2f}%",
+    )

@@ -1,0 +1,24 @@
+"""Kernel micro-benchmarks (CPU interpret-mode timings are correctness-
+oriented; TPU perf is assessed structurally via the roofline dry-run)."""
+
+from __future__ import annotations
+
+import time
+
+
+def run(report) -> None:
+    import numpy as np
+
+    t0 = time.time()
+    try:
+        from repro.kernels import ops as kops
+    except Exception as e:
+        report("kernels/__skip__", 0.0, f"kernels not built yet: {e!r}")
+        return
+    import jax.numpy as jnp
+
+    for name, fn in kops.BENCH_CASES.items():
+        t0 = time.time()
+        out = fn()
+        dt = (time.time() - t0) * 1e6
+        report(f"kernels/{name}", dt, f"ok shape={getattr(out, 'shape', None)}")

@@ -1,0 +1,73 @@
+"""Aggregate dry-run records into the §Roofline table (markdown + CSV).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_table [--mesh single]
+           [--remat full] [--dir benchmarks/_dryrun] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def load_records(d: Path, mesh: str, remat: str) -> list[dict]:
+    recs = []
+    for f in sorted(d.glob(f"*__{mesh}__{remat}.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def fmt_row(r: dict) -> str:
+    if r["status"] == "skip":
+        return (
+            f"| {r['arch']} | {r['shape']} | — | — | — | — | skip:"
+            f" {r['reason'][:48]}… | — | — |"
+        )
+    if r["status"] != "ok":
+        return f"| {r['arch']} | {r['shape']} | FAIL | | | | {r['error'][:60]} | | |"
+    rf = r["roofline"]
+    frac = (
+        rf.get("roofline_fraction", 0)
+        if r["shape"].startswith(("train", "prefill"))
+        else rf.get("memory_roofline_fraction", 0)
+    )
+    return (
+        f"| {r['arch']} | {r['shape']} | {rf['t_compute_s']*1e3:.2f} "
+        f"| {rf['t_memory_s']*1e3:.2f} | {rf['t_collective_s']*1e3:.2f} "
+        f"| {rf['bottleneck']} | {rf['useful_flops_ratio']:.2f} "
+        f"| {frac:.3f} | {r['compile_s']:.0f}s |"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--dir", default="benchmarks/_dryrun")
+    args = ap.parse_args()
+    recs = load_records(Path(args.dir), args.mesh, args.remat)
+    print(
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) "
+        "| bottleneck | HLO/model flops | roofline frac | compile |"
+    )
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        print(fmt_row(r))
+    ok = [r for r in recs if r["status"] == "ok"]
+    if ok:
+        worst = min(
+            ok,
+            key=lambda r: (
+                r["roofline"].get("roofline_fraction", 1)
+                if r["shape"].startswith(("train", "prefill"))
+                else r["roofline"].get("memory_roofline_fraction", 1)
+            ),
+        )
+        coll = max(ok, key=lambda r: r["roofline"]["t_collective_s"])
+        print(f"\nworst roofline fraction: {worst['arch']} × {worst['shape']}")
+        print(f"most collective-bound:   {coll['arch']} × {coll['shape']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Kernel and roofline benches
+are included after the paper-reproduction set.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [filter ...]
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _report(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def main() -> None:
+    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    from benchmarks import (
+        fig1_motivation,
+        table2_accuracy,
+        fig3_7_tuning,
+        fig8_migrations,
+        table3_target_sensitivity,
+        serving_tiered,
+        kernels as kernel_bench,
+    )
+
+    suites = [
+        ("fig1", fig1_motivation),
+        ("table2", table2_accuracy),
+        ("fig3_7", fig3_7_tuning),
+        ("fig8", fig8_migrations),
+        ("table3", table3_target_sensitivity),
+        ("serving", serving_tiered),
+        ("kernels", kernel_bench),
+    ]
+    print("name,us_per_call,derived")
+    for key, mod in suites:
+        if filters and not any(f in key for f in filters):
+            continue
+        t0 = time.time()
+        try:
+            mod.run(_report)
+            _report(f"{key}/__suite__", (time.time() - t0) * 1e6, "ok")
+        except Exception as e:  # keep the harness going; report the failure
+            _report(f"{key}/__suite__", (time.time() - t0) * 1e6, f"FAIL:{e!r}")
+            if "--strict" in sys.argv:
+                raise
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Beyond-paper table: tiered-KV serving under HBM budget pressure.
+
+Sweeps the HBM page budget (fraction of total KV footprint) for the
+continuous-batching server and reports round-time percentiles, migration
+traffic, and promotion failures — the TPU deployment surface of the
+paper's technique (DESIGN.md §4), plus the Tuna-tuned row where the
+budget is chosen by the runtime instead of fixed.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _mk(hbm_pages, total=4096, seed=0):
+    from repro.serving import ContinuousBatcher, TieredPagedKV, TieredServer
+    from repro.serving.kv_cache import KVPageConfig
+
+    kv = TieredPagedKV(
+        KVPageConfig(n_groups=4, page_size=16, kv_heads=2, head_dim=32),
+        total_pages=total,
+        hbm_capacity=hbm_pages,
+        seed=seed,
+    )
+    batcher = ContinuousBatcher(
+        n_sessions=400, page_size=16, max_batch=16, resumes_per_round=3.0,
+        seed=seed,
+    )
+    return kv, batcher, TieredServer(kv, batcher)
+
+
+def run(report) -> None:
+    rounds = 600
+    base = None
+    for frac in (1.0, 0.5, 0.25, 0.125):
+        t0 = time.time()
+        hbm = int(4096 * frac)
+        kv, batcher, server = _mk(hbm)
+        server.run(rounds, drift_every=200)
+        s = server.summary()
+        if base is None:
+            base = s["mean_round_ms"]
+        report(
+            f"serving/hbm_{int(frac*1000)}",
+            (time.time() - t0) * 1e6,
+            f"mean_ms={s['mean_round_ms']:.3f};p99_ms={s['p99_round_ms']:.3f}"
+            f";slowdown={s['mean_round_ms']/base:.2f}x"
+            f";migr_in={s['migrated_in']};fails={s['promote_failures']}",
+        )
+    # Tuna-tuned budget (the paper's loop on the serving tier)
+    t0 = time.time()
+    from repro.core import TunaTuner, TunerConfig, WatermarkController
+    from repro.core.perfdb import PerfDB, PerfRecord
+    from repro.core.telemetry import ConfigVector
+
+    kv, batcher, _ = _mk(1024)
+    grid = np.array([1.0, 0.85, 0.7, 0.55, 0.4, 0.25])
+    db = PerfDB()
+    for pacc in (200, 800, 2400):
+        for pm in (2, 16, 64):
+            loss = (pm / 32.0) * (1.0 / grid - 1.0) * 0.08
+            db.add(PerfRecord(
+                config=ConfigVector(pacc_f=pacc, pacc_s=pm, pm_de=pm,
+                                    pm_pr=pm, ai=1e6, rss_pages=4096,
+                                    hot_thr=2, num_threads=1),
+                fm_fracs=grid, times=1.0 + loss,
+            ))
+    db.build()
+    tuner = TunaTuner(
+        db, WatermarkController(kv.pool, max_step_frac=0.1),
+        TunerConfig(target_loss=0.05), peak_rss_pages=1024,
+    )
+    from repro.serving import TieredServer
+
+    server = TieredServer(kv, batcher, tuner=tuner, tune_every=16)
+    server.run(rounds, drift_every=200)
+    s = server.summary()
+    report(
+        "serving/tuna_tuned",
+        (time.time() - t0) * 1e6,
+        f"mean_ms={s['mean_round_ms']:.3f};p99_ms={s['p99_round_ms']:.3f}"
+        f";hbm_saving={s['fm_saving_vs_cap']*100:.1f}%"
+        f";migr_in={s['migrated_in']};fails={s['promote_failures']}",
+    )

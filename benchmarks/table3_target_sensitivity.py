@@ -1,0 +1,45 @@
+"""Table 3 + Section 6.3: sensitivity studies on SSSP.
+
+(a) Performance-loss target τ ∈ {5%, 10%, 15%}: paper reports fast-memory
+    savings 9% / 18% / 27% with losses 4.6% / 9.6% / 15.1% (the 15% case
+    slightly violates because model error grows with shrink).
+(b) Tuning frequency {0.5 s, 1 s, 2.5 s, 5 s}: smaller intervals save more
+    memory but lose more performance (paper: 0.5 s → up to 25% saving but
+    17% loss; 5 s → ~2% saving, ~3% loss).
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import build_bench_db
+from benchmarks.fig3_7_tuning import run_workload
+
+
+def run(report) -> None:
+    db = build_bench_db()
+    # (a) loss-target sensitivity
+    for tau in (0.05, 0.10, 0.15):
+        t0 = time.time()
+        res, saving, max_saving, overall_loss = run_workload(
+            "sssp", db, target_loss=tau
+        )
+        report(
+            f"table3/sssp_tau{int(tau*100)}",
+            (time.time() - t0) * 1e6,
+            f"saving={saving*100:.1f}%;max_saving={max_saving*100:.1f}%"
+            f";loss={overall_loss*100:.2f}%",
+        )
+    # (b) tuning-interval sensitivity (profiling intervals per tuning step;
+    # 3 ≈ the paper's 2.5 s default)
+    for te, label in ((1, "0.5s"), (2, "1s"), (3, "2.5s"), (6, "5s")):
+        t0 = time.time()
+        res, saving, max_saving, overall_loss = run_workload(
+            "sssp", db, tune_every=te
+        )
+        report(
+            f"interval/sssp_{label}",
+            (time.time() - t0) * 1e6,
+            f"saving={saving*100:.1f}%;max_saving={max_saving*100:.1f}%"
+            f";loss={overall_loss*100:.2f}%",
+        )

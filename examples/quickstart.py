@@ -1,0 +1,45 @@
+"""Quickstart: the paper's pipeline end to end on one workload.
+
+1. Generate a real BFS page-access trace.
+2. Profile it, build a (small) Tuna performance database offline.
+3. Run BFS with TPP alone vs TPP+Tuna and compare fast-memory saving
+   and performance loss against the 5% target.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import TunaTuner, TunerConfig, WatermarkController
+from repro.core.tuner import build_database
+from repro.sim.engine import run_trace, simulate
+from repro.sim.workloads import xsbench_trace
+from repro.tiering.page_pool import TieredPagePool
+
+print("== generating XSBench trace (real MC lookup kernel, page-instrumented)")
+trace = xsbench_trace(n_intervals=36, lookups=80_000)
+print(f"   rss={trace.rss_pages} pages, {len(trace)} profiling intervals")
+
+print("== profiling + building the performance database (offline)")
+probe = simulate(trace, fm_frac=0.9)
+configs = [c for c in probe.configs[3:] if c.pacc_f + c.pacc_s >= 500][::3][:10]
+db = build_database(configs, run_trace, fm_fracs=np.arange(1.0, 0.28, -0.06),
+                    n_intervals=8)
+print(f"   {len(db.records)} execution records")
+
+print("== TPP alone (fast memory = peak RSS)")
+base = simulate(trace, fm_frac=1.0)
+print(f"   runtime {base.total_time*1e3:.1f} ms")
+
+print("== TPP + Tuna (5% loss target)")
+pool = TieredPagePool(trace.rss_pages, trace.rss_pages)
+tuner = TunaTuner(db, WatermarkController(pool, max_step_frac=0.05),
+                  TunerConfig(target_loss=0.05), peak_rss_pages=trace.rss_pages)
+tuned = simulate(trace, fm_frac=1.0, tuner=tuner, tune_every=5)
+saving = 1 - tuned.fm_sizes.mean() / trace.rss_pages
+loss = (tuned.total_time - base.total_time) / base.total_time
+print(f"   runtime {tuned.total_time*1e3:.1f} ms "
+      f"(loss {loss*100:.2f}% vs 5% target), "
+      f"avg fast-memory saving {saving*100:.1f}%, "
+      f"max saving {(1 - tuned.fm_sizes.min()/trace.rss_pages)*100:.1f}%")
+print("done.")

@@ -1,0 +1,5 @@
+"""Architecture registry: ``get_config(name)`` / ``--arch <id>``."""
+
+from repro.configs.registry import ARCHS, get_config, SHAPES, arch_shape_cells
+
+__all__ = ["ARCHS", "get_config", "SHAPES", "arch_shape_cells"]

@@ -1,0 +1,63 @@
+"""Assigned architectures × input shapes (the 40-cell grid).
+
+Each module in this package defines ``CONFIG`` with the exact published
+dimensions; shapes pair (seq_len, global_batch) with the step kind they
+lower (train_step / prefill / decode). ``long_500k`` requires a
+sub-quadratic token mixer and is skipped for pure full-attention archs
+(recorded as a skip, per DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+
+
+ARCHS = (
+    "qwen3-1.7b",
+    "chatglm3-6b",
+    "minicpm3-4b",
+    "qwen2-72b",
+    "deepseek-moe-16b",
+    "granite-moe-1b-a400m",
+    "internvl2-1b",
+    "jamba-1.5-large-398b",
+    "whisper-small",
+    "rwkv6-3b",
+)
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(name: str):
+    mod = importlib.import_module(
+        "repro.configs." + name.replace("-", "_").replace(".", "_")
+    )
+    return mod.CONFIG
+
+
+def arch_shape_cells():
+    """All (arch, shape, runnable) cells with skip reasons."""
+    cells = []
+    for a in ARCHS:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            skip = None
+            if s.name == "long_500k" and not cfg.subquadratic:
+                skip = "pure full-attention arch: 500k decode needs a sub-quadratic mixer"
+            cells.append((a, s.name, skip))
+    return cells

@@ -1,0 +1,16 @@
+"""Whisper-small [audio]: enc-dec 12+12 layers; the conv/mel frontend is a
+stub — input_specs() supplies 1500 precomputed frame embeddings.
+[arXiv:2212.04356]
+
+Deviation noted in DESIGN.md: positions use RoPE rather than Whisper's
+learned absolute embeddings (same structure and FLOPs; the published
+checkpoint is not being loaded).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small", family="audio", num_layers=12, d_model=768,
+    num_heads=12, num_kv_heads=12, head_dim=64, d_ff=3072,
+    vocab_size=51865, norm="layernorm", mlp_act="gelu",
+    encoder_layers=12, frontend="audio_stub", frontend_len=1500,
+)

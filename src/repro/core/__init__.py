@@ -1,0 +1,35 @@
+"""Tuna core: modeling page migration to right-size the fast memory tier.
+
+Components (paper Section 3–5):
+
+* :mod:`repro.core.telemetry` — the 8-element configuration vector
+  ``[pacc_f, pacc_s, pm_de, pm_pr, AI, RSS, hot_thr, num_threads]`` and the
+  interval profiler that measures it.
+* :mod:`repro.core.microbench` — the micro-benchmark generator (Eqs. 1–4):
+  given a configuration vector, synthesize a strided two-array workload with
+  exactly those page accesses, migrations, and arithmetic intensity.
+* :mod:`repro.core.perfdb` — the performance database: execution-time curves
+  of the micro-benchmark across fast-memory sizes, indexed by configuration
+  vector in a hierarchical small-world graph (HNSW; the paper uses Faiss).
+* :mod:`repro.core.tuner` — the runtime: profile → query → pick the minimum
+  fast-memory size within the performance-loss target → set watermarks.
+* :mod:`repro.core.watermark` — the watermark controller (paper Section 4).
+"""
+
+from repro.core.telemetry import ConfigVector, IntervalProfiler
+from repro.core.microbench import MicrobenchSpec, generate_microbench
+from repro.core.perfdb import PerfDB, PerfRecord
+from repro.core.tuner import TunaTuner, TunerConfig
+from repro.core.watermark import WatermarkController
+
+__all__ = [
+    "ConfigVector",
+    "IntervalProfiler",
+    "MicrobenchSpec",
+    "generate_microbench",
+    "PerfDB",
+    "PerfRecord",
+    "TunaTuner",
+    "TunerConfig",
+    "WatermarkController",
+]

@@ -1,0 +1,50 @@
+"""Watermark controller (paper Section 4).
+
+Tuning the fast memory size is *actuated* purely through the reclaim
+watermarks so that demotion happens in the background (kswapd analogue)
+rather than on the application's allocation path. The paper couples
+``min ≈ 0.8 × low`` and pins ``high = low = new_fm``; the pool stores
+watermarks in free-page units, and :class:`repro.tiering.page_pool.Watermarks`
+performs that translation.
+
+The controller adds rate limiting and hysteresis so that a noisy tuner
+cannot thrash the reclaimer (growing then shrinking every interval), and
+keeps an audit log used by the benchmarks (Figs. 3–8).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.tiering.page_pool import TieredPagePool
+
+
+@dataclass
+class WatermarkEvent:
+    t: float
+    old_fm: int
+    new_fm: int
+
+
+@dataclass
+class WatermarkController:
+    pool: TieredPagePool
+    # never shrink/grow by more than this fraction of hw capacity per call
+    max_step_frac: float = 0.10
+    # ignore changes smaller than this fraction (hysteresis)
+    deadband_frac: float = 0.005
+    log: list = field(default_factory=list)
+
+    def set_size(self, new_fm_pages: int, t: float = 0.0) -> int:
+        """Request a new fast-memory size; returns the size actually set."""
+        cap = self.pool.hw_capacity
+        cur = self.pool.effective_fm_size
+        target = int(max(1, min(cap, new_fm_pages)))
+        if abs(target - cur) < self.deadband_frac * cap:
+            return cur
+        max_step = max(1, int(self.max_step_frac * cap))
+        step = max(-max_step, min(max_step, target - cur))
+        new = cur + step
+        self.pool.set_fm_size(new)
+        self.log.append(WatermarkEvent(t=t, old_fm=cur, new_fm=new))
+        return new

@@ -1,0 +1,123 @@
+"""Flash attention (training/prefill hot spot) as a Pallas TPU kernel.
+
+Blockwise attention with online softmax: grid (B, H, Sq/bq, Skv/bk); the
+kv-block axis is innermost (sequential on TPU), carrying running max /
+normalizer / accumulator in VMEM scratch. Block shapes are MXU-aligned
+(multiples of 128 on the contracting/lane dims); GQA is handled by
+indexing the kv head as ``h // (H // KV)`` in the k/v BlockSpecs, so
+grouped heads re-read the same kv block from VMEM instead of materializing
+a repeated tensor in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_K = 256
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, causal: bool, sm_scale: float, block_q: int, block_k: int,
+    seq_q: int, seq_k: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * sm_scale  # (bq, bk)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) \
+        + (seq_k - seq_q)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    if causal:
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+    # out-of-range kv positions (padded tail)
+    s = jnp.where(k_pos < seq_k, s, NEG_INF)
+
+    m_prev = m_scr[...]  # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q, k, v, causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q, block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+):
+    """q (B,S,H,hd); k,v (B,T,KV,hd) → (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    sm_scale = 1.0 / math.sqrt(hd)
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    # pad sequence dims to block multiples
+    Sp = -(-S // bq) * bq
+    Tp = -(-T // bk) * bk
+    qt = jnp.moveaxis(q, 2, 1)  # (B,H,S,hd)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if Sp != S:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    if Tp != T:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    grid = (B, H, Sp // bq, Tp // bk)
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, sm_scale=sm_scale,
+        block_q=bq, block_k=bk, seq_q=S, seq_k=T,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, qi, ki: (b, h // rep, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, qi, ki: (b, h // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.moveaxis(out[:, :, :S], 1, 2)

@@ -1,0 +1,50 @@
+"""Batched page migration (the tier-migration DMA) as a Pallas kernel.
+
+Copies ``src_pool[src_idx[i]] → dst_pool[dst_idx[i]]`` for a batch of page
+moves. The index vectors are scalar-prefetch operands so the Block index
+maps can dereference them; the destination pool is donated via
+input/output aliasing, so untouched pages are never copied — this is the
+descriptor-ring DMA a real HBM⇄host migrator issues, expressed as one
+kernel launch per migration batch instead of one transfer per page.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _migrate_kernel(dst_idx_ref, src_idx_ref, dst_ref, src_ref, out_ref):
+    # the whole block is one page; BlockSpecs did the addressing (dst_ref is
+    # only present for the aliasing contract — never read)
+    out_ref[...] = src_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def migrate_pages(dst_pool, src_pool, dst_idx, src_idx, interpret: bool = False):
+    """dst_pool (Pd, *page_shape); src_pool (Ps, *page_shape);
+    dst_idx/src_idx (n,) int32. Returns the updated dst_pool."""
+    n = dst_idx.shape[0]
+    page_shape = dst_pool.shape[1:]
+    blk = (1,) + page_shape
+    nd = len(page_shape)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec(blk, lambda i, di, si: (di[i],) + (0,) * nd),
+            pl.BlockSpec(blk, lambda i, di, si: (si[i],) + (0,) * nd),
+        ],
+        out_specs=pl.BlockSpec(blk, lambda i, di, si: (di[i],) + (0,) * nd),
+    )
+    return pl.pallas_call(
+        _migrate_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst_pool.shape, dst_pool.dtype),
+        input_output_aliases={2: 0},  # dst_pool (arg index after prefetch) → out
+        interpret=interpret,
+    )(dst_idx.astype(jnp.int32), src_idx.astype(jnp.int32), dst_pool, src_pool)

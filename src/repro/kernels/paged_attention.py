@@ -1,0 +1,117 @@
+"""Paged decode attention as a Pallas TPU kernel.
+
+The KV cache lives in page pools (the same pages the Tuna-managed tier
+migrates); each sequence owns a list of page ids. The page table and the
+per-sequence lengths are *scalar-prefetch* operands
+(``pltpu.PrefetchScalarGridSpec``) so the k/v BlockSpec index maps can
+dereference them — the canonical TPU pattern for vLLM-style serving.
+
+Grid: (B, pages_per_seq), page axis innermost/sequential, carrying online
+softmax state in VMEM scratch. GQA: the query's KV-head group attends to
+its slice of the page.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    tbl_ref, len_ref,  # scalar prefetch
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, page_size: int, sm_scale: float,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (H, hd)
+    k = k_ref[0].astype(jnp.float32)  # (page_size, KV, hd)
+    v = v_ref[0].astype(jnp.float32)
+    H, hd = q.shape
+    psize, KV, _ = k.shape
+    rep = H // KV
+    qg = q.reshape(KV, rep, hd)
+    # scores (KV, rep, page_size)
+    s = jax.lax.dot_general(
+        qg, jnp.moveaxis(k, 1, 0), (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ) * sm_scale
+    # mask: token position within the sequence = j*page_size + i
+    pos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+    valid = (pos < len_ref[b]) & (tbl_ref[b, j] >= 0)
+    s = jnp.where(valid, s, NEG_INF)
+    s = s.reshape(H, psize)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)  # (H, psize)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    pg = p.reshape(KV, rep, psize)
+    pv = jax.lax.dot_general(
+        pg, jnp.moveaxis(v, 1, 0), (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )  # (KV, rep, hd)
+    acc_scr[...] = acc_scr[...] * alpha + pv.reshape(H, hd)
+    m_scr[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths,
+                           interpret: bool = False):
+    """q (B,H,hd); k_pages/v_pages (P, page_size, KV, hd);
+    page_table (B, ppseq) int32 (-1 = hole); lengths (B,) int32."""
+    B, H, hd = q.shape
+    P, page_size, KV, _ = k_pages.shape
+    ppseq = page_table.shape[1]
+    sm_scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(
+        _paged_kernel, page_size=page_size, sm_scale=sm_scale
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, ppseq),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, j, tbl, ln: (b, 0, 0)),
+            pl.BlockSpec(
+                (1, page_size, KV, hd),
+                lambda b, j, tbl, ln: (jnp.maximum(tbl[b, j], 0), 0, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, page_size, KV, hd),
+                lambda b, j, tbl, ln: (jnp.maximum(tbl[b, j], 0), 0, 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, j, tbl, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pages, v_pages)

@@ -1,0 +1,15 @@
+"""Ambient mesh context: lets layer code opt into shard_map-based
+context-parallel attention when tracing under a known mesh."""
+
+from __future__ import annotations
+
+_MESH = None
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH

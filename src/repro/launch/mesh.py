@@ -1,0 +1,29 @@
+"""Production meshes.
+
+Defined as *functions* so importing this module never touches jax device
+state — the dry-run sets ``xla_force_host_platform_device_count`` before
+any jax import, and smoke tests must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips. Multi-pod adds a pure-DP
+    'pod' axis: (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh with the production axis names, for smoke
+    tests that exercise the sharded code paths on CPU."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """The batch-parallel axes of a mesh (pod folds into data parallelism)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

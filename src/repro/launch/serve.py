@@ -1,0 +1,58 @@
+"""Serving steps: prefill and one-token decode under pjit.
+
+Decode-state sharding is context-parallel: KV caches are sharded along
+the *sequence* axis over the ``model`` mesh axis (DESIGN.md §6), so
+per-chip KV bytes do not depend on the TP degree and GQA head counts never
+hit mesh-divisibility walls. XLA inserts the log-sum-exp-equivalent
+reduction for the sharded softmax contraction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import decode_step, forward, init_decode_state
+from repro.models.config import ModelConfig
+from repro.launch.sharding import (
+    batch_sharding,
+    decode_state_shardings,
+    serve_param_shardings,
+)
+
+
+def make_serve_fns(cfg: ModelConfig, mesh, batch: int, max_len: int):
+    from repro.launch.context import set_mesh
+
+    set_mesh(mesh)  # enables shard_map context-parallel decode attention
+    enc_len = cfg.frontend_len if cfg.has_encoder else 0
+
+    def prefill_fn(params, tokens, extra_embeds=None, frames=None):
+        logits, _ = forward(
+            params, cfg, tokens, extra_embeds=extra_embeds, frames=frames
+        )
+        return logits[:, -1:]
+
+    def decode_fn(params, state, token, cur_len):
+        return decode_step(params, cfg, state, token, cur_len)
+
+    from repro.models import init_model
+
+    pshapes = jax.eval_shape(lambda k: init_model(k, cfg), jax.random.key(0))
+    pshard = serve_param_shardings(pshapes, cfg, mesh)
+    sshapes = jax.eval_shape(
+        lambda: init_decode_state(cfg, batch, max_len, enc_len)
+    )
+    sshard = decode_state_shardings(sshapes, cfg, mesh)
+    return {
+        "prefill": prefill_fn,
+        "decode": decode_fn,
+        "param_shapes": pshapes,
+        "param_shardings": pshard,
+        "state_shapes": sshapes,
+        "state_shardings": sshard,
+        "token_sharding": batch_sharding(mesh, batch, 2),
+        "scalar_sharding": NamedSharding(mesh, P()),
+        "logit_sharding": batch_sharding(mesh, batch, 3),
+    }

@@ -1,0 +1,207 @@
+"""Parameter / activation sharding rules (GSPMD PartitionSpecs).
+
+Name-based logical rules in the MaxText style: each parameter leaf's path
+decides how its dims map onto the mesh — FSDP (ZeRO-3) over ``data`` for
+the replicated-dim, tensor parallel over ``model`` for heads/ffn/experts.
+Dims that do not divide evenly by the axis size fall back to replication
+(`_ax` helper), which keeps every (arch × mesh) cell lowerable — e.g.
+14-head archs cannot head-shard on a 16-way model axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _ax(dim: int, axis: str, sizes: dict) -> str | None:
+    """axis name if it divides the dim, else replicate."""
+    n = sizes.get(axis, 1)
+    return axis if n > 1 and dim % n == 0 else None
+
+
+def param_spec(path: str, leaf, cfg: ModelConfig, sizes: dict,
+               strategy: str = "tp") -> P:
+    """PartitionSpec for one parameter leaf (path = '/'-joined keys).
+
+    strategy:
+      * ``tp``      — FSDP(data) × tensor-parallel(model); right for big
+        models whose per-layer math saturates the chip.
+      * ``dp_only`` — ZeRO-3 over the *combined* (data, model) axes with no
+        tensor parallelism: every matmul runs whole per chip, batch shards
+        over all 256/512 chips, and the only collectives are the per-layer
+        parameter all-gathers + gradient reduce-scatters. This is the §Perf
+        hillclimb result for small/medium archs, where 16-way TP drowns the
+        step in activation all-reduces (see EXPERIMENTS.md §Perf).
+    """
+    shape = leaf.shape
+    name = path.split("/")[-1]
+    grouped = "groups" in path  # leading stacked-G axis
+    pre = (None,) if grouped else ()
+    r = len(shape) - len(pre)  # remaining dims
+
+    def spec(*dims):
+        return P(*(pre + dims))
+
+    if strategy in ("dp_only", "zero1"):
+        # ZeRO weight sharding over the combined (data, model) axes.
+        # Prefer the *last* divisible dim (the output dim of a matmul):
+        # sharding the contracting dim makes the partitioner gather
+        # activations instead of weights — a measured 56x regression on
+        # square projections (EXPERIMENTS.md §Perf iteration 2).
+        both = tuple(a for a in ("data", "model") if sizes.get(a, 1) > 1)
+        n = 1
+        for a in both:
+            n *= sizes[a]
+        dims = [None] * r
+        for i in range(r - 1, -1, -1):
+            if shape[len(pre) + i] % n == 0:
+                dims[i] = both
+                break
+        return spec(*dims)
+
+    d = lambda i, axis: _ax(shape[len(pre) + i], axis, sizes)
+
+    if name == "embed":
+        return P(_ax(shape[0], "model", sizes), None)
+    if name == "lm_head":
+        return P(_ax(shape[0], "data", sizes), _ax(shape[1], "model", sizes))
+    if name == "pos_embed":
+        return P(None, None)
+    # MoE experts: EP over model, FSDP over data
+    if name in ("we1", "we3"):
+        return spec(d(0, "model"), d(1, "data"), None)
+    if name == "we2":
+        return spec(d(0, "model"), None, d(2, "data"))
+    if name == "router":
+        return spec(d(0, "data"), None)
+    # attention / generic matmuls: (in=data, out=model) or transposed
+    if name in ("w_q", "w_k", "w_v", "q_b", "kv_b", "w_r", "w_g", "cm_k",
+                "w1", "w3", "in_proj", "cm_r", "w_decay_a"):
+        return spec(d(0, "data"), d(1, "model"))
+    if name in ("w_o", "w2", "out_proj", "cm_v", "w_decay_b"):
+        return spec(d(0, "model"), d(1, "data"))
+    if name in ("q_a", "kv_a", "x_proj"):
+        return spec(d(0, "data"), None)
+    if name in ("dt_proj",):
+        return spec(None, d(1, "model"))
+    if name in ("b_q", "b_k", "b_v", "conv_b", "dt_bias", "Dskip"):
+        return spec(d(0, "model"))
+    if name in ("conv_w",):
+        return spec(None, d(1, "model"))
+    if name in ("A_log",):
+        return spec(d(0, "model"), None)
+    # everything else (norm scales, mus, loras, bonus): replicated
+    return spec(*(None,) * r)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", k)) for k in path)
+
+
+def param_specs(params, cfg: ModelConfig, mesh, strategy: str = "tp"):
+    sizes = _sizes(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: param_spec(_path_str(p), x, cfg, sizes, strategy), params
+    )
+
+
+def param_shardings(params, cfg: ModelConfig, mesh, strategy: str = "tp"):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        param_specs(params, cfg, mesh, strategy),
+    )
+
+
+def serve_param_shardings(params, cfg: ModelConfig, mesh):
+    """Serving parameter shardings: TP over `model`, replicated over the
+    batch axes. FSDP-style `data` sharding is a training memory
+    optimization; in decode it forces a per-layer parameter all-gather
+    every token (~11 GB/step on the 72B decode cell — §Perf iteration 4).
+    """
+    def strip_data(spec: P) -> P:
+        return P(*(
+            None if d == "data" else (
+                tuple(a for a in d if a != "data") or None
+                if isinstance(d, tuple) else d
+            )
+            for d in spec
+        ))
+
+    specs = param_specs(params, cfg, mesh, "tp")
+    return jax.tree.map(lambda sp: NamedSharding(mesh, strip_data(sp)), specs)
+
+
+def default_strategy(cfg: ModelConfig, total_params: int) -> str:
+    """§Perf-derived heuristic: models whose weights+optimizer fit a chip
+    many times over lose to TP collectives; run them ZeRO-1 (replicated
+    compute, sharded optimizer state — EXPERIMENTS.md §Perf cell 2)."""
+    if cfg.n_experts > 0:
+        return "tp"  # MoE needs expert parallelism (zero1 measured worse)
+    return "zero1" if total_params < 5_000_000_000 else "tp"
+
+
+# ------------------------------------------------------------- activations
+def batch_axes(mesh) -> tuple:
+    """Mesh axes the global batch is sharded over (pod folds into DP)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def token_sharding(mesh, ndim: int = 2):
+    """(B, ...) inputs: batch over pod×data, rest replicated."""
+    return NamedSharding(mesh, P(batch_axes(mesh), *(None,) * (ndim - 1)))
+
+
+def batch_sharding(mesh, batch: int, ndim: int, strategy: str = "tp"):
+    """Batch-dim sharding with divisibility fallback (B=1 cells). Under
+    dp_only the batch shards over *all* mesh axes."""
+    axes = batch_axes(mesh)
+    if strategy == "dp_only":
+        axes = axes + tuple(a for a in ("model",) if a in mesh.axis_names)
+    sizes = _sizes(mesh)
+    n = 1
+    for a in axes:
+        n *= sizes.get(a, 1)
+    lead = axes if (n > 1 and batch % n == 0) else None
+    return NamedSharding(mesh, P(lead, *(None,) * (ndim - 1)))
+
+
+def decode_state_spec(path: str, leaf, cfg: ModelConfig, mesh) -> P:
+    """Decode-state sharding: batch over data; the long axis (KV sequence /
+    d_inner / heads) over model where divisible.
+
+    KV caches (G, B, S, KV, hd) are *sequence-sharded* over the model axis
+    — the context-parallel layout that keeps per-chip KV bytes independent
+    of the TP degree and sidesteps kv_heads < model-axis divisibility.
+    """
+    sizes = _sizes(mesh)
+    name = path.split("/")[-1]
+    shape = leaf.shape
+    b_ax = _ax(shape[1], "data", sizes)
+    if name.endswith(("_k", "_v", "_ckv", "_krope", "_xk", "_xv", "_ks", "_vs")):
+        return P(None, b_ax, _ax(shape[2], "model", sizes), *(None,) * (len(shape) - 3))
+    if name.endswith("_conv"):
+        return P(None, b_ax, None, _ax(shape[3], "model", sizes))
+    if name.endswith("_ssm"):
+        return P(None, b_ax, _ax(shape[2], "model", sizes), None)
+    if name.endswith("_wkv"):
+        return P(None, b_ax, _ax(shape[2], "model", sizes), None, None)
+    if name.endswith(("_tm_x", "_cm_x")):
+        return P(None, b_ax, None, _ax(shape[3], "model", sizes))
+    return P(*(None,) * len(shape))
+
+
+def decode_state_shardings(state, cfg: ModelConfig, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: NamedSharding(
+            mesh, decode_state_spec(_path_str(p), x, cfg, mesh)
+        ),
+        state,
+    )

@@ -1,0 +1,39 @@
+"""Composable model definitions (pure JAX, no external NN library).
+
+Every architecture in the assigned pool is expressed as a
+:class:`repro.models.config.ModelConfig` over one block stack
+(:mod:`repro.models.transformer`): dense GQA (with qk-norm / QKV-bias /
+2d-RoPE variants), MLA, fine-grained MoE with shared experts, Mamba, RWKV6,
+and encoder-decoder — each block type implemented in
+:mod:`repro.models.layers` as an (init, apply) pair over plain parameter
+pytrees, with a parallel PartitionSpec tree for GSPMD sharding
+(:mod:`repro.models.sharding`).
+"""
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import (
+    active_param_count,
+    active_param_count_shapes,
+    decode_step,
+    encode,
+    forward,
+    init_decode_state,
+    init_model,
+    model_flops,
+    param_count,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig",
+    "active_param_count",
+    "active_param_count_shapes",
+    "decode_step",
+    "encode",
+    "forward",
+    "init_decode_state",
+    "init_model",
+    "model_flops",
+    "param_count",
+    "prefill",
+]

@@ -1,0 +1,603 @@
+"""Layer implementations: (init, apply) pairs over plain parameter pytrees.
+
+Conventions
+-----------
+* ``x`` activations are ``(B, S, D)`` in the compute dtype.
+* Every repeated block's params are initialized with a leading group axis
+  ``G`` (stacked for ``jax.lax.scan``); ``g_`` prefixed inits do this.
+* Decode paths take/return explicit state (KV caches, SSM states) so the
+  serving step is a pure function.
+* Attention math routes through :mod:`repro.kernels.ops`, which dispatches
+  to the Pallas kernels on TPU and the jnp references elsewhere.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _ct(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def dense_init(key, shape, dtype, in_axis: int = 0):
+    fan_in = shape[in_axis] if shape else 1
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------- norms
+def norm_init(cfg: ModelConfig, shape_d: int):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((shape_d,), _dt(cfg)),
+                "bias": jnp.zeros((shape_d,), _dt(cfg))}
+    return {"scale": jnp.ones((shape_d,), _dt(cfg))}
+
+
+def norm_apply(p, x, cfg: ModelConfig, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (out * p["scale"].astype(jnp.float32)
+                + p["bias"].astype(jnp.float32)).astype(x.dtype)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+# ---------------------------------------------------------------------- rope
+def rope_cos_sin(positions, dim: int, theta: float):
+    """positions (...,) → cos/sin (..., dim/2) in f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float, mode: str = "full"):
+    """x (B, S, H, hd); mode 'half' rotates only the first hd/2 dims
+    (ChatGLM's 2d RoPE layout)."""
+    hd = x.shape[-1]
+    rot = hd if mode == "full" else hd // 2
+    cos, sin = rope_cos_sin(positions, rot, theta)  # (B,S,rot/2)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    if rot == hd:
+        return rotated
+    return jnp.concatenate([rotated, x[..., rot:]], axis=-1)
+
+
+# ----------------------------------------------------------------- attention
+def g_attn_init(key, cfg: ModelConfig, G: int):
+    ks = jax.random.split(key, 8)
+    D, Q, KV = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p = {
+        "w_q": dense_init(ks[0], (G, D, Q), _dt(cfg), in_axis=1),
+        "w_k": dense_init(ks[1], (G, D, KV), _dt(cfg), in_axis=1),
+        "w_v": dense_init(ks[2], (G, D, KV), _dt(cfg), in_axis=1),
+        "w_o": dense_init(ks[3], (G, Q, D), _dt(cfg), in_axis=1),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((G, Q), _dt(cfg))
+        p["b_k"] = jnp.zeros((G, KV), _dt(cfg))
+        p["b_v"] = jnp.zeros((G, KV), _dt(cfg))
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((G, cfg.head_dim), _dt(cfg))
+        p["k_norm"] = jnp.ones((G, cfg.head_dim), _dt(cfg))
+    return p
+
+
+def _qk_norm(v, scale, eps=1e-6):
+    vf = v.astype(jnp.float32)
+    ms = (vf * vf).mean(-1, keepdims=True)
+    return (vf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(v.dtype)
+
+
+def attn_project_qkv(p, x, cfg: ModelConfig, positions):
+    B, S, D = x.shape
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dq->bsq", x, p["w_q"])
+    k = jnp.einsum("bsd,dk->bsk", x, p["w_k"])
+    v = jnp.einsum("bsd,dk->bsk", x, p["w_v"])
+    if "b_q" in p:
+        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KVH, hd)
+    v = v.reshape(B, S, KVH, hd)
+    if "q_norm" in p:
+        q = _qk_norm(q, p["q_norm"])
+        k = _qk_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_mode)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_mode)
+    return q, k, v
+
+
+def attn_apply(p, x, cfg: ModelConfig, positions, causal: bool = True):
+    """Full-sequence attention (training / prefill). Returns (out, (k, v))."""
+    from repro.kernels import ops as kops
+
+    q, k, v = attn_project_qkv(p, x, cfg, positions)
+    o = kops.attention(q, k, v, causal=causal)  # (B,S,H,hd)
+    out = jnp.einsum(
+        "bsq,qd->bsd", o.reshape(o.shape[0], o.shape[1], -1), p["w_o"]
+    )
+    return out, (k, v)
+
+
+def _masked_insert(cache, new, cur_len):
+    """Insert ``new`` (B,1,...) at position cur_len of cache (B,S,...).
+
+    Elementwise select on an iota mask instead of dynamic_update_slice:
+    a DUS on a sequence-sharded cache makes the SPMD partitioner replicate
+    the whole cache ("involuntary full rematerialization") — ~270 MB of
+    collective traffic per layer per decoded token on the 72B decode cell.
+    The select partitions cleanly along the sharded S axis
+    (EXPERIMENTS.md §Perf, qwen2-72b decode iteration 2).
+    """
+    S = cache.shape[1]
+    mask = (jnp.arange(S) == cur_len).reshape(
+        (1, S) + (1,) * (cache.ndim - 2)
+    )
+    return jnp.where(mask, new.astype(cache.dtype), cache)
+
+
+def quantize_kv(x, axis: int = -1):
+    """Symmetric per-token-head int8 quantization: (int8 values, scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.rint(x.astype(jnp.float32) / scale), -127, 127).astype(
+        jnp.int8
+    )
+    return q, scale.astype(jnp.bfloat16)
+
+
+def attn_decode(p, x, cfg: ModelConfig, cache_k, cache_v, cur_len,
+                k_scale=None, v_scale=None):
+    """One-token decode against a KV cache.
+
+    x (B,1,D); cache_k/v (B, S_max, KVH, hd); cur_len () int32 — tokens
+    already in the cache. With ``cfg.kv_cache_dtype == 'int8'`` the caches
+    hold int8 values and (B, S_max, KVH, 1) bf16 scales are carried
+    alongside (the §Perf hillclimb that halves the decode bandwidth term).
+    Returns (out, new_k, new_v[, new_k_scale, new_v_scale]).
+    """
+    from repro.kernels import ops as kops
+
+    B = x.shape[0]
+    positions = jnp.full((B, 1), cur_len, dtype=jnp.int32)
+    q, k, v = attn_project_qkv(p, x, cfg, positions)
+    from repro.launch.context import get_mesh
+
+    mesh = get_mesh()
+    S_max = cache_k.shape[1]
+    use_cp = (
+        mesh is not None
+        and "model" in mesh.axis_names
+        and S_max % dict(zip(mesh.axis_names, mesh.devices.shape))["model"] == 0
+    )
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        cache_k = _masked_insert(cache_k, kq, cur_len)
+        cache_v = _masked_insert(cache_v, vq, cur_len)
+        k_scale = _masked_insert(k_scale, ks, cur_len)
+        v_scale = _masked_insert(v_scale, vs, cur_len)
+        if use_cp:
+            o = kops.cp_decode_attention(
+                q, cache_k, cache_v, cur_len + 1, mesh,
+                k_scale=k_scale, v_scale=v_scale,
+            )
+        else:
+            kd = cache_k.astype(jnp.bfloat16) * k_scale.astype(jnp.bfloat16)
+            vd = cache_v.astype(jnp.bfloat16) * v_scale.astype(jnp.bfloat16)
+            o = kops.decode_attention(q, kd, vd, cur_len + 1)
+        out = jnp.einsum("bsq,qd->bsd", o.reshape(B, 1, -1), p["w_o"])
+        return out, cache_k, cache_v, k_scale, v_scale
+    cache_k = _masked_insert(cache_k, k, cur_len)
+    cache_v = _masked_insert(cache_v, v, cur_len)
+    if use_cp:
+        o = kops.cp_decode_attention(q, cache_k, cache_v, cur_len + 1, mesh)
+    else:
+        o = kops.decode_attention(q, cache_k, cache_v, cur_len + 1)
+    out = jnp.einsum("bsq,qd->bsd", o.reshape(B, 1, -1), p["w_o"])
+    return out, cache_k, cache_v
+
+
+# ----------------------------------------------------------------------- MLA
+def g_mla_init(key, cfg: ModelConfig, G: int):
+    ks = jax.random.split(key, 8)
+    D, H = cfg.d_model, cfg.num_heads
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    p = {
+        "q_a": dense_init(ks[0], (G, D, cfg.q_lora_rank), _dt(cfg), 1),
+        "q_norm": jnp.ones((G, cfg.q_lora_rank), _dt(cfg)),
+        "q_b": dense_init(ks[1], (G, cfg.q_lora_rank, H * qk_dim), _dt(cfg), 1),
+        "kv_a": dense_init(
+            ks[2], (G, D, cfg.kv_lora_rank + cfg.qk_rope_dim), _dt(cfg), 1
+        ),
+        "kv_norm": jnp.ones((G, cfg.kv_lora_rank), _dt(cfg)),
+        "kv_b": dense_init(
+            ks[3],
+            (G, cfg.kv_lora_rank, H * (cfg.qk_nope_dim + cfg.v_head_dim)),
+            _dt(cfg),
+            1,
+        ),
+        "w_o": dense_init(ks[4], (G, H * cfg.v_head_dim, D), _dt(cfg), 1),
+    }
+    return p
+
+
+def _mla_qkv(p, x, cfg: ModelConfig, positions):
+    """Shared MLA projection; returns q_nope,q_rope and the compressed
+    (c_kv, k_rope) that form the cache."""
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    cq = jnp.einsum("bsd,dr->bsr", x, p["q_a"])
+    cq = _qk_norm(cq, p["q_norm"])
+    q = jnp.einsum("bsr,rq->bsq", cq, p["q_b"]).reshape(
+        B, S, H, cfg.qk_nope_dim + cfg.qk_rope_dim
+    )
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["kv_a"])
+    c_kv = _qk_norm(ckv_full[..., : cfg.kv_lora_rank], p["kv_norm"])
+    k_rope = apply_rope(
+        ckv_full[..., None, cfg.kv_lora_rank :], positions, cfg.rope_theta
+    )  # (B,S,1,rope)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attend(
+    p, q_nope, q_rope, c_kv, k_rope, cfg: ModelConfig, causal, q_off=0,
+    kv_valid_len=None,
+):
+    """Attention over the compressed cache (the MLA decode identity:
+    absorb kv_b's k-part into the query)."""
+    B, S, H, _ = q_nope.shape
+    T = c_kv.shape[1]
+    kv_b = p["kv_b"].reshape(cfg.kv_lora_rank, H, cfg.qk_nope_dim + cfg.v_head_dim)
+    k_b = kv_b[..., : cfg.qk_nope_dim]  # (r, H, nope)
+    v_b = kv_b[..., cfg.qk_nope_dim :]  # (r, H, v)
+    # absorbed query in latent space: (B,S,H,r)
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                       k_b.astype(jnp.float32))
+    scores = jnp.einsum("bshr,btr->bhst", q_lat, c_kv.astype(jnp.float32))
+    scores = scores + jnp.einsum(
+        "bshn,btxn->bhst", q_rope.astype(jnp.float32),
+        k_rope.astype(jnp.float32)
+    )
+    scores = scores / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    if causal:
+        qpos = jnp.arange(S)[:, None] + q_off
+        kpos = jnp.arange(T)[None, :]
+        scores = jnp.where(kpos <= qpos, scores, -jnp.inf)
+    if kv_valid_len is not None:
+        kpos = jnp.arange(T)[None, None, None, :]
+        scores = jnp.where(kpos < kv_valid_len, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bshr", w, c_kv.astype(jnp.float32))
+    o = jnp.einsum("bshr,rhv->bshv", o_lat, v_b.astype(jnp.float32))
+    return o.reshape(B, S, H * cfg.v_head_dim).astype(q_nope.dtype)
+
+
+def mla_apply(p, x, cfg: ModelConfig, positions, causal: bool = True):
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, positions)
+    o = _mla_attend(p, q_nope, q_rope, c_kv, k_rope, cfg, causal)
+    out = jnp.einsum("bsv,vd->bsd", o, p["w_o"])
+    return out, (c_kv, k_rope.squeeze(2))
+
+
+def mla_decode(p, x, cfg: ModelConfig, cache_ckv, cache_krope, cur_len):
+    """cache_ckv (B,Smax,r); cache_krope (B,Smax,rope)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), cur_len, dtype=jnp.int32)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, positions)
+    cache_ckv = _masked_insert(cache_ckv, c_kv, cur_len)
+    cache_krope = _masked_insert(cache_krope, k_rope.squeeze(2), cur_len)
+    o = _mla_attend(
+        p,
+        q_nope,
+        q_rope,
+        cache_ckv.astype(c_kv.dtype),
+        cache_krope[:, :, None, :],
+        cfg,
+        causal=False,
+        kv_valid_len=cur_len + 1,
+    )
+    out = jnp.einsum("bsv,vd->bsd", o, p["w_o"])
+    return out, cache_ckv, cache_krope
+
+
+# ----------------------------------------------------------------------- MLP
+def g_mlp_init(key, cfg: ModelConfig, G: int, d_ff: int | None = None):
+    ks = jax.random.split(key, 3)
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    if cfg.mlp_act == "swiglu":
+        return {
+            "w1": dense_init(ks[0], (G, D, F), _dt(cfg), 1),
+            "w3": dense_init(ks[1], (G, D, F), _dt(cfg), 1),
+            "w2": dense_init(ks[2], (G, F, D), _dt(cfg), 1),
+        }
+    return {
+        "w1": dense_init(ks[0], (G, D, F), _dt(cfg), 1),
+        "w2": dense_init(ks[2], (G, F, D), _dt(cfg), 1),
+    }
+
+
+def mlp_apply(p, x, cfg: ModelConfig):
+    if "w3" in p:
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w1"]))
+        h = h * jnp.einsum("bsd,df->bsf", x, p["w3"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"]))
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"])
+
+
+# ----------------------------------------------------------------------- MoE
+def g_moe_init(key, cfg: ModelConfig, G: int):
+    ks = jax.random.split(key, 5)
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff or cfg.d_ff
+    p = {
+        "router": dense_init(ks[0], (G, D, E), _dt(cfg), 1),
+        "we1": dense_init(ks[1], (G, E, D, F), _dt(cfg), 2),
+        "we3": dense_init(ks[2], (G, E, D, F), _dt(cfg), 2),
+        "we2": dense_init(ks[3], (G, E, F, D), _dt(cfg), 2),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = g_mlp_init(
+            ks[4], cfg, G, d_ff=(cfg.moe_d_ff or cfg.d_ff) * cfg.n_shared_experts
+        )
+    return p
+
+
+def moe_apply(p, x, cfg: ModelConfig, capacity_factor: float = 1.25):
+    """Token-choice top-k MoE with capacity-based dispatch (GShard-style:
+    dispatch/combine einsums become all-to-alls under expert parallelism)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    N = B * S
+    xf = x.reshape(N, D)
+    logits = jnp.einsum("nd,de->ne", xf, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, topk_idx = jax.lax.top_k(probs, K)  # (N,K)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+    C = max(1, int(capacity_factor * N * K / E))
+    # position of each (token, k) within its expert's buffer
+    onehot = jax.nn.one_hot(topk_idx, E, dtype=jnp.int32)  # (N,K,E)
+    flat = onehot.reshape(N * K, E)
+    pos = jnp.cumsum(flat, axis=0) - flat  # (N*K, E) position if kept
+    pos = (pos * flat).sum(-1).reshape(N, K)  # (N,K)
+    keep = pos < C
+    # dispatch (N, K) -> (E, C) buffers
+    e_idx = topk_idx  # (N,K)
+    disp = jnp.zeros((E, C, D), dtype=x.dtype)
+    tok_idx = jnp.broadcast_to(jnp.arange(N)[:, None], (N, K))
+    disp = disp.at[
+        jnp.where(keep, e_idx, 0), jnp.where(keep, pos, 0)
+    ].add(jnp.where(keep[..., None], xf[tok_idx], 0))
+    # expert FFNs over (E, C, D) — E shards over the model axis
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", disp, p["we1"]))
+    h = h * jnp.einsum("ecd,edf->ecf", disp, p["we3"])
+    eout = jnp.einsum("ecf,efd->ecd", h, p["we2"])
+    # combine
+    gathered = eout[jnp.where(keep, e_idx, 0), jnp.where(keep, pos, 0)]  # (N,K,D)
+    combined = (gathered * jnp.where(keep, gate_vals, 0.0)[..., None]).sum(1)
+    out = combined.reshape(B, S, D).astype(x.dtype)
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x, cfg)
+    # load-balance aux loss (Switch-style)
+    me = probs.mean(0)
+    ce = (onehot.sum(1) > 0).astype(jnp.float32).mean(0)
+    aux = E * jnp.sum(me * ce)
+    return out, aux
+
+
+# --------------------------------------------------------------------- Mamba
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def g_mamba_init(key, cfg: ModelConfig, G: int):
+    ks = jax.random.split(key, 8)
+    D, DI, DS = cfg.d_model, cfg.d_inner, cfg.mamba_d_state
+    R = _dt_rank(cfg)
+    A = jnp.broadcast_to(
+        jnp.arange(1, DS + 1, dtype=jnp.float32)[None, :], (DI, DS)
+    )
+    return {
+        "in_proj": dense_init(ks[0], (G, D, 2 * DI), _dt(cfg), 1),
+        "conv_w": dense_init(ks[1], (G, cfg.mamba_d_conv, DI), _dt(cfg), 1),
+        "conv_b": jnp.zeros((G, DI), _dt(cfg)),
+        "x_proj": dense_init(ks[2], (G, DI, R + 2 * DS), _dt(cfg), 1),
+        "dt_proj": dense_init(ks[3], (G, R, DI), _dt(cfg), 1),
+        "dt_bias": jnp.zeros((G, DI), _dt(cfg)),
+        "A_log": jnp.broadcast_to(jnp.log(A)[None], (G, DI, DS)).astype(jnp.float32),
+        "Dskip": jnp.ones((G, DI), jnp.float32),
+        "out_proj": dense_init(ks[4], (G, DI, D), _dt(cfg), 1),
+    }
+
+
+def _mamba_conv_scan(p, xz, cfg, conv_state=None):
+    """Depthwise causal conv over S. xz (B,S,DI). Returns (y, new_state)."""
+    K = cfg.mamba_d_conv
+    B, S, DI = xz.shape
+    if conv_state is None:
+        pad = jnp.zeros((B, K - 1, DI), xz.dtype)
+    else:
+        pad = conv_state.astype(xz.dtype)
+    xp = jnp.concatenate([pad, xz], axis=1)  # (B, S+K-1, DI)
+    # unrolled small-kernel depthwise conv
+    y = sum(
+        xp[:, k : k + S, :] * p["conv_w"][k][None, None, :] for k in range(K)
+    ) + p["conv_b"][None, None, :]
+    new_state = xp[:, -(K - 1) :, :] if K > 1 else jnp.zeros((B, 0, DI), xz.dtype)
+    return y, new_state
+
+
+def mamba_apply(p, x, cfg: ModelConfig, state=None):
+    """Selective SSM (Mamba-1). state = (conv_state, ssm_state) for decode
+    (S == 1); None for full-sequence (associative scan over S).
+
+    Returns (out, new_state) — new_state is None in full-sequence mode.
+    """
+    B, S, D = x.shape
+    DI, DS = cfg.d_inner, cfg.mamba_d_state
+    R = _dt_rank(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xs, z = xz[..., :DI], xz[..., DI:]
+    conv_state = state[0] if state is not None else None
+    xs, new_conv = _mamba_conv_scan(p, xs, cfg, conv_state)
+    xs = jax.nn.silu(xs)
+    proj = jnp.einsum("bse,er->bsr", xs, p["x_proj"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", proj[..., :R], p["dt_proj"])
+        + p["dt_bias"][None, None, :]
+    ).astype(jnp.float32)  # (B,S,DI)
+    Bmat = proj[..., R : R + DS].astype(jnp.float32)  # (B,S,DS)
+    Cmat = proj[..., R + DS :].astype(jnp.float32)  # (B,S,DS)
+    A = -jnp.exp(p["A_log"])  # (DI,DS)
+    decay = jnp.exp(dt[..., None] * A[None, None])  # (B,S,DI,DS)
+    drive = (dt * xs.astype(jnp.float32))[..., None] * Bmat[:, :, None, :]
+    if state is None:
+        # parallel over S: associative scan on (decay, drive)
+        def comb(a, b):
+            return (a[0] * b[0], b[0] * a[1] + b[1])
+
+        _, h = jax.lax.associative_scan(comb, (decay, drive), axis=1)
+        new_ssm = None
+    else:
+        h = state[1][:, None] * decay + drive  # S == 1
+        new_ssm = h[:, -1]
+    y = jnp.einsum("bsed,bsd->bse", h, Cmat)
+    y = y + xs.astype(jnp.float32) * p["Dskip"][None, None, :]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    new_state = None if state is None else (new_conv, new_ssm)
+    return out, new_state
+
+
+# --------------------------------------------------------------------- RWKV6
+def g_rwkv_init(key, cfg: ModelConfig, G: int):
+    ks = jax.random.split(key, 12)
+    D = cfg.d_model
+    H = D // cfg.rwkv_head_dim
+    lora = max(32, D // 32)
+    return {
+        "mu_r": jnp.full((G, D), 0.5, _dt(cfg)),
+        "mu_k": jnp.full((G, D), 0.5, _dt(cfg)),
+        "mu_v": jnp.full((G, D), 0.5, _dt(cfg)),
+        "mu_w": jnp.full((G, D), 0.5, _dt(cfg)),
+        "mu_g": jnp.full((G, D), 0.5, _dt(cfg)),
+        "w_r": dense_init(ks[0], (G, D, D), _dt(cfg), 1),
+        "w_k": dense_init(ks[1], (G, D, D), _dt(cfg), 1),
+        "w_v": dense_init(ks[2], (G, D, D), _dt(cfg), 1),
+        "w_g": dense_init(ks[3], (G, D, D), _dt(cfg), 1),
+        "w_o": dense_init(ks[4], (G, D, D), _dt(cfg), 1),
+        # data-dependent decay LoRA (Finch)
+        "w_decay_a": dense_init(ks[5], (G, D, lora), _dt(cfg), 1),
+        "w_decay_b": dense_init(ks[6], (G, lora, D), _dt(cfg), 1),
+        "decay_base": jnp.full((G, D), -4.0, jnp.float32),
+        "bonus": jnp.zeros((G, H, cfg.rwkv_head_dim), jnp.float32),
+        "ln_x": jnp.ones((G, D), _dt(cfg)),
+        # channel mix
+        "cm_mu": jnp.full((G, D), 0.5, _dt(cfg)),
+        "cm_k": dense_init(ks[7], (G, D, cfg.d_ff), _dt(cfg), 1),
+        "cm_v": dense_init(ks[8], (G, cfg.d_ff, D), _dt(cfg), 1),
+        "cm_r": dense_init(ks[9], (G, D, D), _dt(cfg), 1),
+    }
+
+
+def _token_shift(x, mu, prev=None):
+    """lerp(x_{t-1}, x_t, mu); prev (B,1,D) is the carry for decode."""
+    if prev is None:
+        xprev = jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+    else:
+        xprev = jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1)
+    return xprev + mu[None, None, :].astype(x.dtype) * (x - xprev)
+
+
+def rwkv_time_mix(p, x, cfg: ModelConfig, state=None):
+    """RWKV6 time mix. state = (x_prev (B,1,D), wkv (B,H,hd,hd)).
+
+    Full-sequence mode uses the chunked linear-attention reference in
+    repro.kernels.ops (Pallas kernel on TPU); decode is O(1) state update.
+    """
+    from repro.kernels import ops as kops
+
+    B, S, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    xprev = state[0] if state is not None else None
+    r = jnp.einsum("bsd,de->bse", _token_shift(x, p["mu_r"], xprev), p["w_r"])
+    k = jnp.einsum("bsd,de->bse", _token_shift(x, p["mu_k"], xprev), p["w_k"])
+    v = jnp.einsum("bsd,de->bse", _token_shift(x, p["mu_v"], xprev), p["w_v"])
+    g = jnp.einsum("bsd,de->bse", _token_shift(x, p["mu_g"], xprev), p["w_g"])
+    xw = _token_shift(x, p["mu_w"], xprev)
+    dd = jnp.einsum(
+        "bsl,ld->bsd",
+        jnp.tanh(jnp.einsum("bsd,dl->bsl", xw, p["w_decay_a"])),
+        p["w_decay_b"],
+    )
+    w = jnp.exp(-jnp.exp(p["decay_base"][None, None] + dd.astype(jnp.float32)))
+    # heads
+    rh = r.reshape(B, S, H, hd)
+    kh = k.reshape(B, S, H, hd)
+    vh = v.reshape(B, S, H, hd)
+    wh = w.reshape(B, S, H, hd)
+    u = p["bonus"]  # (H,hd)
+    if state is None:
+        o, new_wkv = kops.wkv6(rh, kh, vh, wh, u)  # (B,S,H,hd)
+        new_xprev = x[:, -1:, :]
+    else:
+        wkv = state[1]  # (B,H,hd,hd) : S_{t-1}
+        kt = kh[:, 0]  # (B,H,hd)
+        vt = vh[:, 0]
+        rt = rh[:, 0]
+        at = jnp.einsum("bhk,bhv->bhkv", kt.astype(jnp.float32),
+                        vt.astype(jnp.float32))
+        out = jnp.einsum(
+            "bhk,bhkv->bhv", rt.astype(jnp.float32), wkv + u[None, :, :, None] * at
+        )
+        new_wkv = wh[:, 0].astype(jnp.float32)[..., None] * wkv + at
+        o = out.reshape(B, 1, H, hd).astype(x.dtype)
+        new_xprev = x[:, -1:, :]
+    o = o.reshape(B, S, D)
+    # group-norm per head (ln_x), then gate
+    of = o.astype(jnp.float32).reshape(B, S, H, hd)
+    ms = (of * of).mean(-1, keepdims=True)
+    of = (of * jax.lax.rsqrt(ms + 1e-6)).reshape(B, S, D) * p["ln_x"].astype(
+        jnp.float32
+    )
+    o = (of * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", o, p["w_o"])
+    new_state = None if state is None else (new_xprev, new_wkv)
+    if state is None:
+        new_state = (new_xprev, new_wkv)
+    return out, new_state
+
+
+def rwkv_channel_mix(p, x, cfg: ModelConfig, prev=None):
+    xs = _token_shift(x, p["cm_mu"], prev)
+    k = jnp.einsum("bsd,df->bsf", xs, p["cm_k"])
+    k = jnp.square(jax.nn.relu(k))
+    v = jnp.einsum("bsf,fd->bsd", k, p["cm_v"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xs, p["cm_r"]))
+    return r * v, x[:, -1:, :]

@@ -1,0 +1,467 @@
+"""Model assembly: embedding → scanned block groups → head.
+
+The repeated unit is the *block group* (``cfg.block_pattern``): dense
+transformers have a one-block group, Jamba has an 8-block group
+(1 attention + 7 Mamba), RWKV a one-rwkv-block group. Group parameters are
+stacked along a leading ``G`` axis and iterated with ``jax.lax.scan`` so
+compile time is O(group), not O(layers).
+
+Forward modes:
+* :func:`forward` — full-sequence (training / prefill). Returns logits and
+  the auxiliary MoE loss.
+* :func:`decode_step` — one token against explicit per-layer state
+  (KV caches / SSM states / RWKV states), created by
+  :func:`init_decode_state`.
+* Encoder-decoder (whisper): :func:`encode` runs the encoder; its output
+  feeds cross-attention in both modes.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+# ------------------------------------------------------------------ helpers
+def _is_moe_layer(cfg: ModelConfig, pos_in_group: int) -> bool:
+    if cfg.n_experts <= 0:
+        return False
+    if cfg.group_size % cfg.moe_every:
+        raise ValueError("moe_every must divide the block-pattern length")
+    return pos_in_group % cfg.moe_every == cfg.moe_offset
+
+
+def _ffn_init(key, cfg: ModelConfig, G: int, pos: int):
+    if _is_moe_layer(cfg, pos):
+        return L.g_moe_init(key, cfg, G)
+    return L.g_mlp_init(key, cfg, G)
+
+
+def _mixer_init(key, cfg: ModelConfig, G: int, kind: str):
+    if kind == "attn":
+        if cfg.attn_type == "mla":
+            return L.g_mla_init(key, cfg, G)
+        return L.g_attn_init(key, cfg, G)
+    if kind == "mamba":
+        return L.g_mamba_init(key, cfg, G)
+    if kind == "rwkv":
+        return L.g_rwkv_init(key, cfg, G)
+    raise ValueError(kind)
+
+
+def _group_init(key, cfg: ModelConfig, G: int, cross: bool):
+    p = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        k1, k2, k3, k4, key = jax.random.split(key, 5)
+        p[f"b{i}_ln1"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (G,) + a.shape),
+            L.norm_init(cfg, cfg.d_model),
+        )
+        p[f"b{i}_mix"] = _mixer_init(k1, cfg, G, kind)
+        if kind != "rwkv":
+            p[f"b{i}_ln2"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (G,) + a.shape),
+                L.norm_init(cfg, cfg.d_model),
+            )
+            p[f"b{i}_ffn"] = _ffn_init(k2, cfg, G, i)
+        else:
+            p[f"b{i}_ln2"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (G,) + a.shape),
+                L.norm_init(cfg, cfg.d_model),
+            )
+        if cross and kind == "attn":
+            p[f"b{i}_lnx"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (G,) + a.shape),
+                L.norm_init(cfg, cfg.d_model),
+            )
+            p[f"b{i}_xattn"] = L.g_attn_init(k3, cfg, G)
+    return p
+
+
+def init_model(key, cfg: ModelConfig):
+    keys = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    params = {
+        "embed": L.dense_init(keys[0], (cfg.vocab_size, cfg.d_model), dt, 1),
+        "final_norm": L.norm_init(cfg, cfg.d_model),
+        "groups": _group_init(keys[1], cfg, cfg.num_groups, cross=cfg.has_encoder),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(
+            keys[2], (cfg.d_model, cfg.vocab_size), dt, 0
+        )
+    if cfg.has_encoder:
+        enc_cfg = cfg
+        params["encoder"] = {
+            "groups": _group_init(keys[3], enc_cfg, cfg.encoder_layers, cross=False),
+            "final_norm": L.norm_init(cfg, cfg.d_model),
+            "pos_embed": L.dense_init(
+                keys[4], (max(cfg.frontend_len, 8), cfg.d_model), dt, 1
+            ),
+        }
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def active_param_count(params, cfg: ModelConfig) -> int:
+    """Parameters touched per token (routed experts counted top_k/E)."""
+    total = 0
+    for path, x in jax.tree_util.tree_leaves_with_path(params):
+        keys = "/".join(str(getattr(k, "key", k)) for k in path)
+        if any(s in keys for s in ("we1", "we2", "we3")) and cfg.n_experts:
+            total += int(x.size * cfg.top_k / cfg.n_experts)
+        else:
+            total += x.size
+    return total
+
+
+def model_flops(params, cfg: ModelConfig, n_tokens: int) -> float:
+    """MODEL_FLOPS = 6 · N_active · D (the roofline's 'useful' flops)."""
+    return 6.0 * active_param_count(params, cfg) * n_tokens
+
+
+def active_param_count_shapes(cfg: ModelConfig) -> int:
+    """Active params from shapes only (no allocation — dry-run safe)."""
+    shapes = jax.eval_shape(lambda k: init_model(k, cfg), jax.random.key(0))
+    return active_param_count(shapes, cfg)
+
+
+# ------------------------------------------------------------------ blocks
+def _block_train(i, kind, gp, x, cfg, positions, cross_kv=None):
+    aux = jnp.zeros((), jnp.float32)
+    h = L.norm_apply(gp[f"b{i}_ln1"], x, cfg)
+    if kind == "attn":
+        if cfg.attn_type == "mla":
+            a, _ = L.mla_apply(gp[f"b{i}_mix"], h, cfg, positions)
+        else:
+            a, _ = L.attn_apply(gp[f"b{i}_mix"], h, cfg, positions)
+        x = x + a
+        if cross_kv is not None:
+            hx = L.norm_apply(gp[f"b{i}_lnx"], x, cfg)
+            from repro.kernels import ops as kops
+
+            xp = gp[f"b{i}_xattn"]
+            B, S, D = hx.shape
+            q = jnp.einsum("bsd,dq->bsq", hx, xp["w_q"]).reshape(
+                B, S, cfg.num_heads, cfg.head_dim
+            )
+            ek, ev = cross_kv
+            a = kops.attention(q, ek, ev, causal=False)
+            x = x + jnp.einsum("bsq,qd->bsd", a.reshape(B, S, -1), xp["w_o"])
+        h2 = L.norm_apply(gp[f"b{i}_ln2"], x, cfg)
+        if _is_moe_layer(cfg, i):
+            f, aux = L.moe_apply(gp[f"b{i}_ffn"], h2, cfg)
+        else:
+            f = L.mlp_apply(gp[f"b{i}_ffn"], h2, cfg)
+        x = x + f
+    elif kind == "mamba":
+        m, _ = L.mamba_apply(gp[f"b{i}_mix"], h, cfg)
+        x = x + m
+        h2 = L.norm_apply(gp[f"b{i}_ln2"], x, cfg)
+        if _is_moe_layer(cfg, i):
+            f, aux = L.moe_apply(gp[f"b{i}_ffn"], h2, cfg)
+        else:
+            f = L.mlp_apply(gp[f"b{i}_ffn"], h2, cfg)
+        x = x + f
+    elif kind == "rwkv":
+        t, _ = L.rwkv_time_mix(gp[f"b{i}_mix"], h, cfg)
+        x = x + t
+        h2 = L.norm_apply(gp[f"b{i}_ln2"], x, cfg)
+        c, _ = L.rwkv_channel_mix(gp[f"b{i}_mix"], h2, cfg)
+        x = x + c
+    return x, aux
+
+
+def _embed(params, cfg, tokens, extra_embeds=None):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    x = x * math.sqrt(cfg.d_model)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _head(params, cfg, x):
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+
+# ----------------------------------------------------------------- encoder
+def encode(params, cfg: ModelConfig, frames):
+    """Whisper-style encoder over precomputed frame embeddings (the conv
+    frontend is a stub per the assignment). frames (B, T, D)."""
+    enc = params["encoder"]
+    T = frames.shape[1]
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + enc["pos_embed"][None, :T].astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (x.shape[0], T))
+
+    def group_fn(carry, gp):
+        y = carry
+        h = L.norm_apply(gp["b0_ln1"], y, cfg)
+        a, _ = L.attn_apply(gp["b0_mix"], h, cfg, positions, causal=False)
+        y = y + a
+        h2 = L.norm_apply(gp["b0_ln2"], y, cfg)
+        y = y + L.mlp_apply(gp["b0_ffn"], h2, cfg)
+        return y, ()
+
+    x, _ = jax.lax.scan(group_fn, x, enc["groups"])
+    return L.norm_apply(enc["final_norm"], x, cfg)
+
+
+def _cross_kv(params, cfg, enc_out):
+    """Precompute cross-attention K/V per decoder group (stacked over G)."""
+    gps = params["groups"]
+    B, T, D = enc_out.shape
+
+    def per_group(xp):
+        k = jnp.einsum("btd,dk->btk", enc_out, xp["w_k"]).reshape(
+            B, T, cfg.num_kv_heads, cfg.head_dim
+        )
+        v = jnp.einsum("btd,dk->btk", enc_out, xp["w_v"]).reshape(
+            B, T, cfg.num_kv_heads, cfg.head_dim
+        )
+        return k, v
+
+    return jax.vmap(per_group)(
+        {k: gps["b0_xattn"][k] for k in ("w_k", "w_v")}
+    )
+
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": "full",  # nothing saveable: recompute the whole block
+    "dots": "dots",  # save matmul outputs with no batch dims
+}
+
+
+# ----------------------------------------------------------------- forward
+def forward(params, cfg: ModelConfig, tokens, extra_embeds=None, frames=None,
+            remat: str = "none"):
+    """Full-sequence forward. Returns (logits, aux_loss).
+
+    ``extra_embeds`` — VLM patch embeddings prepended to the sequence.
+    ``frames`` — audio frames for the encoder (enc-dec archs).
+    ``remat`` — activation checkpointing of the scanned block group:
+    'none' | 'full' (nothing saveable) | 'dots' (matmul outputs saved) —
+    a §Perf knob trading recompute FLOPs for activation memory.
+    """
+    x = _embed(params, cfg, tokens, extra_embeds)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cross = None
+    if cfg.has_encoder:
+        if frames is None:
+            raise ValueError("enc-dec model requires frames")
+        enc_out = encode(params, cfg, frames)
+        ck, cv = _cross_kv(params, cfg, enc_out)  # (G,B,T,KV,hd)
+    else:
+        ck = cv = None
+
+    def group_fn(carry, gp):
+        y, aux = carry
+        for i, kind in enumerate(cfg.block_pattern):
+            cross_kv = None
+            if ck is not None and kind == "attn":
+                # scan slices the leading G axis off ck/cv automatically
+                cross_kv = (gp["__ck"], gp["__cv"])
+            y, a = _block_train(i, kind, gp, y, cfg, positions, cross_kv)
+            aux = aux + a
+        return (y, aux), ()
+
+    gps = dict(params["groups"])
+    if ck is not None:
+        gps["__ck"], gps["__cv"] = ck, cv
+    if remat == "full":
+        group_fn = jax.checkpoint(group_fn)
+    elif remat == "dots":
+        group_fn = jax.checkpoint(
+            group_fn,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+    (x, aux), _ = jax.lax.scan(group_fn, (x, jnp.zeros((), jnp.float32)), gps)
+    logits = _head(params, cfg, x)
+    if extra_embeds is not None:
+        logits = logits[:, extra_embeds.shape[1] :]
+    return logits, aux
+
+
+# ------------------------------------------------------------------ decode
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0):
+    """Zeroed per-group decode state (stacked over G on axis 0)."""
+    G = cfg.num_groups
+    dt = jnp.dtype(cfg.compute_dtype)
+    state = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        if kind == "attn":
+            if cfg.attn_type == "mla":
+                state[f"b{i}_ckv"] = jnp.zeros(
+                    (G, batch, max_len, cfg.kv_lora_rank), dt
+                )
+                state[f"b{i}_krope"] = jnp.zeros(
+                    (G, batch, max_len, cfg.qk_rope_dim), dt
+                )
+            else:
+                kv_dt = (
+                    jnp.int8 if cfg.kv_cache_dtype == "int8" else dt
+                )
+                state[f"b{i}_k"] = jnp.zeros(
+                    (G, batch, max_len, cfg.num_kv_heads, cfg.head_dim), kv_dt
+                )
+                state[f"b{i}_v"] = jnp.zeros(
+                    (G, batch, max_len, cfg.num_kv_heads, cfg.head_dim), kv_dt
+                )
+                if cfg.kv_cache_dtype == "int8":
+                    state[f"b{i}_ks"] = jnp.zeros(
+                        (G, batch, max_len, cfg.num_kv_heads, 1), jnp.bfloat16
+                    )
+                    state[f"b{i}_vs"] = jnp.zeros(
+                        (G, batch, max_len, cfg.num_kv_heads, 1), jnp.bfloat16
+                    )
+            if cfg.has_encoder:
+                state[f"b{i}_xk"] = jnp.zeros(
+                    (G, batch, enc_len, cfg.num_kv_heads, cfg.head_dim), dt
+                )
+                state[f"b{i}_xv"] = jnp.zeros(
+                    (G, batch, enc_len, cfg.num_kv_heads, cfg.head_dim), dt
+                )
+        elif kind == "mamba":
+            state[f"b{i}_conv"] = jnp.zeros(
+                (G, batch, cfg.mamba_d_conv - 1, cfg.d_inner), dt
+            )
+            state[f"b{i}_ssm"] = jnp.zeros(
+                (G, batch, cfg.d_inner, cfg.mamba_d_state), jnp.float32
+            )
+        elif kind == "rwkv":
+            H = cfg.d_model // cfg.rwkv_head_dim
+            state[f"b{i}_tm_x"] = jnp.zeros((G, batch, 1, cfg.d_model), dt)
+            state[f"b{i}_wkv"] = jnp.zeros(
+                (G, batch, H, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32
+            )
+            state[f"b{i}_cm_x"] = jnp.zeros((G, batch, 1, cfg.d_model), dt)
+    return state
+
+
+def decode_step(params, cfg: ModelConfig, state, token, cur_len):
+    """One decode step. token (B,1) int32; cur_len () int32 — number of
+    tokens already in the caches. Returns (logits (B,1,V), new_state)."""
+    x = _embed(params, cfg, token)
+    B = x.shape[0]
+
+    def group_fn(carry, scan_in):
+        y = carry
+        gp, gs = scan_in
+        new_gs = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            h = L.norm_apply(gp[f"b{i}_ln1"], y, cfg)
+            if kind == "attn":
+                if cfg.attn_type == "mla":
+                    a, ckv, krope = L.mla_decode(
+                        gp[f"b{i}_mix"], h, cfg, gs[f"b{i}_ckv"],
+                        gs[f"b{i}_krope"], cur_len,
+                    )
+                    new_gs[f"b{i}_ckv"] = ckv
+                    new_gs[f"b{i}_krope"] = krope
+                elif cfg.kv_cache_dtype == "int8":
+                    a, ck_, cv_, ks_, vs_ = L.attn_decode(
+                        gp[f"b{i}_mix"], h, cfg, gs[f"b{i}_k"], gs[f"b{i}_v"],
+                        cur_len, gs[f"b{i}_ks"], gs[f"b{i}_vs"],
+                    )
+                    new_gs[f"b{i}_k"] = ck_
+                    new_gs[f"b{i}_v"] = cv_
+                    new_gs[f"b{i}_ks"] = ks_
+                    new_gs[f"b{i}_vs"] = vs_
+                else:
+                    a, ck_, cv_ = L.attn_decode(
+                        gp[f"b{i}_mix"], h, cfg, gs[f"b{i}_k"], gs[f"b{i}_v"],
+                        cur_len,
+                    )
+                    new_gs[f"b{i}_k"] = ck_
+                    new_gs[f"b{i}_v"] = cv_
+                y = y + a
+                if cfg.has_encoder:
+                    from repro.kernels import ops as kops
+
+                    hx = L.norm_apply(gp[f"b{i}_lnx"], y, cfg)
+                    xp = gp[f"b{i}_xattn"]
+                    q = jnp.einsum("bsd,dq->bsq", hx, xp["w_q"]).reshape(
+                        B, 1, cfg.num_heads, cfg.head_dim
+                    )
+                    a = kops.attention(
+                        q, gs[f"b{i}_xk"], gs[f"b{i}_xv"], causal=False
+                    )
+                    y = y + jnp.einsum(
+                        "bsq,qd->bsd", a.reshape(B, 1, -1), xp["w_o"]
+                    )
+                    new_gs[f"b{i}_xk"] = gs[f"b{i}_xk"]
+                    new_gs[f"b{i}_xv"] = gs[f"b{i}_xv"]
+                h2 = L.norm_apply(gp[f"b{i}_ln2"], y, cfg)
+                if _is_moe_layer(cfg, i):
+                    f, _ = L.moe_apply(gp[f"b{i}_ffn"], h2, cfg)
+                else:
+                    f = L.mlp_apply(gp[f"b{i}_ffn"], h2, cfg)
+                y = y + f
+            elif kind == "mamba":
+                m, (conv_s, ssm_s) = L.mamba_apply(
+                    gp[f"b{i}_mix"], h, cfg,
+                    state=(gs[f"b{i}_conv"], gs[f"b{i}_ssm"]),
+                )
+                new_gs[f"b{i}_conv"] = conv_s
+                new_gs[f"b{i}_ssm"] = ssm_s
+                y = y + m
+                h2 = L.norm_apply(gp[f"b{i}_ln2"], y, cfg)
+                if _is_moe_layer(cfg, i):
+                    f, _ = L.moe_apply(gp[f"b{i}_ffn"], h2, cfg)
+                else:
+                    f = L.mlp_apply(gp[f"b{i}_ffn"], h2, cfg)
+                y = y + f
+            elif kind == "rwkv":
+                t, (tm_x, wkv) = L.rwkv_time_mix(
+                    gp[f"b{i}_mix"], h, cfg,
+                    state=(gs[f"b{i}_tm_x"], gs[f"b{i}_wkv"]),
+                )
+                new_gs[f"b{i}_tm_x"] = tm_x
+                new_gs[f"b{i}_wkv"] = wkv
+                y = y + t
+                h2 = L.norm_apply(gp[f"b{i}_ln2"], y, cfg)
+                c, cm_x = L.rwkv_channel_mix(
+                    gp[f"b{i}_mix"], h2, cfg, prev=gs[f"b{i}_cm_x"]
+                )
+                new_gs[f"b{i}_cm_x"] = cm_x
+                y = y + c
+        return y, new_gs
+
+    x, new_state = jax.lax.scan(group_fn, x, (params["groups"], state))
+    logits = _head(params, cfg, x)
+    return logits, new_state
+
+
+def prefill(params, cfg: ModelConfig, tokens, state, extra_embeds=None,
+            frames=None):
+    """Fill the decode caches from a full prompt: runs the training-mode
+    forward to produce logits, then writes K/V (or SSM/RWKV states) via a
+    scan of single steps for the reference path. For large-scale serving
+    the compiled prefill writes caches directly inside attention; here we
+    keep the reference simple and exact."""
+    logits, _ = forward(params, cfg, tokens, extra_embeds, frames)
+    S = tokens.shape[1]
+
+    def body(carry, t):
+        st, _ = carry
+        lg, st = decode_step(params, cfg, st, tokens[:, t][:, None], t)
+        return (st, lg), ()
+
+    (state, last_logits), _ = jax.lax.scan(
+        body, (state, jnp.zeros_like(logits[:, :1])), jnp.arange(S)
+    )
+    return last_logits, state

@@ -1,0 +1,3 @@
+from repro.optim.adamw import adamw, cosine_schedule, global_norm
+
+__all__ = ["adamw", "cosine_schedule", "global_norm"]

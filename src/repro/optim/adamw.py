@@ -1,0 +1,95 @@
+"""AdamW with global-norm clipping and cosine schedule (pure JAX).
+
+Optimizer state mirrors the parameter pytree, so the same PartitionSpecs
+shard it (ZeRO-style when params are FSDP-sharded). State dtype is
+configurable: f32 for fidelity, bf16 to halve optimizer memory on the
+very large architectures (a DESIGN.md §Perf knob).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def adamw(
+    lr: float | Callable = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float | None = 1.0,
+    state_dtype=jnp.float32,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if clip_norm is not None:
+            gn = global_norm(gf)
+            scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gn, 1e-9))
+            gf = jax.tree.map(lambda g: g * scale, gf)
+        m = jax.tree.map(
+            lambda mo, g: (b1 * mo.astype(jnp.float32) + (1 - b1) * g).astype(
+                state_dtype
+            ),
+            state["m"],
+            gf,
+        )
+        v = jax.tree.map(
+            lambda vo, g: (b2 * vo.astype(jnp.float32) + (1 - b2) * g * g).astype(
+                state_dtype
+            ),
+            state["v"],
+            gf,
+        )
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+
+        def upd(p, mo, vo):
+            mh = mo.astype(jnp.float32) / bc1
+            vh = vo.astype(jnp.float32) / bc2
+            u = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init=init, update=update)

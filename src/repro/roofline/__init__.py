@@ -1,0 +1,4 @@
+from repro.roofline.hlo_stats import collective_bytes, parse_hlo_collectives
+from repro.roofline.report import roofline_terms, HW
+
+__all__ = ["collective_bytes", "parse_hlo_collectives", "roofline_terms", "HW"]

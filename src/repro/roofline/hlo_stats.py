@@ -1,0 +1,170 @@
+"""Collective-traffic extraction from optimized (post-SPMD) HLO text.
+
+``cost_analysis()`` has no collective term, so we parse the compiled
+module: every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute instruction contributes its result-shape bytes, scaled
+by the standard ring factors. Instructions inside ``while`` bodies are
+multiplied by the loop trip count — taken from the instruction's
+``known_trip_count`` backend config when present, else from the caller-
+supplied default (the scan-over-layers group count), which is what makes
+scanned-layer collectives count L times rather than once.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?\).*?body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(
+    r"(?:fusion|call|conditional)\(.*?(?:calls|to_apply)=%?([\w\.\-]+)"
+)
+_TRIP_RE = re.compile(r'known_trip_count.*?["\']?n["\']?\s*[:=]\s*["\']?(\d+)')
+
+
+def shape_bytes(text: str) -> int:
+    """Total bytes of the first shape (or tuple of shapes) in ``text``."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class _Comp:
+    name: str
+    collectives: dict = field(default_factory=dict)  # kind -> bytes
+    whiles: list = field(default_factory=list)  # (body_name, trip)
+    calls: list = field(default_factory=list)  # called comp names
+
+
+def _split_computations(hlo: str) -> dict:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        # computation headers start at column 0 ("%name (params..." or
+        # "ENTRY %name ("); long signatures wrap lines, so do NOT require
+        # the "-> ... {" on the same line. Body instructions are indented.
+        if line.startswith(("%", "ENTRY")):
+            name = line.split()[0].lstrip("%")
+            if line.startswith("ENTRY") and len(line.split()) > 1:
+                name = line.split()[1].lstrip("%").split("(")[0]
+            name = name.split("(")[0].rstrip(".")
+            cur = _Comp(name=name)
+            comps[name] = cur
+            if line.startswith("ENTRY"):
+                comps["__entry__"] = cur
+            continue
+        if cur is None or not stripped:
+            continue
+        # collectives (count -start, skip -done duplicates)
+        for kind in _COLLECTIVES:
+            if re.search(rf"\b{kind}(-start)?\(", stripped) and (
+                f"{kind}-done" not in stripped
+            ):
+                lhs = stripped.split("=")[0]
+                b = shape_bytes(stripped.split("=", 1)[1] if "=" in stripped else stripped)
+                # the result shape appears right after '='; take that only
+                rhs = stripped.split("=", 1)[1] if "=" in stripped else stripped
+                m = _SHAPE_RE.search(rhs)
+                b = 0
+                if m:
+                    # tuple results: sum shapes before the op name
+                    op_pos = rhs.find(kind)
+                    b = shape_bytes(rhs[:op_pos])
+                cur.collectives[kind] = cur.collectives.get(kind, 0) + b
+                break
+        m = _WHILE_RE.search(stripped)
+        if m:
+            trip = None
+            t = _TRIP_RE.search(stripped)
+            if t:
+                trip = int(t.group(1))
+            cur.whiles.append((m.group(1), trip))
+        for m in _CALL_RE.finditer(stripped):
+            cur.calls.append(m.group(1))
+    return comps
+
+
+def parse_hlo_collectives(hlo: str, default_trip: int = 1) -> dict:
+    """Total collective bytes by kind, trip-count aware."""
+    comps = _split_computations(hlo)
+    entry = comps.get("__entry__")
+    if entry is None:
+        # fall back: flat sum
+        totals: dict[str, float] = {}
+        for c in comps.values():
+            for k, v in c.collectives.items():
+                totals[k] = totals.get(k, 0) + v
+        return totals
+
+    memo: dict[str, dict] = {}
+
+    def visit(name: str, depth=0) -> dict:
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None or depth > 50:
+            return {}
+        tot = dict(c.collectives)
+        for body, trip in c.whiles:
+            t = trip if trip is not None else default_trip
+            sub = visit(body, depth + 1)
+            for k, v in sub.items():
+                tot[k] = tot.get(k, 0) + t * v
+        for callee in c.calls:
+            sub = visit(callee, depth + 1)
+            for k, v in sub.items():
+                tot[k] = tot.get(k, 0) + v
+        memo[name] = tot
+        return tot
+
+    return visit(entry.name)
+
+
+# Ring-algorithm wire factors per collective kind, as a function of the
+# participating group size n: bytes actually crossing links per device.
+def wire_factor(kind: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if kind in ("all-gather", "reduce-scatter"):
+        return (n - 1) / n
+    if kind == "all-to-all":
+        return (n - 1) / n
+    if kind == "collective-permute":
+        return 1.0
+    return 1.0
+
+
+def collective_bytes(hlo: str, default_trip: int = 1, group_size: int = 16) -> dict:
+    """Per-kind raw bytes and wire-factored total."""
+    by_kind = parse_hlo_collectives(hlo, default_trip)
+    wire = sum(v * wire_factor(k, group_size) for k, v in by_kind.items())
+    return {"by_kind": by_kind, "wire_bytes": wire}

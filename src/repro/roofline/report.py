@@ -1,0 +1,69 @@
+"""Roofline terms from a compiled dry-run artifact (DESIGN.md §7).
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = wire_bytes_per_device / link_bw
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s
+per ICI link.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HWConsts:
+    peak_flops: float = 197e12  # bf16 per chip
+    hbm_bw: float = 819e9  # B/s per chip
+    ici_bw: float = 50e9  # B/s per link
+
+
+HW = HWConsts()
+
+
+def roofline_terms(
+    hlo_flops: float,
+    hlo_bytes: float,
+    wire_bytes: float,
+    chips: int,
+    model_flops: float | None = None,
+    hw: HWConsts = HW,
+) -> dict:
+    """All quantities are *global* (whole-step, all devices) except
+    wire_bytes, which is already per-device link traffic."""
+    t_compute = hlo_flops / (chips * hw.peak_flops)
+    t_memory = hlo_bytes / (chips * hw.hbm_bw)
+    t_coll = wire_bytes / hw.ici_bw
+    terms = {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+    }
+    dom = max(terms, key=terms.get)
+    out = dict(terms)
+    out["bottleneck"] = dom.replace("t_", "").replace("_s", "")
+    out["step_time_s"] = max(terms.values())
+    # how close the step is to its *intrinsic* (compute/memory) roofline —
+    # 1.0 unless collectives dominate
+    intrinsic = max(t_compute, t_memory)
+    out["intrinsic_fraction"] = (
+        intrinsic / out["step_time_s"] if out["step_time_s"] > 0 else 0.0
+    )
+    if model_flops:
+        out["model_flops"] = model_flops
+        out["useful_flops_ratio"] = model_flops / hlo_flops if hlo_flops else 0.0
+        # fraction of the compute roofline actually achieved at the modeled
+        # step time (MFU — the score axis for compute-bound cells)
+        out["roofline_fraction"] = (
+            model_flops / (chips * hw.peak_flops) / out["step_time_s"]
+            if out["step_time_s"] > 0
+            else 0.0
+        )
+    # memory-roofline fraction (the score axis for bandwidth-bound cells,
+    # i.e. decode): useful HBM traffic over achievable at the step time
+    out["memory_roofline_fraction"] = (
+        t_memory / out["step_time_s"] if out["step_time_s"] > 0 else 0.0
+    )
+    return out

@@ -1,0 +1,9 @@
+from repro.runtime.fault_tolerance import StepWatchdog, retry_step, StragglerMonitor
+from repro.runtime.elastic import ElasticMeshManager
+
+__all__ = [
+    "StepWatchdog",
+    "retry_step",
+    "StragglerMonitor",
+    "ElasticMeshManager",
+]

@@ -1,0 +1,75 @@
+"""Elastic scaling: rebuild the mesh when the device pool changes.
+
+When a host is drained (straggler, failure) or capacity is added, the job
+re-forms: pick the largest (data × model) grid that fits the surviving
+devices while keeping the model axis intact (TP degree is fixed by the
+sharding strategy; DP shrinks/grows), re-derive shardings, and
+``device_put`` the checkpointed state onto the new mesh. Global batch is
+kept constant by rescaling per-replica batch (counter-based data makes
+this exact).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+
+@dataclass
+class ElasticPlan:
+    data: int
+    model: int
+    dropped_devices: int
+    per_replica_batch: int
+
+
+def plan_mesh(
+    n_devices: int,
+    model_parallel: int,
+    global_batch: int,
+    max_data: int | None = None,
+) -> ElasticPlan:
+    """Largest data axis that (a) fits the devices at fixed TP degree and
+    (b) divides the global batch."""
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"need at least {model_parallel} devices for the model axis, "
+            f"have {n_devices}"
+        )
+    data = n_devices // model_parallel
+    while data > 1 and (global_batch % data != 0):
+        data -= 1
+    if max_data:
+        data = min(data, max_data)
+    used = data * model_parallel
+    return ElasticPlan(
+        data=data,
+        model=model_parallel,
+        dropped_devices=n_devices - used,
+        per_replica_batch=global_batch // data,
+    )
+
+
+class ElasticMeshManager:
+    """Holds the current mesh; re-meshes on membership change."""
+
+    def __init__(self, model_parallel: int, global_batch: int):
+        self.model_parallel = model_parallel
+        self.global_batch = global_batch
+        self.mesh = None
+        self.plan = None
+
+    def build(self, devices=None):
+        devices = list(devices if devices is not None else jax.devices())
+        self.plan = plan_mesh(len(devices), self.model_parallel, self.global_batch)
+        used = self.plan.data * self.plan.model
+        grid = np.array(devices[:used]).reshape(self.plan.data, self.plan.model)
+        self.mesh = jax.sharding.Mesh(grid, ("data", "model"))
+        return self.mesh
+
+    def on_membership_change(self, surviving_devices) -> "jax.sharding.Mesh":
+        """Re-mesh after losing/gaining devices; caller re-places state via
+        checkpoint restore or device_put with the new shardings."""
+        return self.build(surviving_devices)

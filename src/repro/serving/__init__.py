@@ -1,0 +1,5 @@
+from repro.serving.kv_cache import TieredPagedKV
+from repro.serving.scheduler import Session, ContinuousBatcher
+from repro.serving.server import TieredServer
+
+__all__ = ["TieredPagedKV", "Session", "ContinuousBatcher", "TieredServer"]

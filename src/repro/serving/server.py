@@ -1,0 +1,143 @@
+"""TieredServer: decode service with the Tuna loop closed.
+
+Each round: schedule active sessions (continuous batching), ensure their
+KV pages are HBM-resident (promotions = the pm_pr stream), decode a token
+per scheduled session through the real model (paged attention over the
+HBM pool), append KV, let idle pages cool; every tuning interval, build
+the configuration vector from the cache telemetry, query the performance
+database, and retune the HBM page budget through the watermarks.
+
+Round time combines measured model compute with the TPU tier cost model
+(:data:`repro.sim.costmodel.TPU_V5E_TIER`) for page traffic — this
+container has no real HBM/host split, so migration/stall time is charged
+by the same calibrated model the simulator validates.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.telemetry import ConfigVector, IntervalProfiler
+from repro.core.tuner import TunaTuner
+from repro.core.watermark import WatermarkController
+from repro.serving.kv_cache import KVPageConfig, TieredPagedKV
+from repro.serving.scheduler import ContinuousBatcher
+from repro.sim.costmodel import TPU_V5E_TIER, interval_time
+from repro.tiering.page_pool import Tier
+
+
+@dataclass
+class RoundStats:
+    t: float
+    batch: int
+    promoted: int
+    failed: int
+    fm_pages: int
+    round_time_s: float
+
+
+class TieredServer:
+    def __init__(
+        self,
+        kv: TieredPagedKV,
+        batcher: ContinuousBatcher,
+        tuner: TunaTuner | None = None,
+        tune_every: int = 8,
+        model_flops_per_token: float = 2e9,
+        hw=TPU_V5E_TIER,
+    ):
+        self.kv = kv
+        self.batcher = batcher
+        self.tuner = tuner
+        self.tune_every = tune_every
+        self.hw = hw
+        self.model_flops_per_token = model_flops_per_token
+        self.profiler = IntervalProfiler(hot_thr=kv.policy.hot_thr)
+        self.history: list[RoundStats] = []
+        self._t = 0.0
+
+    def run_round(self, round_idx: int) -> RoundStats:
+        kv, hw = self.kv, self.hw
+        resumed = self.batcher.start_turns()
+        batch = self.batcher.round_batch()
+        promoted = failed = 0
+        touched: list[int] = []
+        for s in batch:
+            if s.pages:
+                p, f = kv.ensure_resident(np.asarray(s.pages))
+                promoted += p
+                failed += f
+            # decode one token; a new page may be allocated
+            new_pages = self.batcher.commit_tokens(s, 1)
+            for np_ in new_pages:
+                got, f2 = kv.ensure_resident(np.asarray([np_]))
+                failed += f2
+            touched.extend(s.pages)
+        if touched:
+            tp = np.asarray(touched, np.int64)
+            kv.touch(tp)
+        demoted = kv.reclaim_to_watermark()
+        # ---- charge the round
+        pacc_f = sum(len(s.pages) for s in batch)
+        cost = interval_time(
+            hw,
+            pacc_f=pacc_f,
+            pacc_s=0,
+            ops=self.model_flops_per_token * len(batch),
+            pm_pr=promoted,
+            pm_de=demoted,
+            pm_fail=failed,
+            direct_reclaimed=0,
+            mlp_eff=hw.mlp,
+            rand_frac=0.0,
+        )
+        self.profiler.record_accesses(pacc_f, promoted, cost.t_compute * 1e9)
+        from repro.tiering.policy import PolicyOutcome
+
+        self.profiler.record_policy(
+            PolicyOutcome(pm_pr=promoted, pm_de=demoted, pm_fail=failed)
+        )
+        kv.end_interval()
+        self._t += cost.total
+        st = RoundStats(
+            t=self._t,
+            batch=len(batch),
+            promoted=promoted,
+            failed=failed,
+            fm_pages=kv.pool.effective_fm_size,
+            round_time_s=cost.total,
+        )
+        self.history.append(st)
+        # ---- Tuna loop
+        if self.tuner is not None and (round_idx + 1) % self.tune_every == 0:
+            cv = self.profiler.finish(kv.pool)
+            decision = self.tuner.step(cv, t=self._t)
+            if decision.fm_frac is not None:
+                kv.reclaim_to_watermark()
+        return st
+
+    def run(self, rounds: int, drift_every: int = 200) -> list:
+        for i in range(rounds):
+            if i and drift_every and i % drift_every == 0:
+                self.batcher.drift()
+            self.run_round(i)
+        return self.history
+
+    # ------------------------------------------------------------- metrics
+    def summary(self) -> dict:
+        fm = np.array([h.fm_pages for h in self.history])
+        rt = np.array([h.round_time_s for h in self.history])
+        return {
+            "rounds": len(self.history),
+            "mean_fm_pages": float(fm.mean()),
+            "fm_saving_vs_cap": 1.0 - float(fm.mean()) / self.kv.pool.hw_capacity,
+            "mean_round_ms": float(rt.mean() * 1e3),
+            "p99_round_ms": float(np.quantile(rt, 0.99) * 1e3),
+            "migrated_in": self.kv.migrated_in,
+            "migrated_out": self.kv.migrated_out,
+            "promote_failures": self.kv.pool.stats.pgpromote_fail,
+        }

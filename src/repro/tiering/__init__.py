@@ -1,0 +1,25 @@
+"""Two-tier page management runtime (fast tier + slow tier).
+
+This package is the TPU-adapted analogue of the kernel-side machinery the
+paper builds on (TPP + Linux watermark reclaim): a page pool spanning a fast
+tier (HBM) and a slow tier (host memory), per-page hotness tracking, a
+promotion/demotion policy with migration-failure accounting, and a
+watermark-driven background reclaimer (the kswapd analogue).
+
+The state is held in flat integer numpy arrays so the same logic can be
+(a) stepped at high rate inside the discrete-interval simulator and
+(b) mirrored into jit-able jnp form for the serving path
+(``repro.serving.kv_cache``).
+"""
+
+from repro.tiering.page_pool import TieredPagePool, Tier, PoolStats
+from repro.tiering.policy import TPPPolicy, FirstTouchPolicy, PolicyOutcome
+
+__all__ = [
+    "TieredPagePool",
+    "Tier",
+    "PoolStats",
+    "TPPPolicy",
+    "FirstTouchPolicy",
+    "PolicyOutcome",
+]

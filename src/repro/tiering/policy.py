@@ -1,0 +1,127 @@
+"""Page management policies: a TPP-like migrating policy and a first-touch
+(no-migration) baseline.
+
+The policy is invoked once per profiling interval with the pool and the set
+of pages touched in that interval. ``TPPPolicy`` mirrors the mechanisms the
+paper relies on:
+
+* promotion of slow-tier pages whose (decayed) access count crosses
+  ``hot_thr`` — failures counted when the fast tier has no free page;
+* watermark-driven background demotion (kswapd analogue) with direct-reclaim
+  fallback, so that the *effective* fast-memory size tracks whatever the
+  Tuna watermark controller last set.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.tiering.page_pool import Tier, TieredPagePool
+
+
+@dataclass
+class PolicyOutcome:
+    """Per-interval migration telemetry (feeds the Tuna config vector)."""
+
+    pm_pr: int = 0  # successful promotions
+    pm_de: int = 0  # demotions (background + direct)
+    pm_fail: int = 0  # promotion failures
+    direct_reclaim: int = 0
+
+
+class TPPPolicy:
+    """Hot-threshold promotion + watermark demotion.
+
+    Parameters
+    ----------
+    hot_thr:
+        Number of accesses within the profiling window that makes a page
+        "hot" (promotion candidate). Invariant for TPP/AutoNUMA-style
+        systems; MEMTIS-style dynamic thresholds are supported by passing a
+        new value to :meth:`step`.
+    promote_batch:
+        Upper bound on promotions per interval (migration bandwidth limit of
+        the kernel thread); ``None`` = unbounded.
+    """
+
+    name = "tpp"
+    migrates = True
+
+    def __init__(self, hot_thr: int = 4, promote_batch: int | None = None) -> None:
+        if hot_thr < 2:
+            raise ValueError("hot_thr must be >= 2 (paper Eq. 4 divides by hot_thr-1)")
+        self.hot_thr = int(hot_thr)
+        self.promote_batch = promote_batch
+
+    def step(
+        self,
+        pool: TieredPagePool,
+        touched: np.ndarray,
+        hot_thr: int | None = None,
+    ) -> PolicyOutcome:
+        thr = self.hot_thr if hot_thr is None else int(hot_thr)
+        out = PolicyOutcome()
+        touched = np.asarray(touched, dtype=np.int64)
+        # TPP-style: promotion is decided on fault-like touch events within
+        # the profiling window (pool.interval_touch at policy time); the
+        # decayed heat only ranks demotion victims.
+        acc_now = pool.interval_touch[touched]
+        cand_mask = (pool.tier[touched] == Tier.SLOW) & (acc_now >= thr)
+        cand = touched[cand_mask]
+        if self.promote_batch is not None and cand.size > self.promote_batch:
+            order = np.argsort(-acc_now[cand_mask])
+            cand = cand[order[: self.promote_batch]]
+        # Promotion is interleaved with background reclaim (TPP decouples
+        # allocation and reclaim): promote only into the headroom above the
+        # min watermark, let kswapd restore the watermark, repeat. Direct
+        # (blocking) reclaim happens only when kswapd's rate limit cannot
+        # keep up with the promotion demand.
+        hottest_first = np.argsort(-acc_now[cand_mask], kind="stable")
+        cand = cand[hottest_first]
+        done = 0
+        while done < cand.size:
+            headroom = max(0, pool.fast_free - pool.watermarks.min_free)
+            if headroom == 0:
+                bg, direct = pool.run_reclaim(allow_direct=True)
+                out.pm_de += bg + direct
+                out.direct_reclaim += direct
+                headroom = max(0, pool.fast_free - pool.watermarks.min_free)
+                if headroom == 0:
+                    # reclaim exhausted: remaining promotions fail
+                    out.pm_fail += cand.size - done
+                    break
+            chunk = cand[done : done + headroom]
+            n_ok, n_fail = pool.promote(chunk)
+            out.pm_pr += n_ok
+            out.pm_fail += n_fail
+            done += chunk.size
+        bg, direct = pool.run_reclaim()
+        out.pm_de += bg + direct
+        out.direct_reclaim += direct
+        return out
+
+
+class FirstTouchPolicy:
+    """NUMA first-touch with no migration (the paper's Fig. 1 baseline).
+
+    Allocation behaviour is already first-touch inside the pool; this policy
+    simply never migrates. Watermark reclaim is also disabled — pages stay
+    where they landed — matching the no-page-management configuration in the
+    motivation study.
+    """
+
+    name = "first_touch"
+    migrates = False
+
+    def __init__(self, hot_thr: int = 4) -> None:
+        self.hot_thr = int(hot_thr)
+
+    def step(
+        self,
+        pool: TieredPagePool,
+        touched: np.ndarray,
+        hot_thr: int | None = None,
+    ) -> PolicyOutcome:
+        return PolicyOutcome()

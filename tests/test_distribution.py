@@ -1,0 +1,122 @@
+"""Distribution-layer tests runnable on CPU: sharding rules, the
+context-parallel decode merge, int8 KV decode correctness."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.kernels import ops as kops, ref
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import (
+    default_strategy,
+    param_spec,
+    param_specs,
+)
+from repro.models import decode_step, forward, init_decode_state, init_model
+
+
+class TestShardingRules:
+    SIZES = {"data": 16, "model": 16}
+
+    def _spec(self, name, shape, strategy="tp"):
+        cfg = get_config("qwen3-1.7b")
+        leaf = jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+        return param_spec(f"groups/{name}", leaf, cfg, self.SIZES, strategy)
+
+    def test_tp_attention_projection(self):
+        assert self._spec("w_q", (28, 2048, 2048)) == P(None, "data", "model")
+        assert self._spec("w_o", (28, 2048, 2048)) == P(None, "model", "data")
+
+    def test_non_divisible_falls_back_to_replication(self):
+        # 14-head arch: 896-dim over 16-way axes
+        sp = self._spec("w_q", (24, 900, 898))
+        assert sp == P(None, None, None)
+
+    def test_experts_ep(self):
+        assert self._spec("we1", (28, 64, 2048, 1408)) == P(
+            None, "model", "data", None
+        )
+
+    def test_zero1_prefers_output_dim(self):
+        sp = self._spec("w_q", (28, 2048, 2048), strategy="zero1")
+        assert sp == P(None, None, ("data", "model"))
+
+    def test_norms_replicated(self):
+        assert self._spec("scale", (28, 2048)) == P(None, None)
+
+    def test_default_strategy_thresholds(self):
+        cfg = get_config("qwen3-1.7b")
+        assert default_strategy(cfg, 2_000_000_000) == "zero1"
+        assert default_strategy(cfg, 70_000_000_000) == "tp"
+        moe = get_config("granite-moe-1b-a400m")
+        assert default_strategy(moe, 1_000_000_000) == "tp"
+
+    def test_all_archs_have_full_spec_trees(self):
+        mesh = make_host_mesh()
+        for arch in ("qwen3-1.7b", "jamba-1.5-large-398b", "rwkv6-3b",
+                     "whisper-small"):
+            cfg = get_config(arch).scaled()
+            shapes = jax.eval_shape(lambda k: init_model(k, cfg), jax.random.key(0))
+            specs = param_specs(shapes, cfg, mesh)
+            assert jax.tree_util.tree_structure(specs) == (
+                jax.tree_util.tree_structure(shapes)
+            )
+
+
+class TestCPDecode:
+    def test_cp_matches_ref_on_host_mesh(self):
+        mesh = make_host_mesh()
+        rng = np.random.default_rng(0)
+        B, H, KV, hd, S = 2, 4, 2, 32, 64
+        q = jnp.asarray(rng.normal(size=(B, 1, H, hd)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+        out = kops.cp_decode_attention(q, k, v, jnp.int32(37), mesh)
+        want = ref.decode_attention(q, k, v, jnp.int32(37))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_cp_int8_dequant_inside_shard(self):
+        from repro.models.layers import quantize_kv
+
+        mesh = make_host_mesh()
+        rng = np.random.default_rng(1)
+        B, H, KV, hd, S = 1, 4, 4, 16, 32
+        q = jnp.asarray(rng.normal(size=(B, 1, H, hd)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        out = kops.cp_decode_attention(q, kq, vq, jnp.int32(20), mesh,
+                                       k_scale=ks, v_scale=vs)
+        want = ref.decode_attention(q, k, v, jnp.int32(20))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=0.05, atol=0.05)
+
+
+class TestInt8KVDecode:
+    def test_decode_matches_forward_with_int8_cache(self):
+        cfg = get_config("qwen3-1.7b").scaled()
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+        params = init_model(jax.random.key(0), cfg)
+        B, S = 2, 12
+        tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+        ref_logits, _ = forward(params, cfg, tokens)
+        state = init_decode_state(cfg, B, max_len=S)
+        assert state["b0_k"].dtype == jnp.int8
+        outs = []
+        for t in range(S):
+            lg, state = decode_step(params, cfg, state,
+                                    tokens[:, t][:, None], jnp.int32(t))
+            outs.append(lg[:, 0])
+        dec = jnp.stack(outs, axis=1)
+        # int8 cache: looser tolerance, but must track the bf16 forward
+        np.testing.assert_allclose(
+            np.asarray(dec, np.float32), np.asarray(ref_logits, np.float32),
+            rtol=0.25, atol=0.35,
+        )

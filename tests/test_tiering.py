@@ -1,0 +1,126 @@
+"""Unit tests for the two-tier page pool and policies."""
+
+import numpy as np
+import pytest
+
+from repro.tiering import FirstTouchPolicy, TPPPolicy, Tier, TieredPagePool
+from repro.tiering.page_pool import Watermarks
+
+
+def make_pool(num_pages=1000, cap=1000, **kw):
+    return TieredPagePool(num_pages=num_pages, hw_capacity=cap, **kw)
+
+
+class TestWatermarks:
+    def test_for_size_coupling(self):
+        wm = Watermarks.for_size(hw_capacity=1000, new_fm=800)
+        assert wm.low_free == 200
+        assert wm.high_free == 200
+        assert wm.min_free == int(0.8 * 200)
+
+    def test_clamped(self):
+        wm = Watermarks.for_size(1000, 5000)
+        assert wm.low_free == 0
+        wm = Watermarks.for_size(1000, -5)
+        assert wm.low_free == 999
+
+
+class TestFirstTouch:
+    def test_alloc_fast_then_spill(self):
+        pool = make_pool(num_pages=100, cap=100)
+        pool.set_fm_size(60)
+        pages = np.arange(100)
+        pacc_f, pacc_s, *_ = pool.apply_accesses(pages, np.ones(100, dtype=np.int64))
+        assert pacc_f == 60
+        assert pacc_s == 40
+        assert pool.fast_used == 60
+        assert pool.stats.alloc_slow == 40
+
+    def test_no_migration_policy(self):
+        pool = make_pool(num_pages=100, cap=100)
+        pool.set_fm_size(50)
+        pages = np.arange(100)
+        pool.apply_accesses(pages, np.ones(100, dtype=np.int64))
+        policy = FirstTouchPolicy()
+        # hammer the slow pages: still no promotion
+        hot = np.arange(50, 100)
+        pool.apply_accesses(hot, np.full(50, 10, dtype=np.int64))
+        out = policy.step(pool, hot)
+        assert out.pm_pr == 0 and out.pm_de == 0
+        assert np.all(pool.tier[hot] == Tier.SLOW)
+
+
+class TestTPP:
+    def test_promotion_on_threshold(self):
+        pool = make_pool(num_pages=100, cap=100)
+        pool.set_fm_size(100)
+        pool.place(np.arange(50, 100), Tier.SLOW)
+        policy = TPPPolicy(hot_thr=4)
+        hot = np.arange(50, 60)
+        warm = np.arange(60, 70)
+        pool.apply_accesses(hot, np.full(10, 4, dtype=np.int64))
+        pool.apply_accesses(warm, np.full(10, 3, dtype=np.int64))
+        out = policy.step(pool, np.arange(50, 70))
+        assert out.pm_pr == 10  # only the >= hot_thr pages
+        assert np.all(pool.tier[hot] == Tier.FAST)
+        assert np.all(pool.tier[warm] == Tier.SLOW)
+
+    def test_promotion_failure_when_full(self):
+        pool = make_pool(num_pages=100, cap=10)
+        pool.place(np.arange(100), Tier.SLOW)
+        # fill fast completely
+        pool.tier[:10] = Tier.FAST
+        policy = TPPPolicy(hot_thr=2)
+        cand = np.arange(50, 70)
+        pool.apply_accesses(cand, np.full(20, 5, dtype=np.int64))
+        out = policy.step(pool, cand)
+        assert out.pm_pr == 0
+        assert out.pm_fail == 20
+
+    def test_watermark_reclaim_demotes_coldest(self):
+        pool = make_pool(num_pages=100, cap=100)
+        pool.set_fm_size(100)
+        pages = np.arange(100)
+        pool.apply_accesses(pages, np.ones(100, dtype=np.int64))
+        # heat up the first 80
+        pool.apply_accesses(np.arange(80), np.full(80, 9, dtype=np.int64))
+        pool.end_interval()
+        pool.set_fm_size(80)  # shrink via watermarks
+        bg, direct = pool.run_reclaim()
+        assert bg + direct == 20
+        assert np.all(pool.tier[80:] == Tier.SLOW)  # coldest demoted
+        assert np.all(pool.tier[:80] == Tier.FAST)
+
+    def test_kswapd_rate_limit(self):
+        pool = make_pool(num_pages=1000, cap=1000, kswapd_batch=50)
+        pool.set_fm_size(1000)
+        pool.apply_accesses(np.arange(1000), np.ones(1000, dtype=np.int64))
+        pool.end_interval()
+        pool.set_fm_size(500)
+        bg, direct = pool.run_reclaim()
+        assert bg == 50  # rate limited; takes multiple intervals
+
+    def test_hysteresis_decay(self):
+        pool = make_pool(hotness_halflife=1.0)
+        pool.apply_accesses(np.array([0]), np.array([8]))
+        pool.end_interval()
+        assert pool.heat[0] == pytest.approx(8.0)
+        pool.end_interval()
+        assert pool.heat[0] == pytest.approx(4.0)
+
+
+class TestStatsAccounting:
+    def test_counters_monotone(self):
+        pool = make_pool(num_pages=200, cap=100)
+        pool.set_fm_size(50)
+        policy = TPPPolicy(hot_thr=2)
+        rng = np.random.default_rng(0)
+        for _ in range(20):
+            pages = rng.choice(200, size=80, replace=False)
+            pool.apply_accesses(pages, rng.integers(1, 5, size=80))
+            policy.step(pool, pages)
+            pool.end_interval()
+        s = pool.stats
+        assert s.pgpromote_success + s.pgpromote_fail > 0
+        assert s.pgdemote_kswapd + s.pgdemote_direct >= 0
+        assert pool.fast_used <= pool.hw_capacity
