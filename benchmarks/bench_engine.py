@@ -1,0 +1,217 @@
+"""Engine performance harness: seed implementation vs incremental + sweep.
+
+Measures the ``build_bench_db`` path end to end, seed vs current engine:
+
+1. **harvest** — collecting per-interval configuration vectors from an
+   application trace at every probe fast-memory size. Seed: one
+   ``simulate()`` per size over the reference (dense-rescan) pool.
+   New: one batched sweep (``collect_configs=True``) across all sizes.
+2. **db build** — populating the performance database over the harvested
+   operating points. Seed: serial per-(config, fm_frac) reference-pool
+   loop. New: :func:`repro.core.tuner.build_database`'s batched sweep
+   engine with process fan-out.
+
+Plus single-run engine throughput (intervals/sec) on the application
+trace. Both paths are asserted to produce bit-identical configuration
+vectors and execution records before timing, so the speedup can never
+come from computing something else. Results are appended as report rows
+and persisted to ``BENCH_engine.json`` at the repo root so later PRs can
+track the trajectory.
+
+The application trace is a self-contained deterministic stand-in for the
+benchmark workloads (xsbench-scale RSS, skewed reuse, a migrating hot
+front) — no multi-second workload generation inside the harness.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import DB_FM_FRACS, _representative_from, steady_from
+from repro.core.microbench import generate_microbench
+from repro.core.trace import IntervalAccess, Trace
+from repro.core.tuner import build_database, scale_config
+from repro.sim.engine import simulate
+from repro.sim.sweep import sweep_fm_fracs
+from repro.tiering.page_pool import TieredPagePool
+from repro.tiering.reference_pool import ReferencePagePool
+
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_engine.json"
+
+# what build_bench_db harvests: representative fracs + probe fracs. The
+# seed path runs one simulate() per entry — including the 1.0/0.9
+# duplicates, exactly as representative_config + the probe loop do — while
+# the new path sweeps the deduplicated union once.
+REP_FRACS = (1.0, 0.95, 0.9, 0.8)
+PROBE_FRACS = (1.0, 0.9, 0.75, 0.6, 0.45, 0.3)
+HARVEST_FRACS = tuple(sorted(set(REP_FRACS + PROBE_FRACS), reverse=True))
+N_INTERVALS = 12
+MAX_RSS = 20_000
+
+
+def _app_trace(rss: int = 40_000, n_intervals: int = 100, seed: int = 7) -> Trace:
+    """Deterministic workload-like trace: a skewed-reuse resident set plus
+    a hot front that migrates through the RSS (what makes pages churn).
+    Sized like the xsbench benchmark workload (~26 K touched pages per
+    interval over a 40 K-page RSS, ~100 intervals)."""
+    rng = np.random.default_rng(seed)
+    tr = Trace(name="bench_app", rss_pages=rss, num_threads=4)
+    hot = rng.permutation(rss)[: (2 * rss) // 3]
+    for i in range(n_intervals):
+        front = (np.arange(4000) + i * 997) % rss
+        reuse = hot[rng.random(hot.size) < 0.85]
+        pages = np.unique(np.concatenate([front, reuse]))
+        counts = rng.integers(1, 8, size=pages.size)
+        tr.append(IntervalAccess(pages=pages, counts=counts,
+                                 ops=float(counts.sum()) * 40.0))
+    return tr
+
+
+def _seed_harvest(trace: Trace):
+    """Seed path: one reference-pool simulate() per harvested size — with
+    the representative/probe duplicates the seed build actually ran."""
+    out = {}
+    for f in REP_FRACS + PROBE_FRACS:
+        res = simulate(trace, fm_frac=f, pool_factory=ReferencePagePool)
+        out[f] = res.configs
+    return out
+
+
+def _new_harvest(trace: Trace):
+    res = sweep_fm_fracs(trace, HARVEST_FRACS, collect_configs=True)
+    return {float(f): c for f, c in zip(res.fm_fracs, res.configs)}
+
+
+def _operating_points(trace: Trace, by_frac) -> list:
+    configs = [
+        _representative_from(steady_from(by_frac[f]), trace)
+        for f in (1.0, 0.9, 0.8)
+    ]
+    for f in (0.75, 0.6, 0.45, 0.3):
+        steady = steady_from(by_frac[f])
+        configs.extend(steady[:: max(1, len(steady) // 2)][:2])
+    return configs
+
+
+def _seed_build(configs):
+    """The seed ``build_database``: one reference-pool ``simulate()`` per
+    (config, fm_frac), serial — timing baseline AND record oracle."""
+    from repro.core.perfdb import PerfDB, PerfRecord
+
+    db = PerfDB()
+    for cv in configs:
+        trace = generate_microbench(
+            scale_config(cv, MAX_RSS), n_intervals=N_INTERVALS
+        )
+        times = np.empty(DB_FM_FRACS.shape, dtype=np.float64)
+        for i, f in enumerate(DB_FM_FRACS):
+            if f >= 1.0 - 1e-9:
+                times[i] = simulate(
+                    trace.fast_only(), fm_frac=1.0,
+                    pool_factory=ReferencePagePool,
+                ).total_time
+            else:
+                times[i] = simulate(
+                    trace, fm_frac=float(f), pool_factory=ReferencePagePool
+                ).total_time
+        db.add(PerfRecord(config=cv, fm_fracs=DB_FM_FRACS, times=times))
+    db.build()
+    return db
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run(report) -> None:
+    trace = _app_trace()
+    # build_database picks serial vs process fan-out itself (None = auto);
+    # that choice is part of the path under test
+    workers = None
+
+    # --- correctness gates: identical harvest vectors, identical records
+    by_frac_seed = _seed_harvest(trace)
+    by_frac_new = _new_harvest(trace)
+    for f in HARVEST_FRACS:
+        if by_frac_seed[f] != by_frac_new[f]:
+            raise AssertionError("engine bench: harvest vectors diverge")
+    configs = _operating_points(trace, by_frac_new)
+    db_seed = _seed_build(configs)
+    db_new = build_database(
+        configs, fm_fracs=DB_FM_FRACS, n_intervals=N_INTERVALS,
+        max_rss_pages=MAX_RSS, workers=workers,
+    )
+    for r_seed, r_new in zip(db_seed.records, db_new.records):
+        if not np.array_equal(r_seed.times, r_new.times):
+            raise AssertionError("engine bench: db records diverge")
+
+    # --- single-run engine throughput on the application trace
+    ips_seed = len(trace) / min(
+        _timed(lambda: simulate(trace, fm_frac=0.6,
+                                pool_factory=ReferencePagePool))
+        for _ in range(3)
+    )
+    ips_new = len(trace) / min(
+        _timed(lambda: simulate(trace, fm_frac=0.6,
+                                pool_factory=TieredPagePool))
+        for _ in range(3)
+    )
+    report("engine/intervals_per_s_seed", 1e6 / ips_seed, f"{ips_seed:.1f}/s")
+    report("engine/intervals_per_s_new", 1e6 / ips_new, f"{ips_new:.1f}/s")
+
+    # --- the build_bench_db path: harvest + db build, best of 5,
+    #     interleaved so machine noise hits both sides alike
+    seed_ts, new_ts = [], []
+    for _ in range(5):
+        seed_ts.append(
+            _timed(lambda: (_seed_harvest(trace), _seed_build(configs)))
+        )
+        new_ts.append(
+            _timed(
+                lambda: (
+                    _new_harvest(trace),
+                    build_database(
+                        configs, fm_fracs=DB_FM_FRACS,
+                        n_intervals=N_INTERVALS, max_rss_pages=MAX_RSS,
+                        workers=workers,
+                    ),
+                )
+            )
+        )
+    t_seed, t_new = min(seed_ts), min(new_ts)
+    speedup = t_seed / t_new
+    report("engine/bench_db_path_seed", t_seed * 1e6, f"{t_seed:.2f}s")
+    report("engine/bench_db_path_new", t_new * 1e6, f"{t_new:.2f}s")
+    report("engine/bench_db_path_speedup", speedup * 1e6, f"{speedup:.2f}x")
+
+    OUT_PATH.write_text(
+        json.dumps(
+            {
+                "n_configs": len(configs),
+                "n_harvest_fracs": len(HARVEST_FRACS),
+                "n_db_fm_fracs": int(DB_FM_FRACS.size),
+                "n_intervals": N_INTERVALS,
+                "workers_auto": workers is None,
+                "cpus": os.cpu_count(),
+                "harvest_and_records_identical": True,
+                "intervals_per_s_seed": round(ips_seed, 2),
+                "intervals_per_s_new": round(ips_new, 2),
+                "bench_db_path_seed_s": round(t_seed, 3),
+                "bench_db_path_new_s": round(t_new, 3),
+                "bench_db_path_speedup": round(speedup, 2),
+            },
+            indent=2,
+        )
+        + "\n"
+    )
+
+
+if __name__ == "__main__":
+    run(lambda name, us, derived: print(f"{name},{us:.1f},{derived}"))

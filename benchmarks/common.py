@@ -3,6 +3,15 @@
 Traces and the Tuna performance database are expensive to regenerate, so
 they are cached under ``benchmarks/_cache``. Delete the directory to force
 a rebuild.
+
+**Cache invalidation:** ``benchmarks/_cache`` stores *outputs of the
+simulation engine* (workload traces and micro-benchmark execution times).
+Whenever engine semantics change — the cost model, the page pool's
+allocation/migration behaviour, the policy, or the micro-benchmark
+generator — the cached database silently describes the *old* engine:
+delete ``benchmarks/_cache`` after any such change. (Pure performance
+refactors that the equivalence tests in
+``tests/test_engine_equivalence.py`` pin down do not require it.)
 """
 
 from __future__ import annotations
@@ -16,7 +25,8 @@ from repro.core.perfdb import PerfDB
 from repro.core.telemetry import ConfigVector
 from repro.core.trace import Trace, load_trace, save_trace
 from repro.core.tuner import build_database
-from repro.sim.engine import run_trace, simulate
+from repro.sim.engine import simulate
+from repro.sim.sweep import sweep_fm_fracs
 from repro.sim.workloads import WORKLOADS
 
 CACHE = Path(__file__).parent / "_cache"
@@ -37,20 +47,23 @@ def get_trace(name: str) -> Trace:
     return tr
 
 
+def steady_from(cvs: list, skip: int = 3, min_pacc: float = 500.0) -> list:
+    """Steady-state filter over per-interval config vectors. Degenerate
+    (near-empty) intervals are dropped — they would index meaningless
+    micro-benchmarks."""
+    return [c for c in cvs[skip:] if c.pacc_f + c.pacc_s >= min_pacc]
+
+
 def steady_configs(trace: Trace, fm_frac: float, skip: int = 3,
                    min_pacc: float = 500.0) -> list:
-    """Per-interval config vectors of a workload at a given fm size.
-    Degenerate (near-empty) intervals are dropped — they would index
-    meaningless micro-benchmarks."""
+    """Per-interval config vectors of a workload at a given fm size."""
     res = simulate(trace, fm_frac=fm_frac)
-    return [c for c in res.configs[skip:] if c.pacc_f + c.pacc_s >= min_pacc]
+    return steady_from(res.configs, skip, min_pacc)
 
 
-def representative_config(trace: Trace, fm_frac: float = 1.0) -> ConfigVector:
-    """The paper's Section 6.1 profiling step: run with the whole RSS in
-    fast memory, aggregate one configuration vector (mean profiling
-    interval; AI/intensity access-weighted)."""
-    cvs = steady_configs(trace, fm_frac)
+def _representative_from(cvs: list, trace: Trace) -> ConfigVector:
+    """Aggregate one configuration vector from steady-state interval
+    vectors (mean profiling interval; AI/intensity access-weighted)."""
     arr = np.stack([c.as_array() for c in cvs])
     mean = arr.mean(axis=0)
     acc = arr[:, 0] + arr[:, 1]
@@ -72,6 +85,12 @@ def representative_config(trace: Trace, fm_frac: float = 1.0) -> ConfigVector:
     )
 
 
+def representative_config(trace: Trace, fm_frac: float = 1.0) -> ConfigVector:
+    """The paper's Section 6.1 profiling step: run with the whole RSS in
+    fast memory, aggregate one configuration vector."""
+    return _representative_from(steady_configs(trace, fm_frac), trace)
+
+
 def build_bench_db(
     per_workload: int = 12,
     fm_probe_points=(1.0, 0.9, 0.75, 0.6, 0.45, 0.3),
@@ -83,7 +102,9 @@ def build_bench_db(
     The configuration-space sweep is seeded from the workloads' own
     operating points across fast-memory sizes (plus multiplicative jitter),
     standing in for the paper's 100 K-vector grid — the database still only
-    ever stores *micro-benchmark* execution times.
+    ever stores *micro-benchmark* execution times. Each record's whole
+    fm-size curve is produced in one pass by the batched sweep engine,
+    with process fan-out across configurations.
     """
     CACHE.mkdir(exist_ok=True)
     f = CACHE / "perfdb"
@@ -94,16 +115,25 @@ def build_bench_db(
     t0 = time.time()
     import dataclasses
 
+    rep_fracs = (1.0, 0.95, 0.9, 0.8)
     for name in WORKLOADS:
         tr = get_trace(name)
+        # one batched sweep harvests every needed fast-memory size's
+        # interval vectors in a single pass over the workload trace
+        fracs_needed = sorted(set(rep_fracs) | set(fm_probe_points),
+                              reverse=True)
+        res = sweep_fm_fracs(tr, fracs_needed, collect_configs=True)
+        by_frac = {
+            float(f): cvs for f, cvs in zip(res.fm_fracs, res.configs)
+        }
         # aggregated operating-point vectors (what runtime queries look
         # like) — the paper's dense 100K-vector grid covers these; our
         # sparse build must include them explicitly
-        for frac in (1.0, 0.95, 0.9, 0.8):
-            configs.append(representative_config(tr, fm_frac=frac))
+        for frac in rep_fracs:
+            configs.append(_representative_from(steady_from(by_frac[frac]), tr))
         pool: list[ConfigVector] = []
         for frac in fm_probe_points:
-            pool.extend(steady_configs(tr, frac))
+            pool.extend(steady_from(by_frac[float(frac)]))
         idx = rng.choice(len(pool), size=min(per_workload, len(pool)), replace=False)
         for i in idx:
             configs.append(pool[i])
@@ -117,7 +147,7 @@ def build_bench_db(
                     warm_touches=pool[i].warm_touches,
                 ))
     print(f"# perfdb: {len(configs)} configs, building...")
-    db = build_database(configs, run_trace, fm_fracs=DB_FM_FRACS, n_intervals=12)
+    db = build_database(configs, fm_fracs=DB_FM_FRACS, n_intervals=12)
     db.save(f)
     print(f"# perfdb built in {time.time()-t0:.1f}s")
     return db

@@ -25,6 +25,7 @@ def main() -> None:
         fig8_migrations,
         table3_target_sensitivity,
         serving_tiered,
+        bench_engine,
         kernels as kernel_bench,
     )
 
@@ -35,6 +36,7 @@ def main() -> None:
         ("fig8", fig8_migrations),
         ("table3", table3_target_sensitivity),
         ("serving", serving_tiered),
+        ("engine", bench_engine),
         ("kernels", kernel_bench),
     ]
     print("name,us_per_call,derived")

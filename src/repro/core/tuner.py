@@ -18,6 +18,9 @@ hardware in production) is injected as a callable.
 
 from __future__ import annotations
 
+import concurrent.futures as cf
+import multiprocessing as mp
+import os
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, Sequence
 
@@ -181,38 +184,106 @@ def scale_config(cv: ConfigVector, max_rss_pages: int) -> ConfigVector:
     return ConfigVector.from_array(v)
 
 
+def _sweep_record_times(
+    cv: ConfigVector,
+    fm_fracs: np.ndarray,
+    n_intervals: int,
+    max_rss_pages: int,
+) -> np.ndarray:
+    """One database record's time curve via the batched sweep engine.
+
+    Module-level so :func:`build_database`'s process fan-out can pickle it.
+    """
+    from repro.sim.sweep import sweep_times
+
+    trace = generate_microbench(
+        scale_config(cv, max_rss_pages), n_intervals=n_intervals
+    )
+    times = np.empty(fm_fracs.shape, dtype=np.float64)
+    full = fm_fracs >= 1.0 - 1e-9
+    if np.any(full):
+        # the fast-memory-only baseline is the NP_slow = 0 variant
+        # (paper Section 3.2/3.3): same work, no explicit slow array
+        times[full] = float(sweep_times(trace.fast_only(), [1.0])[0])
+    if not np.all(full):
+        times[~full] = sweep_times(trace, fm_fracs[~full])
+    return times
+
+
+def _sweep_record_star(args) -> np.ndarray:
+    return _sweep_record_times(*args)
+
+
 def build_database(
     configs: Iterable[ConfigVector],
-    run_microbench: Callable[[Trace, float], float],
+    run_microbench: Callable[[Trace, float], float] | None = None,
     fm_fracs: Sequence[float] | None = None,
     n_intervals: int = 20,
     max_rss_pages: int = 20_000,
+    workers: int | None = None,
 ) -> PerfDB:
     """Offline: populate the performance database.
 
-    ``run_microbench(trace, fm_frac)`` must execute the micro-benchmark trace
-    with the fast tier sized at ``fm_frac`` of the trace's RSS and return the
-    execution time. In this repo that backend is
-    :func:`repro.sim.engine.run_trace`; on real tiered hardware it is the
-    ``strided_probe`` kernel under the production page-management system.
+    By default (``run_microbench=None``) each configuration's whole
+    fm-size curve is produced in one pass by the batched sweep engine
+    (:mod:`repro.sim.sweep`), with optional ``concurrent.futures`` process
+    fan-out across configurations (``workers``; ``None`` = serial below 12
+    configs, else one worker per core). The sweep is equivalent to running
+    :func:`repro.sim.engine.run_trace` once per size — the engine
+    equivalence tests pin this — at a fraction of the cost.
+
+    A ``run_microbench(trace, fm_frac)`` callable can still be injected as
+    the execution backend (it must run the micro-benchmark trace with the
+    fast tier sized at ``fm_frac`` of the trace's RSS and return the
+    execution time); on real tiered hardware that is the ``strided_probe``
+    kernel under the production page-management system. Custom backends run
+    serially, one (config, size) pair at a time.
     """
     if fm_fracs is None:
         fm_fracs = np.round(np.arange(1.0, 0.099, -0.02), 3)
     fm_fracs = np.asarray(fm_fracs, dtype=np.float64)
+    configs = list(configs)
     db = PerfDB()
-    for cv in configs:
-        # index on the raw vector; benchmark the scaled-down equivalent
-        trace = generate_microbench(
-            scale_config(cv, max_rss_pages), n_intervals=n_intervals
-        )
-        times = np.empty(fm_fracs.shape, dtype=np.float64)
-        for i, f in enumerate(fm_fracs):
-            if f >= 1.0 - 1e-9:
-                # the fast-memory-only baseline is the NP_slow = 0 variant
-                # (paper Section 3.2/3.3): same work, no explicit slow array
-                times[i] = run_microbench(trace.fast_only(), 1.0)
-            else:
-                times[i] = run_microbench(trace, float(f))
+    from repro.sim.engine import run_trace
+
+    if run_microbench is not None and run_microbench is not run_trace:
+        # legacy/injected backend: per-(config, size) calls, serial
+        for cv in configs:
+            # index on the raw vector; benchmark the scaled-down equivalent
+            trace = generate_microbench(
+                scale_config(cv, max_rss_pages), n_intervals=n_intervals
+            )
+            times = np.empty(fm_fracs.shape, dtype=np.float64)
+            for i, f in enumerate(fm_fracs):
+                if f >= 1.0 - 1e-9:
+                    times[i] = run_microbench(trace.fast_only(), 1.0)
+                else:
+                    times[i] = run_microbench(trace, float(f))
+            db.add(PerfRecord(config=cv, fm_fracs=fm_fracs, times=times))
+        db.build()
+        return db
+
+    if workers is None:
+        workers = 1 if len(configs) < 12 else (os.cpu_count() or 1)
+    workers = max(1, min(int(workers), len(configs) or 1))
+    jobs = [(cv, fm_fracs, n_intervals, max_rss_pages) for cv in configs]
+    all_times: list[np.ndarray] | None = None
+    if workers > 1:
+        try:
+            # fork (where available) spares each worker the interpreter +
+            # numpy import; the workers run pure-numpy sweep code only
+            method = "fork" if "fork" in mp.get_all_start_methods() else None
+            ctx = mp.get_context(method)
+            with cf.ProcessPoolExecutor(workers, mp_context=ctx) as pool:
+                chunk = max(1, len(jobs) // (4 * workers))
+                all_times = list(
+                    pool.map(_sweep_record_star, jobs, chunksize=chunk)
+                )
+        except (OSError, ValueError, cf.process.BrokenProcessPool):
+            all_times = None  # sandboxed / restricted env: fall back
+    if all_times is None:
+        all_times = [_sweep_record_star(job) for job in jobs]
+    for cv, times in zip(configs, all_times):
         db.add(PerfRecord(config=cv, fm_fracs=fm_fracs, times=times))
     db.build()
     return db

@@ -105,7 +105,7 @@ class TieredPagedKV:
             jnp.arange(n),
         )
         self.hbm_slot[pages] = dst
-        self.pool.tier[pages] = Tier.FAST
+        self.pool.place(pages, Tier.FAST)
         self.migrated_in += n
         return n
 
@@ -122,7 +122,7 @@ class TieredPagedKV:
         for s in slots:
             self._free_hbm.append(int(s))
         self.hbm_slot[pages] = -1
-        self.pool.tier[pages] = Tier.SLOW
+        self.pool.place(pages, Tier.SLOW)
         self.migrated_out += pages.size
         return int(pages.size)
 
@@ -132,10 +132,10 @@ class TieredPagedKV:
         demoted = 0
         wm = self.pool.watermarks
         while len(self._free_hbm) < wm.low_free:
-            fast = np.flatnonzero(self.pool.tier == Tier.FAST)
+            fast = self.pool.fast_pages()
             if fast.size == 0:
                 break
-            order = np.argsort(self.pool.heat[fast])
+            order = np.argsort(self.pool.heat_of(fast))
             batch = fast[order[: max(1, min(64, wm.high_free - len(self._free_hbm)))]]
             demoted += self.demote(batch)
         return demoted

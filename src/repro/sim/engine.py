@@ -57,6 +57,7 @@ def simulate(
     tuner: TunaTuner | None = None,
     tune_every: int | None = None,
     seed: int = 0,
+    pool_factory=TieredPagePool,
 ) -> SimResult:
     """Run ``trace`` with the fast tier sized at ``fm_frac`` of its RSS.
 
@@ -65,11 +66,14 @@ def simulate(
     then *shrinks* it with watermarks). If a ``tuner`` is given, it is
     stepped every ``tune_every`` intervals (the 2.5 s tuning interval mapped
     onto profiling intervals) and drives the watermarks itself.
+    ``pool_factory`` swaps the pool implementation (the equivalence tests
+    and the engine benchmark run the same trace through
+    :class:`repro.tiering.reference_pool.ReferencePagePool`).
     """
     if policy is None:
         policy = TPPPolicy()
     cap = int(hw_capacity_pages or trace.rss_pages)
-    pool = TieredPagePool(
+    pool = pool_factory(
         num_pages=trace.rss_pages,
         hw_capacity=cap,
         page_bytes=hw.page_bytes,

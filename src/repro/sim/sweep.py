@@ -1,0 +1,266 @@
+"""Batched fast-memory-size sweep engine (the offline database hot path).
+
+Tuna's offline component executes the same micro-benchmark trace at ~21
+fast-memory sizes (paper Sections 3.3/5). Running :func:`repro.sim.engine.
+simulate` once per size repeats every size-independent computation — trace
+iteration, LLC absorption, MLP estimation, and the whole hotness bookkeeping
+— 21 times. This module simulates **one trace across the whole size vector
+in a single pass**:
+
+* page touches are trace-driven, so per-page heat and the interval touch
+  counters are *identical at every size*: one shared
+  :class:`~repro.tiering.page_pool.LazyHeat` and one shared dense touch
+  array serve all sizes;
+* only tier occupancy differs per size: it lives in one stacked
+  ``[n_sizes, rss_pages]`` array, and each size's policy steps over a
+  lightweight slice pool (:meth:`TieredPagePool._shared_slice`) that views
+  its row — the *same* ``TPPPolicy`` code the per-size engine runs, so the
+  sweep cannot drift semantically;
+* per-interval tier classification of the touched pages is one batched
+  ``[n_sizes, n_touched]`` gather instead of ``n_sizes`` passes.
+
+Exactness: every per-size arithmetic sequence matches a standalone
+``simulate(trace, fm_frac=f)`` bit for bit (integer counters; float times),
+which ``tests/test_engine_equivalence.py`` asserts.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.trace import Trace
+from repro.sim.costmodel import (
+    HardwareProfile,
+    OPTANE_LIKE,
+    absorb_cache,
+    effective_mlp,
+    interval_time,
+)
+from repro.tiering.page_pool import (
+    LazyGrankBox,
+    LazyHeat,
+    Tier,
+    TieredPagePool,
+)
+from repro.tiering.policy import TPPPolicy
+
+
+@dataclass
+class SweepResult:
+    """Per-size outcome of one batched sweep."""
+
+    name: str
+    fm_fracs: np.ndarray  # [n_sizes]
+    interval_times: np.ndarray  # [n_sizes, n_intervals]
+    stats: list  # final pool counter snapshot per size
+    configs: list | None = None  # per size: ConfigVector per interval
+
+    @property
+    def total_times(self) -> np.ndarray:
+        return self.interval_times.sum(axis=1)
+
+
+def sweep_fm_fracs(
+    trace: Trace,
+    fm_fracs,
+    hot_thr: int = 4,
+    hw: HardwareProfile = OPTANE_LIKE,
+    hw_capacity_pages: int | None = None,
+    seed: int = 0,
+    collect_configs: bool = False,
+) -> SweepResult:
+    """Run ``trace`` once, concurrently at every fraction in ``fm_fracs``.
+
+    Equivalent to ``[simulate(trace, fm_frac=f, policy=TPPPolicy(hot_thr))
+    for f in fm_fracs]`` (same counters, same interval times), at roughly
+    the cost of the most expensive single size plus the per-size policy
+    work.
+    """
+    fm_fracs = np.asarray(fm_fracs, dtype=np.float64)
+    n_sizes = fm_fracs.size
+    if n_sizes == 0:
+        raise ValueError("sweep_fm_fracs needs at least one fm fraction")
+    num_pages = int(trace.rss_pages)
+    cap = int(hw_capacity_pages or trace.rss_pages)
+    policy = TPPPolicy(hot_thr=hot_thr)
+
+    # stacked per-size tier state + state shared across sizes
+    tier_b = np.full((n_sizes, num_pages), int(Tier.UNALLOCATED), dtype=np.int8)
+    halflife_decay = 0.5 ** (1.0 / 2.0)  # TieredPagePool default halflife
+    heat = LazyHeat(num_pages, halflife_decay)
+    interval_acc = np.zeros(num_pages, dtype=np.int64)
+    interval_touch = np.zeros(num_pages, dtype=np.int64)
+    pools = []
+    for s in range(n_sizes):
+        pool = TieredPagePool._shared_slice(
+            tier_row=tier_b[s],
+            heat=heat,
+            interval_acc=interval_acc,
+            interval_touch=interval_touch,
+            hw_capacity=cap,
+            page_bytes=hw.page_bytes,
+            kswapd_batch=None,
+            seed=seed,
+        )
+        pool.set_fm_size(int(round(fm_fracs[s] * cap)))
+        if trace.slow_pages is not None:
+            pool.place(trace.slow_pages, Tier.SLOW)
+        pools.append(pool)
+
+    n_intervals = len(trace)
+    times = np.zeros((n_sizes, n_intervals), dtype=np.float64)
+    fast_code = int(Tier.FAST)
+    slow_code = int(Tier.SLOW)
+    profilers = configs_out = None
+    if collect_configs:
+        from repro.core.telemetry import IntervalProfiler
+
+        profilers = [
+            IntervalProfiler(hot_thr=hot_thr, num_threads=trace.num_threads)
+            for _ in range(n_sizes)
+        ]
+        configs_out = [[] for _ in range(n_sizes)]
+    for i, ia in enumerate(trace):
+        pages = ia.pages
+        # --- size-independent work, computed once for all sizes
+        counts_mem = absorb_cache(ia.counts, hw.llc_pages)
+        mlp_eff = effective_mlp(counts_mem, hw.mlp, trace.num_threads)
+        new_mask = tier_b[0, pages] == Tier.UNALLOCATED
+        new_pages = pages[new_mask] if bool(new_mask.any()) else None
+        for pool in pools:
+            pool._grank_box = None  # new touches change the ranking
+            if new_pages is not None:
+                pool._first_touch_alloc(new_pages)
+        interval_touch[pages] += ia.touches
+        # one stable ranking of every page by (effective heat, id) serves
+        # the victim selection of all sizes this interval — materialized
+        # lazily, since demotion-free intervals never need it
+        grank_box = LazyGrankBox(heat, interval_touch)
+        for pool in pools:
+            pool._grank_box = grank_box
+            pool._gptr = 0
+        # --- batched tier classification of the touched pages; counts are
+        # small enough that a float64 BLAS matvec is exact (< 2**53), and
+        # every touched page is allocated, so pacc_s is the complement
+        tiers_all = tier_b[:, pages]  # [n_sizes, n_touched]
+        counts_f = counts_mem.astype(np.float64)
+        fast_f = (tiers_all == fast_code).astype(np.float64)
+        if profilers is None:
+            pacc_f_all = (fast_f @ counts_f).astype(np.int64)
+        else:
+            # what simulate()'s profiler records per interval, batched in
+            # one GEMM: reported touches saturate at hot_thr, warm =
+            # below-threshold fast-tier observations
+            rep = np.minimum(ia.touches, hot_thr)
+            rep_f = rep.astype(np.float64)
+            warm = (rep < hot_thr).astype(np.float64)
+            sums = (
+                fast_f
+                @ np.stack([counts_f, rep_f, warm, rep_f * warm], axis=1)
+            ).astype(np.int64)
+            pacc_f_all = sums[:, 0]
+            ptouch_f_all = sums[:, 1]
+            ptouch_s_all = int(rep.sum()) - ptouch_f_all
+            warm_pages_all = sums[:, 2]
+            warm_touch_all = sums[:, 3]
+        pacc_s_all = int(counts_mem.sum()) - pacc_f_all
+        # --- promotion candidates: touch counts are size-independent, so
+        # the hottest-first stable order is computed once; each size keeps
+        # its slow-tier subset (subsets preserve the stable order)
+        acc_now = interval_touch[pages]
+        hot_mask = acc_now >= policy.hot_thr
+        hot_sorted = pages[hot_mask]
+        acc_hot = acc_now[hot_mask]
+        if acc_hot.size:
+            vmax = int(acc_hot.max())
+            if vmax - policy.hot_thr <= 32:
+                # touch counts span a handful of values: a stable counting
+                # sort (hottest first) beats argsort on tens of thousands
+                # of candidates, with the identical tie order
+                order = np.concatenate(
+                    [
+                        np.flatnonzero(acc_hot == v)
+                        for v in range(vmax, policy.hot_thr - 1, -1)
+                    ]
+                )
+            else:
+                order = np.argsort(-acc_hot, kind="stable")
+            hot_sorted = hot_sorted[order]
+        hot_unique = bool(
+            hot_sorted.size
+            and int(
+                np.bincount(hot_sorted, minlength=num_pages).max()
+            ) <= 1
+        )
+        # one batched gather for every size's promotion-candidate filter
+        cand_slow_all = (
+            tier_b[:, hot_sorted] == slow_code
+            if hot_sorted.size
+            else None
+        )
+        # --- per-size policy + cost (identical code path to simulate())
+        for s, pool in enumerate(pools):
+            before_direct = pool.stats.pgdemote_direct
+            if profilers is not None:
+                profilers[s].record_accesses(
+                    int(ptouch_f_all[s]),
+                    int(ptouch_s_all[s]),
+                    ia.ops,
+                    cachelines=int(pacc_f_all[s]) + int(pacc_s_all[s]),
+                    warm_pages=int(warm_pages_all[s]),
+                    warm_touches=int(warm_touch_all[s]),
+                )
+            cand = (
+                hot_sorted[cand_slow_all[s]]
+                if cand_slow_all is not None
+                else hot_sorted
+            )
+            outcome = policy.step_hot_sorted(
+                pool, cand, assume_unique=hot_unique
+            )
+            if profilers is not None:
+                profilers[s].record_policy(outcome)
+                configs_out[s].append(profilers[s].finish(pool))
+            cost = interval_time(
+                hw,
+                pacc_f=int(pacc_f_all[s]),
+                pacc_s=int(pacc_s_all[s]),
+                ops=ia.ops,
+                pm_pr=outcome.pm_pr,
+                pm_de=outcome.pm_de,
+                pm_fail=outcome.pm_fail,
+                direct_reclaimed=pool.stats.pgdemote_direct - before_direct,
+                mlp_eff=mlp_eff,
+                num_threads=trace.num_threads,
+                rand_frac=ia.rand_frac,
+            )
+            times[s, i] = cost.total
+        # --- one shared heat fold for all sizes (mirrors
+        # TieredPagePool.end_interval's dense/indexed hybrid)
+        if pages.size >= num_pages // 8:
+            heat.fold_dense(interval_touch)
+            interval_touch[:] = 0
+        elif pages.size:
+            heat.fold(pages, interval_touch[pages])
+            interval_touch[pages] = 0
+        else:
+            heat.fold(np.empty(0, np.int64), np.empty(0, np.int64))
+    return SweepResult(
+        name=trace.name,
+        fm_fracs=fm_fracs,
+        interval_times=times,
+        stats=[pool.stats.snapshot() for pool in pools],
+        configs=configs_out,
+    )
+
+
+def sweep_times(
+    trace: Trace,
+    fm_fracs,
+    hot_thr: int = 4,
+    hw: HardwareProfile = OPTANE_LIKE,
+) -> np.ndarray:
+    """Total execution time per fm fraction (the database-build backend)."""
+    return sweep_fm_fracs(trace, fm_fracs, hot_thr=hot_thr, hw=hw).total_times

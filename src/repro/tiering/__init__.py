@@ -14,9 +14,11 @@ The state is held in flat integer numpy arrays so the same logic can be
 
 from repro.tiering.page_pool import TieredPagePool, Tier, PoolStats
 from repro.tiering.policy import TPPPolicy, FirstTouchPolicy, PolicyOutcome
+from repro.tiering.reference_pool import ReferencePagePool
 
 __all__ = [
     "TieredPagePool",
+    "ReferencePagePool",
     "Tier",
     "PoolStats",
     "TPPPolicy",

@@ -7,12 +7,29 @@ size (the paper's Section 4 mechanism): reclamation (demotion to the slow
 tier) is triggered when free fast pages drop below the low watermark and runs
 until the high watermark is restored; dropping below the min watermark models
 direct (blocking) reclaim and is penalized by the cost model.
+
+Unlike the seed implementation (kept as
+:class:`repro.tiering.reference_pool.ReferencePagePool`, the golden model for
+the equivalence tests), all pool state here is **incrementally maintained**:
+
+* ``fast_used`` / ``rss_pages`` are O(1) counters updated on every tier
+  transition instead of ``count_nonzero`` scans over the whole RSS;
+* the fast tier keeps a swap-remove membership index (:class:`_FastSet`), so
+  ``demote_coldest`` selects victims with ``np.argpartition`` over fast pages
+  only — no ``flatnonzero`` over the RSS and no full sort;
+* heat decay is **lazy** (:class:`LazyHeat`): each page carries the interval
+  stamp of its last fold, and the geometric decay is applied on read, so
+  ``end_interval`` does O(pages touched) work instead of O(RSS).
+
+Because of the incremental index, ``pool.tier`` must be treated as
+**read-only** from outside; use :meth:`TieredPagePool.place` to move pages
+between tiers explicitly.
 """
 
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -21,6 +38,13 @@ class Tier(enum.IntEnum):
     UNALLOCATED = -1
     FAST = 0
     SLOW = 1
+
+
+# plain-int mirrors for hot loops (IntEnum attribute access costs a dict
+# walk per lookup, which shows up at thousands of pool calls per second)
+_UNALLOC = int(Tier.UNALLOCATED)
+_FAST = int(Tier.FAST)
+_SLOW = int(Tier.SLOW)
 
 
 @dataclass
@@ -58,6 +82,361 @@ class PoolStats:
 
     def snapshot(self) -> dict:
         return dict(self.__dict__)
+
+
+class LazyHeat:
+    """Decayed per-page touch counters with O(touched) maintenance.
+
+    The reference implementation multiplies the whole dense heat array by
+    the decay factor every interval. Here each page stores its value as of
+    the last interval it was *refreshed* (``stamp``), and reads apply the
+    pending decay steps on the fly. The catch-up is performed as the same
+    **sequence of scalar multiplies** the reference executes (not
+    ``value * decay**k``, whose single rounding differs in the last ulp and
+    would flip near-tie victim rankings), and the caught-up value is written
+    back — so a page read every interval, the hot-path common case, pays
+    exactly one multiply per interval and stays bit-identical to the
+    reference's dense ``heat * decay + touch``.
+    """
+
+    def __init__(self, num_pages: int, decay: float) -> None:
+        self.decay = float(decay)
+        self.value = np.zeros(num_pages, dtype=np.float64)
+        # number of end-of-interval decay steps incorporated into ``value``
+        self.stamp = np.zeros(num_pages, dtype=np.int64)
+        self.t = 0  # completed intervals
+
+    def _refresh(self, pages: np.ndarray) -> np.ndarray:
+        """Catch ``pages`` up to ``t`` decay steps, sequentially, in place.
+        Returns the refreshed values (a fresh array) to spare callers a
+        second gather."""
+        vals = self.value[pages]
+        if pages.size == 0:
+            return vals
+        k = self.t - self.stamp[pages]
+        kmax = int(k.max())
+        if kmax <= 0:
+            return vals
+        if kmax == 1 and int(k.min()) == 1:
+            vals = vals * self.decay  # the steady-state fast path
+        else:
+            live = (k > 0) & (vals != 0.0)
+            for step in range(1, kmax + 1):
+                if not np.any(live):
+                    break
+                vals = np.where(live, vals * self.decay, vals)
+                live = live & (k > step) & (vals != 0.0)
+        self.value[pages] = vals
+        self.stamp[pages] = self.t
+        return vals
+
+    def fold(self, pages: np.ndarray, touches: np.ndarray) -> None:
+        """End one interval: decay + fold ``touches`` for ``pages`` (the
+        interval's touched set; duplicates are harmless), leaving every
+        untouched page's decay implicit in its stamp."""
+        if pages.size:
+            vals = self._refresh(pages)
+            self.value[pages] = vals * self.decay + touches
+            self.stamp[pages] = self.t + 1
+        self.t += 1
+
+    def fold_dense(self, touches_dense: np.ndarray) -> None:
+        """Dense-interval fold: ``value = value * decay + touches_dense``.
+
+        Indexed scatter/gather costs ~50x a contiguous op per element, so
+        once an interval touches a sizeable slice of the RSS the reference's
+        dense update is the faster one — and it re-synchronizes every stamp,
+        keeping subsequent reads on the one-multiply fast path.
+        """
+        stale = np.flatnonzero(self.stamp < self.t)
+        if stale.size:
+            self._refresh(stale)
+        self.value *= self.decay
+        self.value += touches_dense
+        self.stamp[:] = self.t + 1
+        self.t += 1
+
+    def _peek(self, pages: np.ndarray) -> np.ndarray:
+        """Refreshed values without the write-back scatters when staleness
+        is homogeneous (the every-interval-read steady state); falls back
+        to :meth:`_refresh` so heterogeneous catch-up work is never redone."""
+        vals = self.value[pages]
+        if pages.size == 0:
+            return vals
+        k = self.t - self.stamp[pages]
+        kmax = int(k.max())
+        if kmax <= 0:
+            return vals
+        if kmax == 1 and int(k.min()) == 1:
+            return vals * self.decay
+        return self._refresh(pages)
+
+    def current(self, pages: np.ndarray) -> np.ndarray:
+        """Heat as of the last completed interval (reference ``heat[p]``)."""
+        return self._peek(pages)
+
+    def lookahead(self, pages: np.ndarray) -> np.ndarray:
+        """Heat decayed through the *current* interval (reference
+        ``heat[p] * decay`` — the demotion-ranking term)."""
+        return self._peek(pages) * self.decay
+
+    def lookahead_dense(self) -> np.ndarray:
+        """:meth:`lookahead` for every page, as dense ops (sweep engine)."""
+        stale = np.flatnonzero(self.stamp < self.t)
+        if stale.size:
+            self._refresh(stale)
+        return self.value * self.decay
+
+    def dense(self) -> np.ndarray:
+        """Materialize the full heat array (O(num_pages); telemetry only)."""
+        self._refresh(np.arange(self.value.size))
+        return self.value.copy()
+
+
+class _DemoteQueue:
+    """Per-interval victim queue for :meth:`TieredPagePool.demote_coldest`.
+
+    Reclaim is invoked many times per interval (once per promotion chunk in
+    the policy loop), but the ranking inputs — lazy heat and the interval's
+    touch counters — are constant between invocations. So the fast tier is
+    ranked **once** per interval in lexicographic (effective heat, page id)
+    order (exactly the reference implementation's stable sort), and
+    successive demotions consume the queue front. Pages promoted mid-
+    interval enter as *pending* entries and are merged during selection.
+
+    Invariant: every queue entry at or after ``pos`` is still in the fast
+    tier. Demotions only ever consume the queue front, ``promote`` cannot
+    touch fast pages, and any other tier transition (``place``,
+    first-touch allocation) invalidates the whole queue — so ``pop`` is
+    pure front slicing, with no validity rescans.
+    """
+
+    def __init__(self, ids: np.ndarray, eff: np.ndarray, want: int) -> None:
+        # unsorted remainder: every entry ranks strictly after the sorted
+        # block, so sorting is paid only for pages actually demoted
+        self._rest_ids = ids
+        self._rest_eff = eff
+        self.ids = np.empty(0, dtype=np.int64)
+        self.eff = np.empty(0, dtype=np.float64)
+        self.pos = 0
+        self._pend_ids: list[np.ndarray] = []
+        self._pend_eff: list[np.ndarray] = []
+        self._pend_min = np.inf  # lower bound on pending eff
+        self.pend_n = 0  # total pending entries (rebuild heuristic)
+        self._extend(want)
+
+    def add_pending(self, ids: np.ndarray, eff: np.ndarray) -> None:
+        self._pend_ids.append(ids)
+        self._pend_eff.append(eff)
+        self.pend_n += ids.size
+        if eff.size:
+            self._pend_min = min(self._pend_min, float(eff.min()))
+
+    def _extend(self, want: int) -> bool:
+        """Carve the ``>= want`` coldest remainder entries (complete tie
+        classes, via ``np.argpartition``'s boundary value) into the sorted
+        block. Keeps the block an exact lexicographic prefix of the
+        remaining fast tier."""
+        rid, reff = self._rest_ids, self._rest_eff
+        if rid.size == 0:
+            return False
+        want = min(int(want), rid.size)
+        if want < rid.size:
+            kth = np.partition(reff, want - 1)[want - 1]
+            take = reff <= kth
+            blk_ids, blk_eff = rid[take], reff[take]
+            self._rest_ids, self._rest_eff = rid[~take], reff[~take]
+        else:
+            blk_ids, blk_eff = rid, reff
+            self._rest_ids = np.empty(0, dtype=np.int64)
+            self._rest_eff = np.empty(0, dtype=np.float64)
+        order = np.lexsort((blk_ids, blk_eff))
+        self.ids = np.concatenate([self.ids, blk_ids[order]])
+        self.eff = np.concatenate([self.eff, blk_eff[order]])
+        return True
+
+    def _ensure(self, n: int) -> None:
+        """Grow the sorted block until ``n`` entries are consumable (or the
+        remainder is exhausted)."""
+        while self.ids.size - self.pos < n:
+            if not self._extend(2 * n + 1024):
+                break
+
+    def pop(self, n: int) -> np.ndarray:
+        """The ``n`` lexicographically-coldest current fast pages."""
+        self._ensure(n)
+        avail = self.ids.size - self.pos
+        if not self._pend_ids or (
+            # pending entries are just-promoted (hot) pages; when even the
+            # coldest of them is strictly hotter than the whole main window
+            # the merge cannot select any of them — pure front slicing
+            avail >= n
+            and self._pend_min > self.eff[self.pos + n - 1]
+        ):
+            take = min(n, avail)
+            victims = self.ids[self.pos : self.pos + take]
+            self.pos += take
+            return victims
+        take_main = min(n, avail)
+        m_ids = self.ids[self.pos : self.pos + take_main]
+        m_eff = self.eff[self.pos : self.pos + take_main]
+        p_ids = np.concatenate(self._pend_ids)
+        p_eff = np.concatenate(self._pend_eff)
+        cand_ids = np.concatenate([m_ids, p_ids])
+        cand_eff = np.concatenate([m_eff, p_eff])
+        order = np.lexsort((cand_ids, cand_eff))[:n]
+        victims = cand_ids[order]
+        # taken main entries are always a prefix of the main window (the
+        # main queue is sorted), so the pointer advances past them
+        self.pos += int(np.count_nonzero(order < take_main))
+        keep = np.ones(p_ids.size, dtype=bool)
+        keep[order[order >= take_main] - take_main] = False
+        if np.any(keep):
+            kept_eff = p_eff[keep]
+            self._pend_ids = [p_ids[keep]]
+            self._pend_eff = [kept_eff]
+            self._pend_min = float(kept_eff.min())
+            self.pend_n = kept_eff.size
+        else:
+            self._pend_ids = []
+            self._pend_eff = []
+            self._pend_min = np.inf
+            self.pend_n = 0
+        return victims
+
+
+class GlobalDemoteRank:
+    """Interval-wide demotion ranking shared across the sweep's slice pools.
+
+    The demotion key — decayed heat through the current interval plus the
+    interval's touches — is *trace-driven*, hence identical at every
+    fast-memory size. Pages are ranked in lexicographic (effective heat,
+    page id) order; each size consumes the ranking through its own
+    pointer, skipping entries not currently in its fast tier. Promotions
+    rewind the pointer at/before the hottest newly-fast entry's rank, so
+    mid-interval arrivals are selected exactly as a per-size queue would.
+
+    One stable argsort per interval is shared by every size; per-size
+    walks are chunked scans over it, so the cost of ranking is paid once
+    instead of once per fast-memory size.
+    """
+
+    __slots__ = ("order", "rank", "eff")
+
+    def __init__(self, eff_all: np.ndarray) -> None:
+        self.eff = eff_all  # by page id
+        self.order = np.argsort(eff_all, kind="stable")
+        rank = np.empty(eff_all.size, dtype=np.int64)
+        rank[self.order] = np.arange(eff_all.size, dtype=np.int64)
+        self.rank = rank
+
+    def walk(self, tier_row: np.ndarray, ptr: int, n: int):
+        """First ``n`` fast-tier pages at/after ``ptr`` in ranking order.
+
+        Returns ``(victims, new_ptr)``; does not mutate pointer state, so
+        callers can trial-select and abort. Entries before ``new_ptr`` are
+        either not fast or among the returned victims.
+        """
+        order = self.order
+        total = order.size
+        taken: list[np.ndarray] = []
+        got = 0
+        i = ptr
+        truncated = False
+        while got < n and i < total:
+            j = min(total, i + max(4 * (n - got), 512))
+            window = order[i:j]
+            hits = window[tier_row[window] == _FAST]
+            if hits.size > n - got:
+                hits = hits[: n - got]
+                truncated = True
+            taken.append(hits)
+            got += hits.size
+            i = j
+        victims = (
+            taken[0]
+            if len(taken) == 1
+            else np.concatenate(taken)
+            if taken
+            else np.empty(0, np.int64)
+        )
+        if truncated:
+            # unconsumed fast entries remain in the last window: resume
+            # right after the last victim
+            new_ptr = int(self.rank[victims[-1]]) + 1
+        else:
+            new_ptr = i
+        return victims, new_ptr
+
+
+class LazyGrankBox:
+    """Per-interval lazy holder for the shared :class:`GlobalDemoteRank`.
+
+    The ranking inputs are frozen for the whole interval, but many
+    intervals (full-size sweeps, promotion-only steps) never demote — so
+    the argsort is deferred until the first size actually selects victims.
+    Promotion-pointer rewinds only matter once a pointer exists, i.e. once
+    the ranking is materialized, so un-materialized intervals skip those
+    too.
+    """
+
+    __slots__ = ("_heat", "_touch", "_g")
+
+    def __init__(self, heat: LazyHeat, interval_touch: np.ndarray) -> None:
+        self._heat = heat
+        self._touch = interval_touch
+        self._g = None
+
+    def get(self) -> GlobalDemoteRank:
+        if self._g is None:
+            self._g = GlobalDemoteRank(
+                self._heat.lookahead_dense() + self._touch
+            )
+        return self._g
+
+    def peek(self) -> GlobalDemoteRank | None:
+        return self._g
+
+
+class _FastSet:
+    """Swap-remove membership index over the fast tier.
+
+    ``ids[:n]`` are the fast-tier page ids in arbitrary order; ``slot``
+    maps page id -> position in ``ids`` (-1 = not a member). Batch add and
+    remove are O(batch), so tier transitions never rescan the RSS.
+    """
+
+    def __init__(self, num_pages: int) -> None:
+        self.ids = np.empty(num_pages, dtype=np.int64)
+        self.slot = np.full(num_pages, -1, dtype=np.int64)
+        self.n = 0
+
+    def add(self, pages: np.ndarray) -> None:
+        k = pages.size
+        if k == 0:
+            return
+        self.ids[self.n : self.n + k] = pages
+        self.slot[pages] = np.arange(self.n, self.n + k, dtype=np.int64)
+        self.n += k
+
+    def remove(self, pages: np.ndarray) -> None:
+        k = pages.size
+        if k == 0:
+            return
+        slots = self.slot[pages]
+        self.slot[pages] = -1
+        n_new = self.n - k
+        # surviving members stranded in the tail move into freed head slots
+        tail = self.ids[n_new : self.n]
+        movers = tail[self.slot[tail] >= 0]
+        dest = slots[slots < n_new]
+        self.ids[dest] = movers
+        self.slot[movers] = dest
+        self.n = n_new
+
+    def members(self) -> np.ndarray:
+        """View of the current members (arbitrary order; do not mutate)."""
+        return self.ids[: self.n]
 
 
 class TieredPagePool:
@@ -101,30 +480,54 @@ class TieredPagePool:
             if kswapd_batch is not None
             else max(128, self.hw_capacity // 64)
         )
-        self.tier = np.full(self.num_pages, int(Tier.UNALLOCATED), dtype=np.int8)
-        # decayed touch counter (float for EMA decay) — policy-visible heat
-        self.heat = np.zeros(self.num_pages, dtype=np.float64)
+        self._tier = np.full(
+            self.num_pages, int(Tier.UNALLOCATED), dtype=np.int8
+        )
+        # public read-only view: external tier moves must go through
+        # place(), or the incremental occupancy index silently corrupts
+        self.tier = self._tier.view()
+        self.tier.flags.writeable = False
+        self.decay = 0.5 ** (1.0 / max(hotness_halflife, 1e-9))
+        # decayed touch counter — policy-visible heat, lazily decayed
+        self._heat = LazyHeat(self.num_pages, self.decay)
         # cache-line accesses in the *current* interval (telemetry/cost)
         self.interval_acc = np.zeros(self.num_pages, dtype=np.int64)
         # fault-like touch events in the current interval (policy input)
         self.interval_touch = np.zeros(self.num_pages, dtype=np.int64)
-        self.decay = 0.5 ** (1.0 / max(hotness_halflife, 1e-9))
         self.watermarks = Watermarks.for_size(self.hw_capacity, self.hw_capacity)
         self.stats = PoolStats()
         self._rng = np.random.default_rng(seed)
+        self._fast = _FastSet(self.num_pages)
+        self._fast_used = 0
+        self._rss_pages = 0
+        self._touched: list[np.ndarray] = []  # page batches this interval
+        self._dq: _DemoteQueue | None = None  # per-interval victim queue
+        # sweep mode: shared interval-wide ranking + per-size cursor
+        self._grank_box: LazyGrankBox | None = None
+        self._gptr = 0
+        self._owns_interval_state = True  # False for sweep slice pools
 
     # ------------------------------------------------------------------ state
     @property
     def fast_used(self) -> int:
-        return int(np.count_nonzero(self.tier == Tier.FAST))
+        return self._fast_used
 
     @property
     def fast_free(self) -> int:
-        return self.hw_capacity - self.fast_used
+        return self.hw_capacity - self._fast_used
 
     @property
     def rss_pages(self) -> int:
-        return int(np.count_nonzero(self.tier != Tier.UNALLOCATED))
+        return self._rss_pages
+
+    @property
+    def heat(self) -> np.ndarray:
+        """Current decayed heat, materialized densely (O(num_pages)).
+
+        Telemetry/back-compat accessor — a fresh array, so writes to it do
+        not reach the pool. Use :meth:`heat_of` for indexed reads.
+        """
+        return self._heat.dense()
 
     @property
     def effective_fm_size(self) -> int:
@@ -135,11 +538,44 @@ class TieredPagePool:
         """Retune the fast-tier size via watermarks (paper Section 4)."""
         self.watermarks = Watermarks.for_size(self.hw_capacity, new_fm_pages)
 
+    def fast_pages(self) -> np.ndarray:
+        """Fast-tier page ids, arbitrary order (O(fast_used) copy)."""
+        return self._fast.members().copy()
+
+    def _sync_index(self, pages: np.ndarray) -> None:
+        """Reconcile the fast index + counter with ``tier`` for ``pages``
+        (must be unique). O(batch)."""
+        is_fast = self.tier[pages] == _FAST
+        if self._fast is None:
+            # sweep slice pools: the shared ranking replaces the index and
+            # the only callers move previously-UNALLOCATED pages, so the
+            # counter delta is simply the new fast-tier count
+            self._fast_used += int(np.count_nonzero(is_fast))
+            return
+        in_set = self._fast.slot[pages] >= 0
+        rem = pages[in_set & ~is_fast]
+        add = pages[is_fast & ~in_set]
+        self._fast.remove(rem)
+        self._fast.add(add)
+        self._fast_used += add.size - rem.size
+
     def place(self, pages: np.ndarray, tier: Tier) -> None:
-        """Explicitly allocate ``pages`` into ``tier`` (numactl/membind
-        analogue — the micro-benchmark places its slow array this way)."""
-        pages = np.asarray(pages, dtype=np.int64)
-        self.tier[pages] = int(tier)
+        """Explicitly move ``pages`` into ``tier`` (numactl/membind
+        analogue — the micro-benchmark places its slow array this way).
+        This is the only supported way to change tiers from outside the
+        pool; direct writes to ``pool.tier`` would corrupt the incremental
+        occupancy index."""
+        pages = np.unique(np.asarray(pages, dtype=np.int64))
+        if pages.size == 0:
+            return
+        self._dq = None  # arbitrary tier moves invalidate the victim queue
+        was_alloc = self.tier[pages] != Tier.UNALLOCATED
+        self._tier[pages] = int(tier)
+        if tier == Tier.UNALLOCATED:
+            self._rss_pages -= int(np.count_nonzero(was_alloc))
+        else:
+            self._rss_pages += int(np.count_nonzero(~was_alloc))
+        self._sync_index(pages)
 
     # -------------------------------------------------------------- accesses
     def apply_accesses(
@@ -148,7 +584,7 @@ class TieredPagePool:
         counts: np.ndarray,
         touches: np.ndarray | None = None,
         touch_cap: int | None = None,
-    ) -> tuple[int, int]:
+    ) -> tuple[int, int, int, int, int, int]:
         """Record an interval's page accesses; allocate on first touch.
 
         ``counts`` are cache-line accesses (cost model); ``touches`` are
@@ -169,24 +605,17 @@ class TieredPagePool:
         touches = counts if touches is None else np.asarray(touches, dtype=np.int64)
         if pages.size == 0:
             return 0, 0, 0, 0, 0, 0
+        self._dq = None  # new touches change the demotion ranking
         # first-touch allocation for unallocated pages, in access order
-        new_mask = self.tier[pages] == Tier.UNALLOCATED
+        new_mask = self.tier[pages] == _UNALLOC
         if np.any(new_mask):
-            new_pages = pages[new_mask]
-            # TPP decouples allocation from reclaim: first-touch spills to
-            # the slow tier once free fast pages hit the low watermark,
-            # instead of stalling on the reclaim path.
-            budget = max(0, self.fast_free - self.watermarks.low_free)
-            n_fast = min(budget, new_pages.size)
-            self.tier[new_pages[:n_fast]] = Tier.FAST
-            self.tier[new_pages[n_fast:]] = Tier.SLOW
-            self.stats.alloc_fast += int(n_fast)
-            self.stats.alloc_slow += int(new_pages.size - n_fast)
+            self._first_touch_alloc(pages[new_mask])
         self.interval_acc[pages] += counts
         self.interval_touch[pages] += touches
+        self._touched.append(pages)
         tiers = self.tier[pages]
-        fast_m = tiers == Tier.FAST
-        slow_m = tiers == Tier.SLOW
+        fast_m = tiers == _FAST
+        slow_m = tiers == _SLOW
         pacc_f = int(counts[fast_m].sum())
         pacc_s = int(counts[slow_m].sum())
         rep = touches if touch_cap is None else np.minimum(touches, touch_cap)
@@ -200,11 +629,52 @@ class TieredPagePool:
         warm_touch_f = int(rep[warm_m].sum())
         return (pacc_f, pacc_s, ptouch_f, ptouch_s, warm_pages_f, warm_touch_f)
 
+    def _first_touch_alloc(self, new_pages: np.ndarray) -> None:
+        """Allocate ``new_pages`` (currently UNALLOCATED, in access order).
+
+        TPP decouples allocation from reclaim: first-touch spills to the
+        slow tier once free fast pages hit the low watermark, instead of
+        stalling on the reclaim path.
+        """
+        budget = max(0, self.fast_free - self.watermarks.low_free)
+        n_fast = min(budget, new_pages.size)
+        self._tier[new_pages[:n_fast]] = _FAST
+        self._tier[new_pages[n_fast:]] = _SLOW
+        self.stats.alloc_fast += int(n_fast)
+        self.stats.alloc_slow += int(new_pages.size - n_fast)
+        uniq = np.unique(new_pages)
+        self._rss_pages += int(uniq.size)
+        self._sync_index(uniq)
+
     def end_interval(self) -> None:
-        """Fold the interval counters into the decayed heat and reset."""
-        self.heat = self.heat * self.decay + self.interval_touch
-        self.interval_acc[:] = 0
-        self.interval_touch[:] = 0
+        """Fold the interval counters into the decayed heat and reset.
+
+        O(pages touched this interval): untouched pages keep an implicit
+        pending decay via their :class:`LazyHeat` stamp.
+        """
+        self._dq = None  # heat fold changes the demotion ranking
+        n_touched = sum(batch.size for batch in self._touched)
+        if n_touched >= self.num_pages // 8:
+            # dense interval: contiguous ops beat scattered ones well below
+            # 100% coverage (untouched interval_* entries are already zero)
+            self._heat.fold_dense(self.interval_touch)
+            self.interval_acc[:] = 0
+            self.interval_touch[:] = 0
+            self._touched.clear()
+        elif n_touched:
+            touched = (
+                self._touched[0]
+                if len(self._touched) == 1
+                else np.concatenate(self._touched)
+            )
+            # duplicate ids are fine: fancy assignment gathers the operands
+            # first, so a page folds once no matter how often it appears
+            self._heat.fold(touched, self.interval_touch[touched])
+            self.interval_acc[touched] = 0
+            self.interval_touch[touched] = 0
+            self._touched.clear()
+        else:
+            self._heat.fold(np.empty(0, np.int64), np.empty(0, np.int64))
 
     # ------------------------------------------------------------- migration
     def promote(self, pages: np.ndarray) -> tuple[int, int]:
@@ -215,39 +685,129 @@ class TieredPagePool:
         ``(n_promoted, n_failed)``.
         """
         pages = np.asarray(pages, dtype=np.int64)
-        pages = pages[self.tier[pages] == Tier.SLOW]
+        pages = pages[self.tier[pages] == _SLOW]
         if pages.size == 0:
             return 0, 0
-        order = np.argsort(-self.heat[pages], kind="stable")
-        pages = pages[order]
         free = self.fast_free
-        n_ok = min(free, pages.size)
-        self.tier[pages[:n_ok]] = Tier.FAST
+        if pages.size <= free:
+            # every page fits: the hottest-first ranking cannot change the
+            # outcome, so skip it (the policy promotes headroom-sized
+            # chunks, making this the common case)
+            n_ok = pages.size
+            winners = pages
+        else:
+            order = np.argsort(-self._heat.current(pages), kind="stable")
+            pages = pages[order]
+            n_ok = free
+            winners = pages[:n_ok]
+        self._tier[winners] = _FAST
+        if n_ok:
+            uniq = np.unique(winners)
+            self._fast_used += uniq.size
+            if self._grank_box is not None:
+                # newly-fast pages may rank colder than the cursor: rewind
+                # (sweep mode: the ranking replaces the fast index); only
+                # a materialized ranking has a cursor to protect
+                g = self._grank_box.peek()
+                if g is not None:
+                    self._gptr = min(self._gptr, int(g.rank[uniq].min()))
+            else:
+                # winners were slow, hence not in the fast index: direct add
+                self._fast.add(uniq)
+                if self._dq is not None:
+                    # mid-interval promotions join the active victim queue
+                    self._dq.add_pending(
+                        uniq,
+                        self._heat.lookahead(uniq)
+                        + self.interval_touch[uniq],
+                    )
+        n_fail = pages.size - n_ok
+        self.stats.pgpromote_success += int(n_ok)
+        self.stats.pgpromote_fail += int(n_fail)
+        return int(n_ok), int(n_fail)
+
+    def _promote_cand(self, pages: np.ndarray) -> tuple[int, int]:
+        """:meth:`promote` minus the slow-filter and duplicate guard, for
+        policy promotion chunks whose invariants (unique ids, all currently
+        slow) the caller has verified. Outcome-identical to ``promote``."""
+        if pages.size == 0:
+            return 0, 0
+        free = self.fast_free
+        if pages.size <= free:
+            n_ok = pages.size
+            winners = pages
+        else:
+            order = np.argsort(-self._heat.current(pages), kind="stable")
+            winners = pages[order][:free]
+            n_ok = free
+        self._tier[winners] = _FAST
+        if n_ok:
+            self._fast_used += n_ok
+            if self._grank_box is not None:
+                # sweep mode: the ranking replaces the fast index entirely;
+                # only a materialized ranking has a cursor to protect
+                g = self._grank_box.peek()
+                if g is not None:
+                    self._gptr = min(self._gptr, int(g.rank[winners].min()))
+            else:
+                self._fast.add(winners)
+                if self._dq is not None:
+                    self._dq.add_pending(
+                        winners,
+                        self._heat.lookahead(winners)
+                        + self.interval_touch[winners],
+                    )
         n_fail = pages.size - n_ok
         self.stats.pgpromote_success += int(n_ok)
         self.stats.pgpromote_fail += int(n_fail)
         return int(n_ok), int(n_fail)
 
     def demote_coldest(self, n: int, direct: bool = False) -> int:
-        """Demote up to ``n`` coldest fast pages (fast→slow)."""
+        """Demote up to ``n`` coldest fast pages (fast→slow).
+
+        Victims are the ``n`` lexicographically smallest fast pages by
+        (effective heat, page id) — exactly the set the reference
+        implementation's stable full sort picks, but served from a
+        per-interval :class:`_DemoteQueue` built over the fast index only:
+        one ranking pass amortizes across every reclaim invocation of the
+        interval, and no RSS-wide scan ever happens.
+        """
         if n <= 0:
             return 0
-        fast_pages = np.flatnonzero(self.tier == Tier.FAST)
-        if fast_pages.size == 0:
+        size = self._fast_used
+        if size == 0:
             return 0
-        n = min(n, fast_pages.size)
-        # rank victims by *effective* heat (decayed history + the current
-        # interval's touches), so pages promoted moments ago are not the
-        # first demotion victims
-        eff_heat = self.heat[fast_pages] * self.decay + self.interval_touch[fast_pages]
-        order = np.argsort(eff_heat, kind="stable")
-        victims = fast_pages[order[:n]]
-        self.tier[victims] = Tier.SLOW
-        if direct:
-            self.stats.pgdemote_direct += int(n)
+        n = min(n, size)
+        if self._grank_box is not None:
+            # sweep mode: consume the shared interval-wide ranking
+            victims, self._gptr = self._grank_box.get().walk(
+                self.tier, self._gptr, n
+            )
         else:
-            self.stats.pgdemote_kswapd += int(n)
-        return int(n)
+            # rebuild when mid-interval promotions dominate the queue: the
+            # ranking inputs are interval-constant, so a rebuild selects
+            # the same victims while restoring cheap front-slice pops
+            if self._dq is None or self._dq.pend_n > max(4 * n, 4096):
+                ids = self._fast.members().copy()
+                # rank victims by *effective* heat (decayed history + the
+                # current interval's touches), so pages promoted moments
+                # ago are not the first demotion victims
+                eff = self._heat.lookahead(ids) + self.interval_touch[ids]
+                self._dq = _DemoteQueue(ids, eff, want=2 * n)
+            victims = self._dq.pop(n)
+        self._tier[victims] = _SLOW
+        if self._grank_box is None:
+            self._fast.remove(victims)
+        # victims.size == n whenever the occupancy invariants hold; using
+        # the realized count keeps the stats self-consistent even if an
+        # external caller corrupted them
+        n_done = int(victims.size)
+        self._fast_used -= n_done
+        if direct:
+            self.stats.pgdemote_direct += n_done
+        else:
+            self.stats.pgdemote_kswapd += n_done
+        return n_done
 
     def run_reclaim(self, allow_direct: bool = False) -> tuple[int, int]:
         """Watermark-driven reclaim, paper Section 4.
@@ -279,4 +839,189 @@ class TieredPagePool:
 
     # ------------------------------------------------------------- telemetry
     def heat_of(self, pages: np.ndarray) -> np.ndarray:
-        return self.heat[np.asarray(pages, dtype=np.int64)]
+        return self._heat.current(np.asarray(pages, dtype=np.int64))
+
+    # ------------------------------------------------------- bulk policy step
+    def _try_bulk_step(self, cand: np.ndarray):
+        """Whole-policy-step fast path for :class:`~repro.tiering.policy.
+        TPPPolicy`: returns ``(pm_pr, pm_de, pm_fail, direct)`` or ``None``
+        when the chunked loop must run.
+
+        The TPP promote/reclaim interleaving is a scalar recurrence over
+        ``fast_free`` and the watermarks — chunk sizes, reclaim amounts and
+        failure counts never look at page identity. So the whole step's
+        schedule is first computed with plain integers, and the array work
+        is applied once: promotions are a prefix of ``cand`` (every chunk
+        fits its headroom by construction) and victims are the front of the
+        demotion queue. That victim identity is only correct if no page
+        promoted *during this step* would have been selected — guaranteed
+        exactly when the coldest candidate is strictly hotter than the
+        queue's ``D``-th entry (ties fall back, preserving id order).
+        ``cand`` must be unique (the caller checks).
+        """
+        box = self._grank_box
+        dq = None
+        if box is None:
+            dq = self._dq
+            if dq is None:
+                ids = self._fast.members().copy()
+                eff = self._heat.lookahead(ids) + self.interval_touch[ids]
+                self._dq = dq = _DemoteQueue(
+                    ids, eff, want=2 * self.kswapd_batch
+                )
+            elif dq.pend_n:
+                return None  # pending entries from outside a policy step
+        # --- scalar schedule (mirrors TPPPolicy.step_hot_sorted exactly)
+        wm = self.watermarks
+        free = self.fast_free
+        fast_count = self._fast_used
+        n_cand = int(cand.size)
+        done = pm_de = pm_fail = direct_total = events = 0
+        d_demand = 0
+        while done < n_cand:
+            headroom = free - wm.min_free
+            if headroom <= 0:
+                # run_reclaim(allow_direct=True)
+                if free < wm.min_free:
+                    n = min(wm.min_free - free, fast_count)
+                    if n > 0:
+                        d_demand += n
+                        fast_count -= n
+                        free += n
+                        pm_de += n
+                        direct_total += n
+                    events += 1
+                if free < wm.low_free:
+                    n = min(wm.high_free - free, self.kswapd_batch, fast_count)
+                    if n > 0:
+                        d_demand += n
+                        fast_count -= n
+                        free += n
+                        pm_de += n
+                headroom = free - wm.min_free
+                if headroom <= 0:
+                    pm_fail = n_cand - done
+                    break
+            chunk = min(headroom, n_cand - done)
+            done += chunk
+            free -= chunk
+            fast_count += chunk
+        # final run_reclaim() — kswapd only
+        if free < wm.low_free:
+            n = min(wm.high_free - free, self.kswapd_batch, fast_count)
+            if n > 0:
+                d_demand += n
+                fast_count -= n
+                free += n
+                pm_de += n
+        pm_pr = done
+        # --- validity: every victim must come from the pre-step fast tier
+        eff_cand = None
+        victims = None
+        new_ptr = self._gptr
+        if d_demand:
+            if box is not None:
+                g = box.get()
+                victims, new_ptr = g.walk(self.tier, self._gptr, d_demand)
+                if victims.size < d_demand:
+                    return None
+                if pm_pr and float(g.eff[cand[:pm_pr]].min()) <= float(
+                    g.eff[victims[-1]]
+                ):
+                    return None  # a promoted page could be (tie-)selected
+            else:
+                dq._ensure(d_demand)
+                if dq.ids.size - dq.pos < d_demand:
+                    return None  # demand dips into this step's promotions
+                if pm_pr:
+                    eff_cand = (
+                        self._heat.lookahead(cand) + self.interval_touch[cand]
+                    )
+                    if float(eff_cand[:pm_pr].min()) <= dq.eff[
+                        dq.pos + d_demand - 1
+                    ]:
+                        return None  # a promoted page could be (tie-)selected
+        # --- commit: one batched demote + one batched (prefix) promote
+        if d_demand:
+            if box is not None:
+                self._gptr = new_ptr
+            else:
+                victims = dq.pop(d_demand)
+                self._fast.remove(victims)
+            self._tier[victims] = _SLOW
+            self._fast_used -= d_demand
+            self.stats.pgdemote_direct += direct_total
+            self.stats.pgdemote_kswapd += pm_de - direct_total
+        self.stats.direct_reclaim_events += events
+        if pm_pr:
+            winners = cand[:pm_pr]
+            self._tier[winners] = _FAST
+            self._fast_used += pm_pr
+            if box is not None:
+                g = box.peek()
+                if g is not None:
+                    self._gptr = min(self._gptr, int(g.rank[winners].min()))
+            else:
+                self._fast.add(winners)
+                if eff_cand is None:
+                    dq.add_pending(
+                        winners,
+                        self._heat.lookahead(winners)
+                        + self.interval_touch[winners],
+                    )
+                else:
+                    dq.add_pending(winners, eff_cand[:pm_pr])
+        self.stats.pgpromote_success += pm_pr
+        self.stats.pgpromote_fail += pm_fail
+        return pm_pr, pm_de, pm_fail, direct_total
+
+    # ------------------------------------------------------------- sweep glue
+    @classmethod
+    def _shared_slice(
+        cls,
+        *,
+        tier_row: np.ndarray,
+        heat: LazyHeat,
+        interval_acc: np.ndarray,
+        interval_touch: np.ndarray,
+        hw_capacity: int,
+        page_bytes: int,
+        kswapd_batch: int | None,
+        seed: int = 0,
+    ) -> "TieredPagePool":
+        """Internal constructor for :mod:`repro.sim.sweep`: a pool whose
+        ``tier`` is one row of a stacked ``[n_sizes, rss_pages]`` array and
+        whose heat/interval counters are shared across all sizes (page
+        touches are trace-driven, hence identical at every fast-memory
+        size). The sweep driver owns interval bookkeeping: calling
+        ``end_interval``/``apply_accesses`` on a slice pool is unsupported.
+        """
+        num_pages = tier_row.shape[0]
+        pool = cls.__new__(cls)
+        pool.num_pages = int(num_pages)
+        pool.hw_capacity = int(hw_capacity)
+        pool.page_bytes = int(page_bytes)
+        pool.kswapd_batch = (
+            int(kswapd_batch)
+            if kswapd_batch is not None
+            else max(128, pool.hw_capacity // 64)
+        )
+        pool._tier = tier_row
+        pool.tier = tier_row.view()
+        pool.tier.flags.writeable = False
+        pool.decay = heat.decay
+        pool._heat = heat
+        pool.interval_acc = interval_acc
+        pool.interval_touch = interval_touch
+        pool.watermarks = Watermarks.for_size(pool.hw_capacity, pool.hw_capacity)
+        pool.stats = PoolStats()
+        pool._rng = np.random.default_rng(seed)
+        pool._fast = None  # the shared ranking replaces the fast index
+        pool._fast_used = 0
+        pool._rss_pages = 0
+        pool._touched = []
+        pool._dq = None
+        pool._grank_box = None
+        pool._gptr = 0
+        pool._owns_interval_state = False
+        return pool

@@ -62,7 +62,6 @@ class TPPPolicy:
         hot_thr: int | None = None,
     ) -> PolicyOutcome:
         thr = self.hot_thr if hot_thr is None else int(hot_thr)
-        out = PolicyOutcome()
         touched = np.asarray(touched, dtype=np.int64)
         # TPP-style: promotion is decided on fault-like touch events within
         # the profiling window (pool.interval_touch at policy time); the
@@ -70,16 +69,53 @@ class TPPPolicy:
         acc_now = pool.interval_touch[touched]
         cand_mask = (pool.tier[touched] == Tier.SLOW) & (acc_now >= thr)
         cand = touched[cand_mask]
+        hottest_first = np.argsort(-acc_now[cand_mask], kind="stable")
+        cand = cand[hottest_first]
+        assume_unique = bool(
+            cand.size
+            and hasattr(pool, "_try_bulk_step")
+            and np.unique(cand).size == cand.size
+        )
+        return self.step_hot_sorted(pool, cand, assume_unique=assume_unique)
+
+    def step_hot_sorted(
+        self,
+        pool: TieredPagePool,
+        cand: np.ndarray,
+        assume_unique: bool = False,
+    ) -> PolicyOutcome:
+        """Run the promotion/reclaim loop on presorted candidates.
+
+        ``cand`` must be the interval's promotion candidates (slow tier,
+        touches >= hot_thr), hottest first with a *stable* tie order — what
+        :meth:`step` computes itself, and what the batched sweep engine
+        precomputes once per interval and mask-filters per fast-memory size
+        (a subset of a stably sorted sequence keeps the stable order).
+        With ``assume_unique`` (the caller has verified ``cand`` holds no
+        duplicate ids) the pool's bulk fast path may execute the whole
+        promote/reclaim schedule in O(1) array operations; it declines —
+        and the chunked loop below runs — whenever its victim-identity
+        precondition does not hold.
+        """
+        out = PolicyOutcome()
         if self.promote_batch is not None and cand.size > self.promote_batch:
-            order = np.argsort(-acc_now[cand_mask])
-            cand = cand[order[: self.promote_batch]]
+            cand = cand[: self.promote_batch]
+        promote = pool.promote
+        if assume_unique:
+            bulk = getattr(pool, "_try_bulk_step", None)
+            if bulk is not None:
+                res = bulk(cand)
+                if res is not None:
+                    out.pm_pr, out.pm_de, out.pm_fail, out.direct_reclaim = res
+                    return out
+            # chunked fallback: the promotion chunks inherit cand's
+            # verified invariants (unique, all slow)
+            promote = getattr(pool, "_promote_cand", pool.promote)
         # Promotion is interleaved with background reclaim (TPP decouples
         # allocation and reclaim): promote only into the headroom above the
         # min watermark, let kswapd restore the watermark, repeat. Direct
         # (blocking) reclaim happens only when kswapd's rate limit cannot
         # keep up with the promotion demand.
-        hottest_first = np.argsort(-acc_now[cand_mask], kind="stable")
-        cand = cand[hottest_first]
         done = 0
         while done < cand.size:
             headroom = max(0, pool.fast_free - pool.watermarks.min_free)
@@ -93,7 +129,7 @@ class TPPPolicy:
                     out.pm_fail += cand.size - done
                     break
             chunk = cand[done : done + headroom]
-            n_ok, n_fail = pool.promote(chunk)
+            n_ok, n_fail = promote(chunk)
             out.pm_pr += n_ok
             out.pm_fail += n_fail
             done += chunk.size

@@ -1,0 +1,240 @@
+"""Reference (seed) implementation of the tiered page pool.
+
+This is the original dense-scan implementation, kept verbatim as the
+**golden model** for the incremental pool in
+:mod:`repro.tiering.page_pool`: ``O(RSS)`` tier counting, eager dense heat
+decay in ``end_interval``, and full-sort victim selection in
+``demote_coldest``. It is intentionally slow — the equivalence tests
+(``tests/test_engine_equivalence.py``) assert that the optimized pool
+reproduces its migration counters and interval times exactly, and the
+engine benchmark (``benchmarks/bench_engine.py``) uses it as the "before"
+measurement. Do not optimize this module.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.tiering.page_pool import PoolStats, Tier, Watermarks
+
+
+class ReferencePagePool:
+    """Seed two-tier page pool (dense scans; golden model for equivalence).
+
+    Parameters
+    ----------
+    num_pages:
+        Total addressable pages (the workload RSS in pages).
+    hw_capacity:
+        Fast-tier hardware capacity in pages (HBM size). The *effective*
+        capacity is whatever the watermarks currently allow.
+    page_bytes:
+        Page size in bytes (migration traffic unit).
+    hotness_halflife:
+        Intervals over which historical access counts decay by half; the
+        promotion threshold compares against the decayed counter, which
+        approximates TPP's active/inactive LRU lists without per-access
+        list manipulation.
+    """
+
+    def __init__(
+        self,
+        num_pages: int,
+        hw_capacity: int,
+        page_bytes: int = 4096,
+        hotness_halflife: float = 2.0,
+        kswapd_batch: int | None = None,
+        seed: int = 0,
+    ) -> None:
+        if num_pages <= 0 or hw_capacity <= 0:
+            raise ValueError("num_pages and hw_capacity must be positive")
+        self.num_pages = int(num_pages)
+        self.hw_capacity = int(hw_capacity)
+        self.page_bytes = int(page_bytes)
+        # kswapd demotion budget per reclaim invocation: background reclaim
+        # is rate-limited, which is what lets promotions outrun it and fail
+        # (the paper's migration-failure mechanism).
+        self.kswapd_batch = (
+            int(kswapd_batch)
+            if kswapd_batch is not None
+            else max(128, self.hw_capacity // 64)
+        )
+        self.tier = np.full(self.num_pages, int(Tier.UNALLOCATED), dtype=np.int8)
+        # decayed touch counter (float for EMA decay) — policy-visible heat
+        self.heat = np.zeros(self.num_pages, dtype=np.float64)
+        # cache-line accesses in the *current* interval (telemetry/cost)
+        self.interval_acc = np.zeros(self.num_pages, dtype=np.int64)
+        # fault-like touch events in the current interval (policy input)
+        self.interval_touch = np.zeros(self.num_pages, dtype=np.int64)
+        self.decay = 0.5 ** (1.0 / max(hotness_halflife, 1e-9))
+        self.watermarks = Watermarks.for_size(self.hw_capacity, self.hw_capacity)
+        self.stats = PoolStats()
+        self._rng = np.random.default_rng(seed)
+
+    # ------------------------------------------------------------------ state
+    @property
+    def fast_used(self) -> int:
+        return int(np.count_nonzero(self.tier == Tier.FAST))
+
+    @property
+    def fast_free(self) -> int:
+        return self.hw_capacity - self.fast_used
+
+    @property
+    def rss_pages(self) -> int:
+        return int(np.count_nonzero(self.tier != Tier.UNALLOCATED))
+
+    @property
+    def effective_fm_size(self) -> int:
+        """Fast-memory size currently permitted by the watermarks."""
+        return self.hw_capacity - self.watermarks.low_free
+
+    def set_fm_size(self, new_fm_pages: int) -> None:
+        """Retune the fast-tier size via watermarks (paper Section 4)."""
+        self.watermarks = Watermarks.for_size(self.hw_capacity, new_fm_pages)
+
+    def place(self, pages: np.ndarray, tier: Tier) -> None:
+        """Explicitly allocate ``pages`` into ``tier`` (numactl/membind
+        analogue — the micro-benchmark places its slow array this way)."""
+        pages = np.asarray(pages, dtype=np.int64)
+        self.tier[pages] = int(tier)
+
+    # -------------------------------------------------------------- accesses
+    def apply_accesses(
+        self,
+        pages: np.ndarray,
+        counts: np.ndarray,
+        touches: np.ndarray | None = None,
+        touch_cap: int | None = None,
+    ) -> tuple[int, int]:
+        """Record an interval's page accesses; allocate on first touch.
+
+        ``counts`` are cache-line accesses (cost model); ``touches`` are
+        fault-like events the policy thresholds on and the profiler reports
+        as ``pacc``. ``touch_cap`` saturates the *reported* per-page touch
+        count — NUMA-hint-fault sampling unmaps a page once per scan
+        period, so the observable signal saturates around the promotion
+        threshold; this is why the paper's Eq. 3
+        ``NP_fast = pacc_f / hot_thr`` always stays within RSS. Returns
+        ``(pacc_fast_cl, pacc_slow_cl, ptouch_fast, ptouch_slow,
+        warm_pages_fast, warm_touches_fast)``.
+        First-touch allocation follows the NUMA policy the paper describes:
+        fast tier while free pages remain above the low watermark, then
+        spill to slow.
+        """
+        pages = np.asarray(pages, dtype=np.int64)
+        counts = np.asarray(counts, dtype=np.int64)
+        touches = counts if touches is None else np.asarray(touches, dtype=np.int64)
+        if pages.size == 0:
+            return 0, 0, 0, 0, 0, 0
+        # first-touch allocation for unallocated pages, in access order
+        new_mask = self.tier[pages] == Tier.UNALLOCATED
+        if np.any(new_mask):
+            new_pages = pages[new_mask]
+            # TPP decouples allocation from reclaim: first-touch spills to
+            # the slow tier once free fast pages hit the low watermark,
+            # instead of stalling on the reclaim path.
+            budget = max(0, self.fast_free - self.watermarks.low_free)
+            n_fast = min(budget, new_pages.size)
+            self.tier[new_pages[:n_fast]] = Tier.FAST
+            self.tier[new_pages[n_fast:]] = Tier.SLOW
+            self.stats.alloc_fast += int(n_fast)
+            self.stats.alloc_slow += int(new_pages.size - n_fast)
+        self.interval_acc[pages] += counts
+        self.interval_touch[pages] += touches
+        tiers = self.tier[pages]
+        fast_m = tiers == Tier.FAST
+        slow_m = tiers == Tier.SLOW
+        pacc_f = int(counts[fast_m].sum())
+        pacc_s = int(counts[slow_m].sum())
+        rep = touches if touch_cap is None else np.minimum(touches, touch_cap)
+        ptouch_f = int(rep[fast_m].sum())
+        ptouch_s = int(rep[slow_m].sum())
+        # the graded warm tail in the fast tier: pages observed below the
+        # promotion threshold — carried as micro-benchmark shaping metadata
+        cap = touch_cap if touch_cap is not None else 4
+        warm_m = fast_m & (rep < cap)
+        warm_pages_f = int(np.count_nonzero(warm_m))
+        warm_touch_f = int(rep[warm_m].sum())
+        return (pacc_f, pacc_s, ptouch_f, ptouch_s, warm_pages_f, warm_touch_f)
+
+    def end_interval(self) -> None:
+        """Fold the interval counters into the decayed heat and reset."""
+        self.heat = self.heat * self.decay + self.interval_touch
+        self.interval_acc[:] = 0
+        self.interval_touch[:] = 0
+
+    # ------------------------------------------------------------- migration
+    def promote(self, pages: np.ndarray) -> tuple[int, int]:
+        """Attempt to promote ``pages`` (slow→fast), hottest first.
+
+        Promotions beyond the free fast capacity *fail* (TPP counts these as
+        migration failures when reclaim cannot keep up). Returns
+        ``(n_promoted, n_failed)``.
+        """
+        pages = np.asarray(pages, dtype=np.int64)
+        pages = pages[self.tier[pages] == Tier.SLOW]
+        if pages.size == 0:
+            return 0, 0
+        order = np.argsort(-self.heat[pages], kind="stable")
+        pages = pages[order]
+        free = self.fast_free
+        n_ok = min(free, pages.size)
+        self.tier[pages[:n_ok]] = Tier.FAST
+        n_fail = pages.size - n_ok
+        self.stats.pgpromote_success += int(n_ok)
+        self.stats.pgpromote_fail += int(n_fail)
+        return int(n_ok), int(n_fail)
+
+    def demote_coldest(self, n: int, direct: bool = False) -> int:
+        """Demote up to ``n`` coldest fast pages (fast→slow)."""
+        if n <= 0:
+            return 0
+        fast_pages = np.flatnonzero(self.tier == Tier.FAST)
+        if fast_pages.size == 0:
+            return 0
+        n = min(n, fast_pages.size)
+        # rank victims by *effective* heat (decayed history + the current
+        # interval's touches), so pages promoted moments ago are not the
+        # first demotion victims
+        eff_heat = self.heat[fast_pages] * self.decay + self.interval_touch[fast_pages]
+        order = np.argsort(eff_heat, kind="stable")
+        victims = fast_pages[order[:n]]
+        self.tier[victims] = Tier.SLOW
+        if direct:
+            self.stats.pgdemote_direct += int(n)
+        else:
+            self.stats.pgdemote_kswapd += int(n)
+        return int(n)
+
+    def run_reclaim(self, allow_direct: bool = False) -> tuple[int, int]:
+        """Watermark-driven reclaim, paper Section 4.
+
+        The periodic (interval) invocation is always the kswapd path —
+        background, rate-limited, non-blocking — which is the whole point
+        of actuating size changes through watermarks: shrinking fast
+        memory must not stall the application. Direct (blocking) reclaim
+        only happens on the *allocation/promotion* path when a caller
+        needs space synchronously (``allow_direct=True``) and kswapd has
+        fallen behind the min watermark.
+
+        Returns ``(demoted_background, demoted_direct)``.
+        """
+        demoted_bg = demoted_direct = 0
+        free = self.fast_free
+        if allow_direct and free < self.watermarks.min_free:
+            demoted_direct = self.demote_coldest(
+                self.watermarks.min_free - free, direct=True
+            )
+            self.stats.direct_reclaim_events += 1
+            free = self.fast_free
+        if free < self.watermarks.low_free:
+            # kswapd: background reclaim toward the high watermark, rate
+            # limited per invocation
+            want = min(self.watermarks.high_free - free, self.kswapd_batch)
+            demoted_bg = self.demote_coldest(want)
+        return demoted_bg, demoted_direct
+
+    # ------------------------------------------------------------- telemetry
+    def heat_of(self, pages: np.ndarray) -> np.ndarray:
+        return self.heat[np.asarray(pages, dtype=np.int64)]

@@ -69,7 +69,7 @@ class TestTPP:
         pool = make_pool(num_pages=100, cap=10)
         pool.place(np.arange(100), Tier.SLOW)
         # fill fast completely
-        pool.tier[:10] = Tier.FAST
+        pool.place(np.arange(10), Tier.FAST)
         policy = TPPPolicy(hot_thr=2)
         cand = np.arange(50, 70)
         pool.apply_accesses(cand, np.full(20, 5, dtype=np.int64))
