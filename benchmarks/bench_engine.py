@@ -1,6 +1,7 @@
 """Engine performance harness: seed implementation vs incremental + sweep.
 
-Measures the ``build_bench_db`` path end to end, seed vs current engine:
+Measures the ``build_bench_db`` path and the TPP+Tuna closed-loop path end
+to end, seed vs current engine:
 
 1. **harvest** — collecting per-interval configuration vectors from an
    application trace at every probe fast-memory size. Seed: one
@@ -10,13 +11,33 @@ Measures the ``build_bench_db`` path end to end, seed vs current engine:
    operating points. Seed: serial per-(config, fm_frac) reference-pool
    loop. New: :func:`repro.core.tuner.build_database`'s batched sweep
    engine with process fan-out.
+3. **tuned path** — the paper's headline evaluation loop (TPP+Tuna,
+   Figs. 3-8 / Tables 2-3): one closed-loop run per loss target. Seed:
+   per-target ``simulate(..., tuner=...)`` over the reference pool. New:
+   one :func:`repro.sim.sweep.sweep_tuned` pass carrying every target's
+   tuner as a live slice.
 
 Plus single-run engine throughput (intervals/sec) on the application
-trace. Both paths are asserted to produce bit-identical configuration
-vectors and execution records before timing, so the speedup can never
-come from computing something else. Results are appended as report rows
-and persisted to ``BENCH_engine.json`` at the repo root so later PRs can
-track the trajectory.
+trace. Every path is asserted to produce bit-identical outputs (config
+vectors, execution records, migration counters, interval times, fm-size
+trajectories) before timing, so the speedup can never come from computing
+something else. Results are appended as report rows and persisted to
+``BENCH_engine.json`` at the repo root so later PRs can track the
+trajectory.
+
+CI quick mode / bench gate
+--------------------------
+``python -m benchmarks.bench_engine --quick`` runs a scaled-down
+configuration (same code paths, smaller trace / fewer repeats) suitable
+for a CI job; ``--gate BENCH_engine.json`` then compares the fresh
+quick-mode timings against the committed baseline's ``quick_baseline``
+section and exits non-zero on a >25% regression. The gate compares the
+**new/seed wall-clock ratio** rather than absolute seconds: both sides
+run on the same machine in the same job, so the ratio cancels runner
+speed while still failing when the optimized path regresses relative to
+the frozen seed implementation. ``--update-baseline`` refreshes the
+committed baseline's ``quick_baseline`` section in place (run it on a
+CI-class 2-core box).
 
 The application trace is a self-contained deterministic stand-in for the
 benchmark workloads (xsbench-scale RSS, skewed reuse, a migrating hot
@@ -28,6 +49,7 @@ from __future__ import annotations
 import json
 import os
 import time
+from dataclasses import dataclass
 from pathlib import Path
 
 import numpy as np
@@ -35,9 +57,10 @@ import numpy as np
 from benchmarks.common import DB_FM_FRACS, _representative_from, steady_from
 from repro.core.microbench import generate_microbench
 from repro.core.trace import IntervalAccess, Trace
-from repro.core.tuner import build_database, scale_config
+from repro.core.tuner import TunaTuner, TunerConfig, build_database, scale_config
+from repro.core.watermark import WatermarkController
 from repro.sim.engine import simulate
-from repro.sim.sweep import sweep_fm_fracs
+from repro.sim.sweep import TunedSlice, sweep_fm_fracs, sweep_tuned
 from repro.tiering.page_pool import TieredPagePool
 from repro.tiering.reference_pool import ReferencePagePool
 
@@ -50,20 +73,53 @@ OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_engine.json"
 REP_FRACS = (1.0, 0.95, 0.9, 0.8)
 PROBE_FRACS = (1.0, 0.9, 0.75, 0.6, 0.45, 0.3)
 HARVEST_FRACS = tuple(sorted(set(REP_FRACS + PROBE_FRACS), reverse=True))
-N_INTERVALS = 12
-MAX_RSS = 20_000
 
 
-def _app_trace(rss: int = 40_000, n_intervals: int = 100, seed: int = 7) -> Trace:
+@dataclass(frozen=True)
+class BenchParams:
+    """One benchmark configuration (full trajectory run vs CI quick run)."""
+
+    quick: bool
+    app_rss: int = 40_000
+    app_intervals: int = 100
+    n_intervals: int = 12  # micro-benchmark intervals per db record
+    max_rss: int = 20_000
+    repeats: int = 5  # best-of repeats for the timed sections
+    # the tuned path's sections are short (hundreds of ms); more best-of
+    # repeats ride out multi-second CPU-steal bursts on shared runners
+    tuned_repeats: int = 6
+    ips_repeats: int = 3
+    max_configs: int | None = None  # cap on db operating points
+    # loss-target vector for the closed-loop path: spread like the
+    # Table 3 sensitivity sweep so the tuners actually shrink/grow
+    tuned_targets: tuple = (0.02, 0.05, 0.10, 0.15, 0.25)
+    tune_every: int = 3
+
+
+FULL = BenchParams(quick=False)
+QUICK = BenchParams(
+    quick=True,
+    app_rss=16_000,
+    app_intervals=48,
+    n_intervals=8,
+    max_rss=10_000,
+    repeats=4,
+    ips_repeats=2,
+    max_configs=6,
+)
+
+
+def _app_trace(rss: int, n_intervals: int, seed: int = 7) -> Trace:
     """Deterministic workload-like trace: a skewed-reuse resident set plus
     a hot front that migrates through the RSS (what makes pages churn).
     Sized like the xsbench benchmark workload (~26 K touched pages per
-    interval over a 40 K-page RSS, ~100 intervals)."""
+    interval over a 40 K-page RSS, ~100 intervals) in full mode."""
     rng = np.random.default_rng(seed)
     tr = Trace(name="bench_app", rss_pages=rss, num_threads=4)
     hot = rng.permutation(rss)[: (2 * rss) // 3]
+    front_n = rss // 10
     for i in range(n_intervals):
-        front = (np.arange(4000) + i * 997) % rss
+        front = (np.arange(front_n) + i * 997) % rss
         reuse = hot[rng.random(hot.size) < 0.85]
         pages = np.unique(np.concatenate([front, reuse]))
         counts = rng.integers(1, 8, size=pages.size)
@@ -87,7 +143,7 @@ def _new_harvest(trace: Trace):
     return {float(f): c for f, c in zip(res.fm_fracs, res.configs)}
 
 
-def _operating_points(trace: Trace, by_frac) -> list:
+def _operating_points(trace: Trace, by_frac, max_configs: int | None) -> list:
     configs = [
         _representative_from(steady_from(by_frac[f]), trace)
         for f in (1.0, 0.9, 0.8)
@@ -95,10 +151,10 @@ def _operating_points(trace: Trace, by_frac) -> list:
     for f in (0.75, 0.6, 0.45, 0.3):
         steady = steady_from(by_frac[f])
         configs.extend(steady[:: max(1, len(steady) // 2)][:2])
-    return configs
+    return configs[:max_configs] if max_configs else configs
 
 
-def _seed_build(configs):
+def _seed_build(configs, p: BenchParams):
     """The seed ``build_database``: one reference-pool ``simulate()`` per
     (config, fm_frac), serial — timing baseline AND record oracle."""
     from repro.core.perfdb import PerfDB, PerfRecord
@@ -106,7 +162,7 @@ def _seed_build(configs):
     db = PerfDB()
     for cv in configs:
         trace = generate_microbench(
-            scale_config(cv, MAX_RSS), n_intervals=N_INTERVALS
+            scale_config(cv, p.max_rss), n_intervals=p.n_intervals
         )
         times = np.empty(DB_FM_FRACS.shape, dtype=np.float64)
         for i, f in enumerate(DB_FM_FRACS):
@@ -124,17 +180,63 @@ def _seed_build(configs):
     return db
 
 
+def _new_build(configs, p: BenchParams):
+    # build_database picks serial vs process fan-out itself (None = auto);
+    # that choice is part of the path under test
+    return build_database(
+        configs, fm_fracs=DB_FM_FRACS, n_intervals=p.n_intervals,
+        max_rss_pages=p.max_rss, workers=None,
+    )
+
+
+def _mk_tuner(db, tau: float) -> TunaTuner:
+    # k_neighbors=1: the bench db is deliberately tiny, and k-NN averaging
+    # over it mixes distant records into every query — with k=1 the tuner
+    # follows the nearest record's curve and genuinely actuates (watermark
+    # moves + migrations), which is the behaviour worth timing
+    return TunaTuner(
+        db,
+        WatermarkController(max_step_frac=0.05),
+        TunerConfig(target_loss=tau, cooldown_windows=3, k_neighbors=1),
+    )
+
+
+def _per_size_tuned(trace: Trace, db, p: BenchParams, pool_factory):
+    """The pre-sweep TPP+Tuna path: one closed-loop ``simulate()`` per
+    loss target (what Figs. 3-8 / Tables 2-3 ran before the tuned sweep),
+    over the seed pool (``ReferencePagePool``) or the incremental one."""
+    return [
+        simulate(
+            trace, fm_frac=1.0, tuner=_mk_tuner(db, tau),
+            tune_every=p.tune_every, pool_factory=pool_factory,
+        )
+        for tau in p.tuned_targets
+    ]
+
+
+def _new_tuned(trace: Trace, db, p: BenchParams):
+    """New TPP+Tuna path: every target's tuner rides one batched sweep."""
+    return sweep_tuned(
+        trace,
+        [
+            TunedSlice(1.0, _mk_tuner(db, tau), p.tune_every)
+            for tau in p.tuned_targets
+        ],
+    )
+
+
 def _timed(fn) -> float:
+    import gc
+
+    gc.collect()  # don't charge the previous section's garbage to this one
     t0 = time.perf_counter()
     fn()
     return time.perf_counter() - t0
 
 
-def run(report) -> None:
-    trace = _app_trace()
-    # build_database picks serial vs process fan-out itself (None = auto);
-    # that choice is part of the path under test
-    workers = None
+def run(report, params: BenchParams = FULL) -> dict:
+    p = params
+    trace = _app_trace(p.app_rss, p.app_intervals)
 
     # --- correctness gates: identical harvest vectors, identical records
     by_frac_seed = _seed_harvest(trace)
@@ -142,76 +244,214 @@ def run(report) -> None:
     for f in HARVEST_FRACS:
         if by_frac_seed[f] != by_frac_new[f]:
             raise AssertionError("engine bench: harvest vectors diverge")
-    configs = _operating_points(trace, by_frac_new)
-    db_seed = _seed_build(configs)
-    db_new = build_database(
-        configs, fm_fracs=DB_FM_FRACS, n_intervals=N_INTERVALS,
-        max_rss_pages=MAX_RSS, workers=workers,
-    )
+    configs = _operating_points(trace, by_frac_new, p.max_configs)
+    db_seed = _seed_build(configs, p)
+    db_new = _new_build(configs, p)
     for r_seed, r_new in zip(db_seed.records, db_new.records):
         if not np.array_equal(r_seed.times, r_new.times):
             raise AssertionError("engine bench: db records diverge")
+
+    # --- correctness gate: the tuned (TPP+Tuna) path, counters + times +
+    #     fm trajectories, seed per-target loop vs one tuned sweep
+    tuned_seed = _per_size_tuned(trace, db_new, p, ReferencePagePool)
+    tuned_new = _new_tuned(trace, db_new, p)
+    tuned_migrations = 0
+    for r_seed, r_new in zip(tuned_seed, tuned_new):
+        if (
+            r_seed.stats != r_new.stats
+            or not np.array_equal(r_seed.interval_times, r_new.interval_times)
+            or not np.array_equal(r_seed.fm_sizes, r_new.fm_sizes)
+            or r_seed.configs != r_new.configs
+        ):
+            raise AssertionError("engine bench: tuned path outputs diverge")
+        tuned_migrations += r_new.migrations
+    if tuned_migrations == 0:
+        # a tuned path without watermark actuation times the wrong thing
+        raise AssertionError("engine bench: tuned path exercised no migration")
 
     # --- single-run engine throughput on the application trace
     ips_seed = len(trace) / min(
         _timed(lambda: simulate(trace, fm_frac=0.6,
                                 pool_factory=ReferencePagePool))
-        for _ in range(3)
+        for _ in range(p.ips_repeats)
     )
     ips_new = len(trace) / min(
         _timed(lambda: simulate(trace, fm_frac=0.6,
                                 pool_factory=TieredPagePool))
-        for _ in range(3)
+        for _ in range(p.ips_repeats)
     )
     report("engine/intervals_per_s_seed", 1e6 / ips_seed, f"{ips_seed:.1f}/s")
     report("engine/intervals_per_s_new", 1e6 / ips_new, f"{ips_new:.1f}/s")
 
-    # --- the build_bench_db path: harvest + db build, best of 5,
+    # --- the build_bench_db path: harvest + db build, best of N,
     #     interleaved so machine noise hits both sides alike
     seed_ts, new_ts = [], []
-    for _ in range(5):
+    for _ in range(p.repeats):
         seed_ts.append(
-            _timed(lambda: (_seed_harvest(trace), _seed_build(configs)))
+            _timed(lambda: (_seed_harvest(trace), _seed_build(configs, p)))
         )
         new_ts.append(
-            _timed(
-                lambda: (
-                    _new_harvest(trace),
-                    build_database(
-                        configs, fm_fracs=DB_FM_FRACS,
-                        n_intervals=N_INTERVALS, max_rss_pages=MAX_RSS,
-                        workers=workers,
-                    ),
-                )
-            )
+            _timed(lambda: (_new_harvest(trace), _new_build(configs, p)))
         )
     t_seed, t_new = min(seed_ts), min(new_ts)
     speedup = t_seed / t_new
+    # the gate metric: per-repeat (seed, new) pairs run back to back, so
+    # each pair shares the machine's state; the *median* paired ratio is
+    # robust on both sides, where a min would record whichever pairing a
+    # noise burst skewed furthest
+    db_ratio = float(np.median([n / s for s, n in zip(seed_ts, new_ts)]))
     report("engine/bench_db_path_seed", t_seed * 1e6, f"{t_seed:.2f}s")
     report("engine/bench_db_path_new", t_new * 1e6, f"{t_new:.2f}s")
     report("engine/bench_db_path_speedup", speedup * 1e6, f"{speedup:.2f}x")
 
-    OUT_PATH.write_text(
-        json.dumps(
-            {
-                "n_configs": len(configs),
-                "n_harvest_fracs": len(HARVEST_FRACS),
-                "n_db_fm_fracs": int(DB_FM_FRACS.size),
-                "n_intervals": N_INTERVALS,
-                "workers_auto": workers is None,
-                "cpus": os.cpu_count(),
-                "harvest_and_records_identical": True,
-                "intervals_per_s_seed": round(ips_seed, 2),
-                "intervals_per_s_new": round(ips_new, 2),
-                "bench_db_path_seed_s": round(t_seed, 3),
-                "bench_db_path_new_s": round(t_new, 3),
-                "bench_db_path_speedup": round(speedup, 2),
-            },
-            indent=2,
+    # --- the TPP+Tuna path: per-target closed loops (seed pool AND the
+    #     pre-sweep incremental-pool loop) vs one tuned sweep
+    tuned_seed_ts, tuned_per_ts, tuned_new_ts = [], [], []
+    for _ in range(p.tuned_repeats):
+        tuned_seed_ts.append(
+            _timed(lambda: _per_size_tuned(trace, db_new, p, ReferencePagePool))
         )
-        + "\n"
+        tuned_per_ts.append(
+            _timed(lambda: _per_size_tuned(trace, db_new, p, TieredPagePool))
+        )
+        tuned_new_ts.append(_timed(lambda: _new_tuned(trace, db_new, p)))
+    tt_seed, tt_per, tt_new = (
+        min(tuned_seed_ts), min(tuned_per_ts), min(tuned_new_ts)
     )
+    tuned_ratio = float(
+        np.median([n / s for s, n in zip(tuned_seed_ts, tuned_new_ts)])
+    )
+    tuned_speedup = tt_seed / tt_new
+    report("engine/tuned_path_seed", tt_seed * 1e6, f"{tt_seed:.2f}s")
+    report("engine/tuned_path_per_size", tt_per * 1e6, f"{tt_per:.2f}s")
+    report("engine/tuned_path_new", tt_new * 1e6, f"{tt_new:.2f}s")
+    report(
+        "engine/tuned_path_speedup", tuned_speedup * 1e6,
+        f"{tuned_speedup:.2f}x",
+    )
+
+    results = {
+        "quick": p.quick,
+        "n_configs": len(configs),
+        "n_harvest_fracs": len(HARVEST_FRACS),
+        "n_db_fm_fracs": int(DB_FM_FRACS.size),
+        "n_intervals": p.n_intervals,
+        "workers_auto": True,
+        "cpus": os.cpu_count(),
+        "harvest_and_records_identical": True,
+        "tuned_outputs_identical": True,
+        "tuned_targets": list(p.tuned_targets),
+        "tune_every": p.tune_every,
+        "intervals_per_s_seed": round(ips_seed, 2),
+        "intervals_per_s_new": round(ips_new, 2),
+        "bench_db_path_seed_s": round(t_seed, 3),
+        "bench_db_path_new_s": round(t_new, 3),
+        "bench_db_path_speedup": round(speedup, 2),
+        "bench_db_path_ratio": round(db_ratio, 4),
+        "tuned_migrations": int(tuned_migrations),
+        "tuned_path_seed_s": round(tt_seed, 3),
+        "tuned_path_per_size_s": round(tt_per, 3),
+        "tuned_path_new_s": round(tt_new, 3),
+        "tuned_path_speedup": round(tuned_speedup, 2),
+        "tuned_path_ratio": round(tuned_ratio, 4),
+    }
+    if not p.quick:
+        # full runs own the committed baseline; they keep the CI quick
+        # section (written by --quick --update-baseline) intact
+        committed = (
+            json.loads(OUT_PATH.read_text()) if OUT_PATH.exists() else {}
+        )
+        if committed.get("quick_baseline") is not None:
+            results["quick_baseline"] = committed["quick_baseline"]
+        OUT_PATH.write_text(json.dumps(results, indent=2) + "\n")
+    return results
+
+
+GATED_PATHS = ("bench_db_path", "tuned_path")
+
+
+def check_gate(fresh: dict, baseline: dict, margin: float = 1.25) -> list[str]:
+    """Compare a fresh quick-mode run against the committed baseline.
+
+    The committed ``*_ratio`` baselines should be recorded on (or with
+    headroom for) the CI runner class — ``--update-baseline`` on a
+    representative box, or hand-set to the upper end of a few calibration
+    runs' medians — so that runner-to-runner noise sits inside the
+    baseline and the ``margin`` stays reserved for real regressions.
+
+    Returns a list of failure messages (empty = gate passes). The metric
+    is the optimized/seed wall-clock ratio per gated path — the *median*
+    of the paired (same-repeat, back-to-back) per-repeat ratios, so
+    runner speed cancels and single noise bursts cannot skew the record —
+    and the gate fails exactly when the optimized engine got >``margin``x
+    slower *relative to the frozen seed implementation* than the
+    committed baseline says it should be.
+    """
+    base = baseline.get("quick_baseline") or baseline
+    failures = []
+    for key in GATED_PATHS:
+        b_ratio = base.get(f"{key}_ratio")
+        f_ratio = fresh.get(f"{key}_ratio")
+        if not b_ratio or not f_ratio:
+            failures.append(f"{key}: baseline or fresh ratio missing")
+            continue
+        if f_ratio > b_ratio * margin:
+            failures.append(
+                f"{key}: new/seed ratio {f_ratio:.3f} exceeds baseline "
+                f"{b_ratio:.3f} by more than {margin:.2f}x"
+            )
+    return failures
+
+
+def _csv_report(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="scaled-down CI configuration")
+    ap.add_argument("--gate", metavar="BASELINE_JSON",
+                    help="fail (exit 1) on >25%% regression vs this "
+                         "baseline's quick section")
+    ap.add_argument("--out", metavar="PATH",
+                    help="where to write the fresh results JSON "
+                         "(default: BENCH_engine.json in full mode, "
+                         "BENCH_engine.quick.json in quick mode)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="merge this quick run into BENCH_engine.json's "
+                         "'quick_baseline' section (full runs rewrite the "
+                         "top level themselves)")
+    args = ap.parse_args(argv)
+
+    params = QUICK if args.quick else FULL
+    results = run(_csv_report, params)
+
+    if args.quick and args.update_baseline:
+        committed = {}
+        if OUT_PATH.exists():
+            committed = json.loads(OUT_PATH.read_text())
+        committed["quick_baseline"] = results
+        OUT_PATH.write_text(json.dumps(committed, indent=2) + "\n")
+        print(f"# baseline updated: {OUT_PATH}")
+
+    out = args.out or (None if not args.quick else "BENCH_engine.quick.json")
+    if out:
+        Path(out).write_text(json.dumps(results, indent=2) + "\n")
+        print(f"# results written: {out}")
+
+    if args.gate:
+        baseline = json.loads(Path(args.gate).read_text())
+        failures = check_gate(results, baseline)
+        if failures:
+            for msg in failures:
+                print(f"BENCH GATE FAIL: {msg}")
+            return 1
+        print("# bench gate: OK")
+    return 0
 
 
 if __name__ == "__main__":
-    run(lambda name, us, derived: print(f"{name},{us:.1f},{derived}"))
+    raise SystemExit(main())

@@ -25,7 +25,6 @@ from repro.core.perfdb import PerfDB
 from repro.core.telemetry import ConfigVector
 from repro.core.trace import Trace, load_trace, save_trace
 from repro.core.tuner import build_database
-from repro.sim.engine import simulate
 from repro.sim.sweep import sweep_fm_fracs
 from repro.sim.workloads import WORKLOADS
 
@@ -57,8 +56,8 @@ def steady_from(cvs: list, skip: int = 3, min_pacc: float = 500.0) -> list:
 def steady_configs(trace: Trace, fm_frac: float, skip: int = 3,
                    min_pacc: float = 500.0) -> list:
     """Per-interval config vectors of a workload at a given fm size."""
-    res = simulate(trace, fm_frac=fm_frac)
-    return steady_from(res.configs, skip, min_pacc)
+    res = sweep_fm_fracs(trace, [fm_frac], collect_configs=True)
+    return steady_from(res.configs[0], skip, min_pacc)
 
 
 def _representative_from(cvs: list, trace: Trace) -> ConfigVector:

@@ -4,6 +4,13 @@ The tuner runs in the loop (default tuning interval), shrinking/growing the
 fast tier via watermarks. Reported per workload: average fast-memory saving
 (vs peak RSS) and overall performance loss vs the fast-memory-only baseline.
 
+Both sides of the comparison — the TPP-only baseline at full fast memory
+and the TPP+Tuna closed loop — ride as slices of **one batched tuned
+sweep** (:func:`repro.sim.sweep.sweep_tuned`) per workload, so each trace
+is executed once instead of once per configuration; the tuned slice is
+bit-exact against the old per-run ``simulate(..., tuner=...)`` path
+(pinned by ``tests/test_engine_equivalence.py``).
+
 Paper: savings up to 16% (Btree); overall loss XSBench 1.8%, BFS 2%,
 PageRank 4.6%, SSSP 4.7%, Btree 4.6% — all within the 5% target; average
 fast-memory saving 8.5% (vs 5% for Pond on the same workloads/target).
@@ -17,31 +24,58 @@ import numpy as np
 
 from repro.core.tuner import TunaTuner, TunerConfig
 from repro.core.watermark import WatermarkController
-from repro.sim.engine import simulate
+from repro.sim.sweep import TunedSlice, sweep_tuned
 from repro.sim.workloads import WORKLOADS
-from repro.tiering.page_pool import TieredPagePool
 
 from benchmarks.common import build_bench_db, get_trace
 
 TUNE_EVERY = 3  # profiling intervals per tuning step (the paper's 2.5 s)
 
 
-def run_workload(name, db, target_loss=0.05, tune_every=TUNE_EVERY):
-    tr = get_trace(name)
-    base = simulate(tr, fm_frac=1.0)
-    pool = TieredPagePool(tr.rss_pages, tr.rss_pages)
-    ctl = WatermarkController(pool, max_step_frac=0.04)
-    tuner = TunaTuner(
+def make_tuner(db, target_loss=0.05) -> TunaTuner:
+    """The benchmark suite's tuner configuration, with an unbound
+    watermark controller — the sweep binds it to its slice pool."""
+    return TunaTuner(
         db,
-        ctl,
+        WatermarkController(max_step_frac=0.04),
         TunerConfig(target_loss=target_loss, cooldown_windows=5),
-        peak_rss_pages=tr.rss_pages,
     )
-    res = simulate(tr, fm_frac=1.0, tuner=tuner, tune_every=tune_every)
-    saving = 1.0 - res.fm_sizes.mean() / tr.rss_pages
-    max_saving = 1.0 - res.fm_sizes.min() / tr.rss_pages
+
+
+def run_tuned_slices(trace, db, specs, tune_every=TUNE_EVERY):
+    """One tuned sweep: a TPP-only baseline slice plus one TPP+Tuna slice
+    per ``(target_loss, tune_every)`` spec. Returns ``(base, results)``
+    where ``results[i]`` is the :class:`~repro.sim.engine.SimResult` of
+    spec ``i``."""
+    slices = [TunedSlice()]  # fm_frac=1.0, no tuner: the baseline
+    for target_loss, te in specs:
+        slices.append(
+            TunedSlice(
+                fm_frac=1.0,
+                tuner=make_tuner(db, target_loss),
+                tune_every=te if te is not None else tune_every,
+            )
+        )
+    results = sweep_tuned(trace, slices)
+    return results[0], results[1:]
+
+
+def summarize(base, res, trace):
+    saving = 1.0 - res.fm_sizes.mean() / trace.rss_pages
+    max_saving = 1.0 - res.fm_sizes.min() / trace.rss_pages
     overall_loss = (res.total_time - base.total_time) / base.total_time
-    return res, saving, max_saving, overall_loss
+    return saving, max_saving, overall_loss
+
+
+def run_workload(name, db, target_loss=0.05, tune_every=TUNE_EVERY):
+    """Baseline + one tuned run of a workload, in a single trace pass.
+
+    Returns ``(base, res, saving, max_saving, overall_loss)``.
+    """
+    tr = get_trace(name)
+    base, (res,) = run_tuned_slices(tr, db, [(target_loss, tune_every)])
+    saving, max_saving, overall_loss = summarize(base, res, tr)
+    return base, res, saving, max_saving, overall_loss
 
 
 def run(report) -> None:
@@ -49,7 +83,7 @@ def run(report) -> None:
     savings = []
     for name in WORKLOADS:
         t0 = time.time()
-        res, saving, max_saving, overall_loss = run_workload(name, db)
+        _, res, saving, max_saving, overall_loss = run_workload(name, db)
         savings.append(saving)
         report(
             f"fig3_7/{name}",

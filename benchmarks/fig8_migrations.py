@@ -1,7 +1,11 @@
 """Fig. 8: TPP vs TPP+Tuna — page migrations and fast-memory size over time
 for BFS. Tuna's watermark changes perturb the migration activity TPP
 performs; the workload keeps its loss within target while fast memory
-shrinks."""
+shrinks.
+
+Both sides come from one batched tuned sweep (the TPP-only slice and the
+TPP+Tuna slice of :func:`benchmarks.fig3_7_tuning.run_workload`'s single
+trace pass)."""
 
 from __future__ import annotations
 
@@ -9,18 +13,14 @@ import time
 
 import numpy as np
 
-from repro.sim.engine import simulate
-
-from benchmarks.common import build_bench_db, get_trace
+from benchmarks.common import build_bench_db
 from benchmarks.fig3_7_tuning import run_workload
 
 
 def run(report) -> None:
     t0 = time.time()
     db = build_bench_db()
-    tr = get_trace("bfs")
-    plain = simulate(tr, fm_frac=1.0)
-    tuned, saving, _, overall_loss = run_workload("bfs", db)
+    plain, tuned, saving, _, overall_loss = run_workload("bfs", db)
     # migration activity per tuning window
     n = min(len(plain.configs), len(tuned.configs))
     pm_plain = np.array([c.pm_pr + c.pm_de for c in plain.configs[:n]])

@@ -7,6 +7,10 @@ performance database with the vector; from the returned record compute
 pd' = (y'-x')/x' (micro-benchmark at the same size vs micro-benchmark fast
 only). Report |pd' - pd| / pd.
 
+The measured side — the full-fm baseline plus every FM_GRID size — is one
+batched sweep (:func:`repro.sim.sweep.sweep_fm_fracs`) per workload
+instead of ``1 + len(FM_GRID)`` separate ``simulate()`` passes.
+
 Paper: error < 10% everywhere, growing as fast memory shrinks
 (e.g. SSSP 0.6% at 99% → 8.0% at 85%).
 """
@@ -17,7 +21,7 @@ import time
 
 import numpy as np
 
-from repro.sim.engine import simulate
+from repro.sim.sweep import sweep_fm_fracs
 from repro.sim.workloads import WORKLOADS
 
 from benchmarks.common import build_bench_db, get_trace, representative_config
@@ -30,12 +34,13 @@ def run(report) -> None:
     for name in WORKLOADS:
         t0 = time.time()
         tr = get_trace(name)
-        base = simulate(tr, fm_frac=1.0).total_time
+        # one pass: the full-fm baseline plus the whole measured size grid
+        times = sweep_fm_fracs(tr, (1.0,) + FM_GRID).total_times
+        base = times[0]
         cv = representative_config(tr, fm_frac=1.0)
         recs = db.query(cv, k=3)
         errs = []
-        for f in FM_GRID:
-            y = simulate(tr, fm_frac=f).total_time
+        for f, y in zip(FM_GRID, times[1:]):
             pd = (y - base) / base
             # k-NN-averaged predicted loss at this size
             pds = []

@@ -6,40 +6,49 @@
 (b) Tuning frequency {0.5 s, 1 s, 2.5 s, 5 s}: smaller intervals save more
     memory but lose more performance (paper: 0.5 s → up to 25% saving but
     17% loss; 5 s → ~2% saving, ~3% loss).
+
+The whole target/interval matrix — seven tuner configurations plus the
+TPP-only baseline — runs as slices of **one** batched tuned sweep over the
+SSSP trace (:func:`repro.sim.sweep.sweep_tuned`), instead of the old
+fifteen per-configuration ``simulate()`` passes (each old run also re-ran
+its own baseline).
 """
 
 from __future__ import annotations
 
 import time
 
-from benchmarks.common import build_bench_db
-from benchmarks.fig3_7_tuning import run_workload
+from benchmarks.common import build_bench_db, get_trace
+from benchmarks.fig3_7_tuning import TUNE_EVERY, run_tuned_slices, summarize
+
+# (report label, target_loss, tune_every)
+SPECS = (
+    ("table3/sssp_tau5", 0.05, TUNE_EVERY),
+    ("table3/sssp_tau10", 0.10, TUNE_EVERY),
+    ("table3/sssp_tau15", 0.15, TUNE_EVERY),
+    ("interval/sssp_0.5s", 0.05, 1),
+    ("interval/sssp_1s", 0.05, 2),
+    ("interval/sssp_2.5s", 0.05, 3),
+    ("interval/sssp_5s", 0.05, 6),
+)
 
 
 def run(report) -> None:
     db = build_bench_db()
-    # (a) loss-target sensitivity
-    for tau in (0.05, 0.10, 0.15):
-        t0 = time.time()
-        res, saving, max_saving, overall_loss = run_workload(
-            "sssp", db, target_loss=tau
-        )
+    tr = get_trace("sssp")
+    t0 = time.time()
+    base, results = run_tuned_slices(
+        tr, db, [(tau, te) for _, tau, te in SPECS]
+    )
+    # one sweep produced every row: report each row's amortized share so
+    # summing the us column still totals one sweep, as it totalled the
+    # per-run times before the batching
+    per_row_us = (time.time() - t0) * 1e6 / len(SPECS)
+    for (label, _, _), res in zip(SPECS, results):
+        saving, max_saving, overall_loss = summarize(base, res, tr)
         report(
-            f"table3/sssp_tau{int(tau*100)}",
-            (time.time() - t0) * 1e6,
-            f"saving={saving*100:.1f}%;max_saving={max_saving*100:.1f}%"
-            f";loss={overall_loss*100:.2f}%",
-        )
-    # (b) tuning-interval sensitivity (profiling intervals per tuning step;
-    # 3 ≈ the paper's 2.5 s default)
-    for te, label in ((1, "0.5s"), (2, "1s"), (3, "2.5s"), (6, "5s")):
-        t0 = time.time()
-        res, saving, max_saving, overall_loss = run_workload(
-            "sssp", db, tune_every=te
-        )
-        report(
-            f"interval/sssp_{label}",
-            (time.time() - t0) * 1e6,
+            label,
+            per_row_us,
             f"saving={saving*100:.1f}%;max_saving={max_saving*100:.1f}%"
             f";loss={overall_loss*100:.2f}%",
         )

@@ -93,7 +93,7 @@ def load_checkpoint(ckpt_dir, step: int, like_tree, shardings=None,
             raise KeyError(f"checkpoint missing leaf {key!r}")
         arr = np.load(src / meta["file"])
         if str(arr.dtype) != meta["dtype"]:
-            import ml_dtypes  # bit-stored exotic dtype: view back
+            import ml_dtypes  # noqa: F401  (registers bfloat16 etc. with numpy)
 
             arr = arr.view(np.dtype(meta["dtype"]))
         if verify:

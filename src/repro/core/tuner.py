@@ -70,6 +70,23 @@ class TunaTuner:
     _cooldown: int = 0
     _floor_frac: float = 0.0  # learned lower bound from feedback violations
 
+    def bind_pool(self, pool, peak_rss_pages: int | None = None) -> "TunaTuner":
+        """Attach the pool this tuner actuates (via its controller).
+
+        The single entry point both execution paths use to wire a tuner
+        into a run: :func:`repro.sim.engine.simulate` binds its one pool,
+        and :func:`repro.sim.sweep.sweep_tuned` binds each size-slice's
+        pool to that slice's tuner. ``peak_rss_pages`` anchors the tuner's
+        fm-fraction arithmetic (defaults to the pool's hardware capacity).
+        Returns self.
+        """
+        self.controller.bind(pool)
+        self.peak_rss_pages = (
+            int(peak_rss_pages) if peak_rss_pages is not None
+            else int(pool.hw_capacity)
+        )
+        return self
+
     def step(
         self, cv: ConfigVector, t: float = 0.0, measured_tpa: float | None = None
     ) -> TunerDecision:

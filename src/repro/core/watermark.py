@@ -28,19 +28,41 @@ class WatermarkEvent:
 
 @dataclass
 class WatermarkController:
-    pool: TieredPagePool
+    """Rate-limited, hysteretic actuator over one pool's watermarks.
+
+    ``pool`` may be left ``None`` at construction and bound later via
+    :meth:`bind` (or :meth:`repro.core.tuner.TunaTuner.bind_pool`): the
+    batched tuned sweep (:func:`repro.sim.sweep.sweep_tuned`) builds its
+    per-size slice pools only once the trace is known, so controllers —
+    like the tuners that own them — are created unbound and attached to
+    their slice at sweep start.
+    """
+
+    pool: TieredPagePool | None = None
     # never shrink/grow by more than this fraction of hw capacity per call
     max_step_frac: float = 0.10
     # ignore changes smaller than this fraction (hysteresis)
     deadband_frac: float = 0.005
     log: list = field(default_factory=list)
 
+    def bind(self, pool: TieredPagePool) -> "WatermarkController":
+        """Attach the pool this controller actuates; returns self."""
+        self.pool = pool
+        return self
+
     def set_size(self, new_fm_pages: int, t: float = 0.0) -> int:
         """Request a new fast-memory size; returns the size actually set."""
+        if self.pool is None:
+            raise RuntimeError(
+                "WatermarkController has no pool bound; call bind(pool) "
+                "(or TunaTuner.bind_pool) before set_size"
+            )
         cap = self.pool.hw_capacity
         cur = self.pool.effective_fm_size
         target = int(max(1, min(cap, new_fm_pages)))
-        if abs(target - cur) < self.deadband_frac * cap:
+        # a reached target is a no-op even at deadband 0 — it must not
+        # append zero-delta events to the audit log
+        if target == cur or abs(target - cur) < self.deadband_frac * cap:
             return cur
         max_step = max(1, int(self.max_step_frac * cap))
         step = max(-max_step, min(max_step, target - cur))

@@ -67,8 +67,8 @@ def _flash_kernel(
 
     @pl.when(ki == pl.num_programs(3) - 1)
     def _finish():
-        l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0, 0, :, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
 
 
 @functools.partial(

@@ -8,7 +8,6 @@ through this module, so swapping the backend never touches model code.
 from __future__ import annotations
 
 import os
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -96,13 +95,13 @@ def cp_decode_attention(q, k_cache, v_cache, valid_len, mesh,
         m = jnp.max(s, axis=-1, keepdims=True)  # (b,h,1,1)
         m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
         p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_safe), 0.0)
-        l = jnp.sum(p, axis=-1, keepdims=True)  # (b,h,1,1)
+        l_loc = jnp.sum(p, axis=-1, keepdims=True)  # (b,h,1,1)
         o = jnp.einsum("bhst,bthd->bshd", p, vx.astype(jnp.float32))
         # ---- merge across the sequence shards (log-sum-exp rescale)
         m_g = jax.lax.pmax(m, seq_axis)
         m_g_safe = jnp.where(jnp.isfinite(m_g), m_g, 0.0)
         corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_g_safe), 0.0)
-        l_g = jax.lax.psum(l * corr, seq_axis)  # (b,h,1,1)
+        l_g = jax.lax.psum(l_loc * corr, seq_axis)  # (b,h,1,1)
         corr_o = jnp.moveaxis(corr, 1, 2)  # (b,1,h,1)
         o_g = jax.lax.psum(o * corr_o, seq_axis)  # (b,1,h,d)
         l_o = jnp.maximum(jnp.moveaxis(l_g, 1, 2), 1e-30)  # (b,1,h,1)

@@ -28,8 +28,6 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
-
 from repro.configs import ARCHS, SHAPES, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.serve import make_serve_fns
@@ -37,7 +35,7 @@ from repro.launch.train import make_train_fns
 from repro.models import active_param_count_shapes, init_model, param_count
 from repro.roofline.analytic import cell_flops, cell_hbm_bytes
 from repro.roofline.hlo_stats import collective_bytes
-from repro.roofline.report import HW, roofline_terms
+from repro.roofline.report import roofline_terms
 
 _TOTALS: dict = {}
 

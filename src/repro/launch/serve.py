@@ -10,7 +10,6 @@ reduction for the sharded softmax contraction.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import decode_step, forward, init_decode_state

@@ -11,7 +11,6 @@ Dims that do not divide evenly by the axis size fall back to replication
 from __future__ import annotations
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig

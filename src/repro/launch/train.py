@@ -7,15 +7,13 @@ lower the exact same computation.
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import forward, init_model
 from repro.models.config import ModelConfig
-from repro.launch.sharding import batch_axes, param_shardings
+from repro.launch.sharding import param_shardings
 from repro.optim import adamw, cosine_schedule
 
 

@@ -11,7 +11,6 @@ import time
 from dataclasses import dataclass
 
 import jax
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.data import SyntheticLMDataset

@@ -19,7 +19,6 @@ Forward modes:
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

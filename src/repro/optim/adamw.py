@@ -8,9 +8,8 @@ very large architectures (a DESIGN.md §Perf knob).
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Callable, NamedTuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

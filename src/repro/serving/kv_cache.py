@@ -19,9 +19,8 @@ batched-DMA Pallas kernel on TPU; gather/scatter reference on CPU).
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

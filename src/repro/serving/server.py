@@ -15,19 +15,15 @@ by the same calibrated model the simulator validates.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.telemetry import ConfigVector, IntervalProfiler
+from repro.core.telemetry import IntervalProfiler
 from repro.core.tuner import TunaTuner
-from repro.core.watermark import WatermarkController
-from repro.serving.kv_cache import KVPageConfig, TieredPagedKV
+from repro.serving.kv_cache import TieredPagedKV
 from repro.serving.scheduler import ContinuousBatcher
 from repro.sim.costmodel import TPU_V5E_TIER, interval_time
-from repro.tiering.page_pool import Tier
 
 
 @dataclass

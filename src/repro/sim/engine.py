@@ -83,8 +83,7 @@ def simulate(
     if trace.slow_pages is not None:
         pool.place(trace.slow_pages, Tier.SLOW)
     if tuner is not None:
-        tuner.controller.pool = pool
-        tuner.peak_rss_pages = cap
+        tuner.bind_pool(pool, cap)
     profiler = IntervalProfiler(
         hot_thr=getattr(policy, "hot_thr", 4), num_threads=trace.num_threads
     )

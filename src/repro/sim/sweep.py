@@ -1,4 +1,5 @@
-"""Batched fast-memory-size sweep engine (the offline database hot path).
+"""Batched fast-memory-size sweep engine (the offline database hot path
+and the TPP+Tuna closed-loop evaluation path).
 
 Tuna's offline component executes the same micro-benchmark trace at ~21
 fast-memory sizes (paper Sections 3.3/5). Running :func:`repro.sim.engine.
@@ -17,11 +18,51 @@ in a single pass**:
   its row — the *same* ``TPPPolicy`` code the per-size engine runs, so the
   sweep cannot drift semantically;
 * per-interval tier classification of the touched pages is one batched
-  ``[n_sizes, n_touched]`` gather instead of ``n_sizes`` passes.
+  ``[n_sizes, n_touched]`` gather instead of ``n_sizes`` passes;
+* the per-size TPP promote/reclaim schedules are computed in **one
+  vectorized policy decision batch per interval**
+  (:meth:`~repro.tiering.policy.TPPPolicy.step_batch` over stacked
+  watermark/free-page vectors), so the policy layer does not pay
+  ``n_sizes`` Python loops either.
+
+Tuned-sweep mode (:func:`sweep_tuned`)
+--------------------------------------
+Each size-slice can carry **live actuation state**: a
+:class:`~repro.core.tuner.TunaTuner` + :class:`~repro.core.watermark.
+WatermarkController` pair per slice, described by a :class:`TunedSlice`.
+The tuner is stepped every ``tune_every`` intervals with that slice's
+telemetry (config vector + measured time-per-access window) and actuates
+*its own slice's* watermarks — so per-slice effective fast-memory sizes
+change mid-run while the trace is still swept once. Watermark moves
+re-partition the stacked tiers row-locally; the shared global demotion
+ranking is trace-driven (heat + interval touches) and therefore stays
+valid across every slice's effective capacity — each slice consumes it
+through its own cursor, exactly as in the fixed-size sweep. A slice with
+``tuner=None`` is a plain fixed-size run, which is how the TPP-only
+baseline rides along in the same pass. Results come back as one
+:class:`~repro.sim.engine.SimResult` per slice, bit-exact against
+``simulate(trace, fm_frac=..., tuner=..., tune_every=...)`` — migration
+counters, interval times, config vectors, per-interval fm sizes, tuner
+decisions and watermark event logs — which
+``tests/test_engine_equivalence.py`` asserts (anchored, like every engine
+path, on the frozen :class:`~repro.tiering.reference_pool.
+ReferencePagePool` golden model).
 
 Exactness: every per-size arithmetic sequence matches a standalone
 ``simulate(trace, fm_frac=f)`` bit for bit (integer counters; float times),
 which ``tests/test_engine_equivalence.py`` asserts.
+
+Benchmark tracking
+------------------
+``benchmarks/bench_engine.py`` measures both sweep modes against the seed
+per-size path and persists the trajectory to ``BENCH_engine.json``. On top
+of the PR-1 schema (``bench_db_path_{seed_s,new_s,speedup}``,
+``intervals_per_s_{seed,new}``) the tuned path adds
+``tuned_path_seed_s`` / ``tuned_path_new_s`` / ``tuned_path_speedup``
+(TPP+Tuna closed loop: per-target ``simulate(..., tuner=...)`` vs one
+:func:`sweep_tuned` pass), ``tuned_targets`` (the loss-target vector
+swept), ``tuned_outputs_identical`` (the equivalence gate that ran before
+timing), and ``quick`` (whether the CI quick mode produced the file).
 """
 
 from __future__ import annotations
@@ -62,26 +103,41 @@ class SweepResult:
         return self.interval_times.sum(axis=1)
 
 
-def sweep_fm_fracs(
-    trace: Trace,
-    fm_fracs,
-    hot_thr: int = 4,
-    hw: HardwareProfile = OPTANE_LIKE,
-    hw_capacity_pages: int | None = None,
-    seed: int = 0,
-    collect_configs: bool = False,
-) -> SweepResult:
-    """Run ``trace`` once, concurrently at every fraction in ``fm_fracs``.
+@dataclass
+class TunedSlice:
+    """One slice of a tuned sweep: a starting fast-memory fraction plus
+    optional live actuation state.
 
-    Equivalent to ``[simulate(trace, fm_frac=f, policy=TPPPolicy(hot_thr))
-    for f in fm_fracs]`` (same counters, same interval times), at roughly
-    the cost of the most expensive single size plus the per-size policy
-    work.
+    ``tuner`` (with its :class:`~repro.core.watermark.WatermarkController`,
+    which may be constructed unbound — the sweep binds it to the slice's
+    pool) is stepped every ``tune_every`` profiling intervals, mirroring
+    ``simulate(trace, fm_frac=fm_frac, tuner=tuner,
+    tune_every=tune_every)``. ``tuner=None`` gives a plain fixed-size run
+    (the TPP-only baseline slice).
     """
-    fm_fracs = np.asarray(fm_fracs, dtype=np.float64)
+
+    fm_frac: float = 1.0
+    tuner: object | None = None  # TunaTuner (kept untyped: no import cycle)
+    tune_every: int | None = None
+
+
+def _sweep_run(
+    trace: Trace,
+    fm_fracs: np.ndarray,
+    hot_thr: int,
+    hw: HardwareProfile,
+    hw_capacity_pages: int | None,
+    seed: int,
+    collect_configs: bool,
+    tuners: list | None = None,
+    tune_everys: list | None = None,
+):
+    """Shared sweep driver: one trace pass across the whole size vector.
+
+    Returns ``(times, pools, configs_out, fm_sizes, costs)`` where the
+    last two are ``None`` unless ``tuners`` is given (tuned mode).
+    """
     n_sizes = fm_fracs.size
-    if n_sizes == 0:
-        raise ValueError("sweep_fm_fracs needs at least one fm fraction")
     num_pages = int(trace.rss_pages)
     cap = int(hw_capacity_pages or trace.rss_pages)
     policy = TPPPolicy(hot_thr=hot_thr)
@@ -109,6 +165,12 @@ def sweep_fm_fracs(
             pool.place(trace.slow_pages, Tier.SLOW)
         pools.append(pool)
 
+    tuned = tuners is not None
+    if tuned:
+        for pool, tuner in zip(pools, tuners):
+            if tuner is not None:
+                tuner.bind_pool(pool, cap)
+
     n_intervals = len(trace)
     times = np.zeros((n_sizes, n_intervals), dtype=np.float64)
     fast_code = int(Tier.FAST)
@@ -122,6 +184,11 @@ def sweep_fm_fracs(
             for _ in range(n_sizes)
         ]
         configs_out = [[] for _ in range(n_sizes)]
+    fm_sizes = costs = t_now = None
+    if tuned:
+        fm_sizes = np.zeros((n_sizes, n_intervals), dtype=np.int64)
+        costs = [[] for _ in range(n_sizes)]
+        t_now = [0.0] * n_sizes
     for i, ia in enumerate(trace):
         pages = ia.pages
         # --- size-independent work, computed once for all sizes
@@ -200,9 +267,19 @@ def sweep_fm_fracs(
             if hot_sorted.size
             else None
         )
-        # --- per-size policy + cost (identical code path to simulate())
+        cands = [
+            hot_sorted[cand_slow_all[s]]
+            if cand_slow_all is not None
+            else hot_sorted
+            for s in range(n_sizes)
+        ]
+        # --- one cross-size policy decision batch (identical outcomes to
+        # per-size TPPPolicy.step_hot_sorted calls, in order)
+        before_direct = [pool.stats.pgdemote_direct for pool in pools]
+        outcomes = policy.step_batch(pools, cands, assume_unique=hot_unique)
+        # --- per-size telemetry + cost
         for s, pool in enumerate(pools):
-            before_direct = pool.stats.pgdemote_direct
+            outcome = outcomes[s]
             if profilers is not None:
                 profilers[s].record_accesses(
                     int(ptouch_f_all[s]),
@@ -212,15 +289,6 @@ def sweep_fm_fracs(
                     warm_pages=int(warm_pages_all[s]),
                     warm_touches=int(warm_touch_all[s]),
                 )
-            cand = (
-                hot_sorted[cand_slow_all[s]]
-                if cand_slow_all is not None
-                else hot_sorted
-            )
-            outcome = policy.step_hot_sorted(
-                pool, cand, assume_unique=hot_unique
-            )
-            if profilers is not None:
                 profilers[s].record_policy(outcome)
                 configs_out[s].append(profilers[s].finish(pool))
             cost = interval_time(
@@ -231,12 +299,18 @@ def sweep_fm_fracs(
                 pm_pr=outcome.pm_pr,
                 pm_de=outcome.pm_de,
                 pm_fail=outcome.pm_fail,
-                direct_reclaimed=pool.stats.pgdemote_direct - before_direct,
+                direct_reclaimed=pool.stats.pgdemote_direct - before_direct[s],
                 mlp_eff=mlp_eff,
                 num_threads=trace.num_threads,
                 rand_frac=ia.rand_frac,
             )
             times[s, i] = cost.total
+            if tuned:
+                # what simulate() records *before* the tuner step: the fm
+                # size in effect during this interval
+                fm_sizes[s, i] = pool.effective_fm_size
+                costs[s].append(cost)
+                t_now[s] += cost.total
         # --- one shared heat fold for all sizes (mirrors
         # TieredPagePool.end_interval's dense/indexed hybrid)
         if pages.size >= num_pages // 8:
@@ -247,6 +321,48 @@ def sweep_fm_fracs(
             interval_touch[pages] = 0
         else:
             heat.fold(np.empty(0, np.int64), np.empty(0, np.int64))
+        # --- per-slice tuner steps (simulate() order: after end_interval);
+        # watermark moves re-partition this slice's stacked tier row from
+        # the next interval on — the shared ranking is size-independent
+        # and needs no invalidation
+        if tuned:
+            for s, tuner in enumerate(tuners):
+                te = tune_everys[s]
+                if tuner is not None and te and (i + 1) % te == 0:
+                    window = costs[s][-te:]
+                    acc = sum(
+                        c.pacc_f + c.pacc_s for c in configs_out[s][-te:]
+                    )
+                    tpa = sum(c.total for c in window) / max(acc, 1)
+                    tuner.step(
+                        configs_out[s][-1], t=t_now[s], measured_tpa=tpa
+                    )
+    return times, pools, configs_out, fm_sizes, costs
+
+
+def sweep_fm_fracs(
+    trace: Trace,
+    fm_fracs,
+    hot_thr: int = 4,
+    hw: HardwareProfile = OPTANE_LIKE,
+    hw_capacity_pages: int | None = None,
+    seed: int = 0,
+    collect_configs: bool = False,
+) -> SweepResult:
+    """Run ``trace`` once, concurrently at every fraction in ``fm_fracs``.
+
+    Equivalent to ``[simulate(trace, fm_frac=f, policy=TPPPolicy(hot_thr))
+    for f in fm_fracs]`` (same counters, same interval times), at roughly
+    the cost of the most expensive single size plus one cross-size
+    vectorized policy step per interval.
+    """
+    fm_fracs = np.asarray(fm_fracs, dtype=np.float64)
+    if fm_fracs.size == 0:
+        raise ValueError("sweep_fm_fracs needs at least one fm fraction")
+    times, pools, configs_out, _, _ = _sweep_run(
+        trace, fm_fracs, hot_thr, hw, hw_capacity_pages, seed,
+        collect_configs,
+    )
     return SweepResult(
         name=trace.name,
         fm_fracs=fm_fracs,
@@ -254,6 +370,52 @@ def sweep_fm_fracs(
         stats=[pool.stats.snapshot() for pool in pools],
         configs=configs_out,
     )
+
+
+def sweep_tuned(
+    trace: Trace,
+    slices,
+    hot_thr: int = 4,
+    hw: HardwareProfile = OPTANE_LIKE,
+    hw_capacity_pages: int | None = None,
+    seed: int = 0,
+) -> list:
+    """Run ``trace`` once across a vector of :class:`TunedSlice` settings.
+
+    The TPP+Tuna closed loop at sweep speed: every slice's tuner runs *in
+    the loop* against its own slice pool while the trace is swept once.
+    Returns one :class:`~repro.sim.engine.SimResult` per slice, in order —
+    bit-exact against ``simulate(trace, fm_frac=sl.fm_frac,
+    tuner=sl.tuner, tune_every=sl.tune_every)`` per slice (counters,
+    interval times, config vectors, fm sizes; the tuner's decision list
+    and its controller's watermark event log accumulate identically).
+    """
+    from repro.sim.engine import SimResult
+
+    slices = [
+        sl if isinstance(sl, TunedSlice) else TunedSlice(*sl) for sl in slices
+    ]
+    if not slices:
+        raise ValueError("sweep_tuned needs at least one slice")
+    fm_fracs = np.asarray([sl.fm_frac for sl in slices], dtype=np.float64)
+    tuners = [sl.tuner for sl in slices]
+    tune_everys = [sl.tune_every for sl in slices]
+    times, pools, configs_out, fm_sizes, costs = _sweep_run(
+        trace, fm_fracs, hot_thr, hw, hw_capacity_pages, seed,
+        collect_configs=True, tuners=tuners, tune_everys=tune_everys,
+    )
+    return [
+        SimResult(
+            name=trace.name,
+            total_time=float(np.sum(times[s])),
+            interval_times=times[s].copy(),
+            configs=configs_out[s],
+            fm_sizes=fm_sizes[s].copy(),
+            stats=pools[s].stats.snapshot(),
+            costs=costs[s],
+        )
+        for s in range(len(slices))
+    ]
 
 
 def sweep_times(

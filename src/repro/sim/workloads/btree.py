@@ -29,8 +29,8 @@ def btree_trace(
 ) -> Trace:
     rng = np.random.default_rng(seed)
     n_leaves = FANOUT ** (levels - 1)
-    # level l has FANOUT^l nodes; node = FANOUT keys of 8 bytes
-    level_nodes = [FANOUT**l for l in range(levels)]
+    # level lvl has FANOUT^lvl nodes; node = FANOUT keys of 8 bytes
+    level_nodes = [FANOUT**lvl for lvl in range(levels)]
     level_base = np.concatenate([[0], np.cumsum(level_nodes)])  # node ids
     total_nodes = int(level_base[-1])
 
@@ -47,11 +47,11 @@ def btree_trace(
             # phase change: the hot key set drifts (drives promotions)
             popularity = zipf_weights(n_leaves, zipf_s, rng)
         leaf = rng.choice(n_leaves, size=queries, p=popularity)
-        # walk root→leaf: node index at level l is the leaf's l-digit prefix
+        # walk root→leaf: node index at level lvl is the leaf's prefix
         node_path = np.zeros(queries, dtype=np.int64)
-        for l in range(levels):
-            digit = leaf // (FANOUT ** (levels - 1 - l))
-            node = level_base[l] + digit
+        for lvl in range(levels):
+            digit = leaf // (FANOUT ** (levels - 1 - lvl))
+            node = level_base[lvl] + digit
             # within-node binary search touches ~log2(F) key slots; charge
             # one page access at the node's first key slot (nodes are 128 B,
             # well under a page) + compare ops

@@ -398,6 +398,153 @@ class LazyGrankBox:
         return self._g
 
 
+def _bulk_schedule(
+    free: int,
+    fast_count: int,
+    min_free: int,
+    low_free: int,
+    high_free: int,
+    kswapd_batch: int,
+    n_cand: int,
+) -> tuple[int, int, int, int, int, int]:
+    """Scalar TPP promote/reclaim schedule for one policy step.
+
+    The TPP interleaving (:meth:`~repro.tiering.policy.TPPPolicy.
+    step_hot_sorted`) is a recurrence over ``fast_free`` and the
+    watermarks: chunk sizes, reclaim amounts and failure counts never look
+    at page identity. This computes the whole step's outcome with plain
+    integers; :meth:`TieredPagePool._try_bulk_step` then applies the array
+    work once. Returns ``(pm_pr, pm_de, pm_fail, direct_total, events,
+    d_demand)``.
+    """
+    done = pm_de = pm_fail = direct_total = events = 0
+    d_demand = 0
+    while done < n_cand:
+        headroom = free - min_free
+        if headroom <= 0:
+            # run_reclaim(allow_direct=True)
+            if free < min_free:
+                n = min(min_free - free, fast_count)
+                if n > 0:
+                    d_demand += n
+                    fast_count -= n
+                    free += n
+                    pm_de += n
+                    direct_total += n
+                events += 1
+            if free < low_free:
+                n = min(high_free - free, kswapd_batch, fast_count)
+                if n > 0:
+                    d_demand += n
+                    fast_count -= n
+                    free += n
+                    pm_de += n
+            headroom = free - min_free
+            if headroom <= 0:
+                pm_fail = n_cand - done
+                break
+        chunk = min(headroom, n_cand - done)
+        done += chunk
+        free -= chunk
+        fast_count += chunk
+    # final run_reclaim() — kswapd only
+    if free < low_free:
+        n = min(high_free - free, kswapd_batch, fast_count)
+        if n > 0:
+            d_demand += n
+            fast_count -= n
+            free += n
+            pm_de += n
+    return done, pm_de, pm_fail, direct_total, events, d_demand
+
+
+def _bulk_schedule_batch(
+    free: np.ndarray,
+    fast_count: np.ndarray,
+    min_free: np.ndarray,
+    low_free: np.ndarray,
+    high_free: np.ndarray,
+    kswapd_batch: np.ndarray,
+    n_cand: np.ndarray,
+):
+    """:func:`_bulk_schedule` across a whole size vector at once.
+
+    Every scalar of the recurrence becomes an ``[n_sizes]`` int64 vector
+    and the while-loop runs until every size's schedule has terminated, so
+    the sweep pays one vectorized pass instead of ``n_sizes`` Python
+    loops. Arithmetic is integer and identical to the scalar version —
+    ``tests/test_engine_equivalence.py`` pins per-lane equality — which is
+    what keeps the cross-size batched policy step bit-exact.
+
+    Returns six ``[n_sizes]`` int64 arrays in :func:`_bulk_schedule`'s
+    order: ``(pm_pr, pm_de, pm_fail, direct_total, events, d_demand)``.
+    """
+    free = np.asarray(free, dtype=np.int64).copy()
+    fast_count = np.asarray(fast_count, dtype=np.int64).copy()
+    min_free = np.asarray(min_free, dtype=np.int64)
+    low_free = np.asarray(low_free, dtype=np.int64)
+    high_free = np.asarray(high_free, dtype=np.int64)
+    kswapd_batch = np.asarray(kswapd_batch, dtype=np.int64)
+    n_cand = np.asarray(n_cand, dtype=np.int64)
+    zeros = np.zeros_like(free)
+    done = zeros.copy()
+    pm_de = zeros.copy()
+    pm_fail = zeros.copy()
+    direct_total = zeros.copy()
+    events = zeros.copy()
+    d_demand = zeros.copy()
+    active = done < n_cand
+    while bool(active.any()):
+        headroom = free - min_free
+        reclaim = active & (headroom <= 0)
+        if bool(reclaim.any()):
+            # run_reclaim(allow_direct=True): direct to min, kswapd to high
+            dm = reclaim & (free < min_free)
+            n = np.where(dm, np.minimum(min_free - free, fast_count), 0)
+            n = np.maximum(n, 0)
+            d_demand += n
+            fast_count -= n
+            free += n
+            pm_de += n
+            direct_total += n
+            events += dm  # one direct-reclaim event even when n == 0
+            km = reclaim & (free < low_free)
+            n = np.where(
+                km,
+                np.minimum(
+                    np.minimum(high_free - free, kswapd_batch), fast_count
+                ),
+                0,
+            )
+            n = np.maximum(n, 0)
+            d_demand += n
+            fast_count -= n
+            free += n
+            pm_de += n
+            headroom = free - min_free
+            fail = reclaim & (headroom <= 0)
+            pm_fail = np.where(fail, n_cand - done, pm_fail)
+            active &= ~fail
+        chunk = np.where(active, np.minimum(headroom, n_cand - done), 0)
+        done += chunk
+        free -= chunk
+        fast_count += chunk
+        active = active & (done < n_cand)
+    # final run_reclaim() — kswapd only
+    km = free < low_free
+    n = np.where(
+        km,
+        np.minimum(np.minimum(high_free - free, kswapd_batch), fast_count),
+        0,
+    )
+    n = np.maximum(n, 0)
+    d_demand += n
+    fast_count -= n
+    free += n
+    pm_de += n
+    return done, pm_de, pm_fail, direct_total, events, d_demand
+
+
 class _FastSet:
     """Swap-remove membership index over the fast tier.
 
@@ -842,22 +989,27 @@ class TieredPagePool:
         return self._heat.current(np.asarray(pages, dtype=np.int64))
 
     # ------------------------------------------------------- bulk policy step
-    def _try_bulk_step(self, cand: np.ndarray):
+    def _try_bulk_step(self, cand: np.ndarray, _sched=None):
         """Whole-policy-step fast path for :class:`~repro.tiering.policy.
         TPPPolicy`: returns ``(pm_pr, pm_de, pm_fail, direct)`` or ``None``
         when the chunked loop must run.
 
         The TPP promote/reclaim interleaving is a scalar recurrence over
-        ``fast_free`` and the watermarks — chunk sizes, reclaim amounts and
-        failure counts never look at page identity. So the whole step's
-        schedule is first computed with plain integers, and the array work
-        is applied once: promotions are a prefix of ``cand`` (every chunk
-        fits its headroom by construction) and victims are the front of the
-        demotion queue. That victim identity is only correct if no page
-        promoted *during this step* would have been selected — guaranteed
-        exactly when the coldest candidate is strictly hotter than the
-        queue's ``D``-th entry (ties fall back, preserving id order).
-        ``cand`` must be unique (the caller checks).
+        ``fast_free`` and the watermarks (:func:`_bulk_schedule`) — chunk
+        sizes, reclaim amounts and failure counts never look at page
+        identity. So the whole step's schedule is first computed with plain
+        integers, and the array work is applied once: promotions are a
+        prefix of ``cand`` (every chunk fits its headroom by construction)
+        and victims are the front of the demotion queue. That victim
+        identity is only correct if no page promoted *during this step*
+        would have been selected — guaranteed exactly when the coldest
+        candidate is strictly hotter than the queue's ``D``-th entry (ties
+        fall back, preserving id order). ``cand`` must be unique (the
+        caller checks). ``_sched`` lets the batched policy step
+        (:meth:`~repro.tiering.policy.TPPPolicy.step_batch`) hand in a
+        schedule it computed for a whole size vector at once; it must have
+        been produced from this pool's current ``fast_free``/watermark
+        state.
         """
         box = self._grank_box
         dq = None
@@ -871,50 +1023,18 @@ class TieredPagePool:
                 )
             elif dq.pend_n:
                 return None  # pending entries from outside a policy step
-        # --- scalar schedule (mirrors TPPPolicy.step_hot_sorted exactly)
-        wm = self.watermarks
-        free = self.fast_free
-        fast_count = self._fast_used
-        n_cand = int(cand.size)
-        done = pm_de = pm_fail = direct_total = events = 0
-        d_demand = 0
-        while done < n_cand:
-            headroom = free - wm.min_free
-            if headroom <= 0:
-                # run_reclaim(allow_direct=True)
-                if free < wm.min_free:
-                    n = min(wm.min_free - free, fast_count)
-                    if n > 0:
-                        d_demand += n
-                        fast_count -= n
-                        free += n
-                        pm_de += n
-                        direct_total += n
-                    events += 1
-                if free < wm.low_free:
-                    n = min(wm.high_free - free, self.kswapd_batch, fast_count)
-                    if n > 0:
-                        d_demand += n
-                        fast_count -= n
-                        free += n
-                        pm_de += n
-                headroom = free - wm.min_free
-                if headroom <= 0:
-                    pm_fail = n_cand - done
-                    break
-            chunk = min(headroom, n_cand - done)
-            done += chunk
-            free -= chunk
-            fast_count += chunk
-        # final run_reclaim() — kswapd only
-        if free < wm.low_free:
-            n = min(wm.high_free - free, self.kswapd_batch, fast_count)
-            if n > 0:
-                d_demand += n
-                fast_count -= n
-                free += n
-                pm_de += n
-        pm_pr = done
+        if _sched is None:
+            wm = self.watermarks
+            _sched = _bulk_schedule(
+                self.fast_free,
+                self._fast_used,
+                wm.min_free,
+                wm.low_free,
+                wm.high_free,
+                self.kswapd_batch,
+                int(cand.size),
+            )
+        pm_pr, pm_de, pm_fail, direct_total, events, d_demand = _sched
         # --- validity: every victim must come from the pre-step fast tier
         eff_cand = None
         victims = None

@@ -18,7 +18,11 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.tiering.page_pool import Tier, TieredPagePool
+from repro.tiering.page_pool import (
+    Tier,
+    TieredPagePool,
+    _bulk_schedule_batch,
+)
 
 
 @dataclass
@@ -83,6 +87,7 @@ class TPPPolicy:
         pool: TieredPagePool,
         cand: np.ndarray,
         assume_unique: bool = False,
+        _sched=None,
     ) -> PolicyOutcome:
         """Run the promotion/reclaim loop on presorted candidates.
 
@@ -95,7 +100,9 @@ class TPPPolicy:
         duplicate ids) the pool's bulk fast path may execute the whole
         promote/reclaim schedule in O(1) array operations; it declines —
         and the chunked loop below runs — whenever its victim-identity
-        precondition does not hold.
+        precondition does not hold. ``_sched`` is a precomputed bulk
+        schedule from :meth:`step_batch` (already clamped to
+        ``promote_batch``).
         """
         out = PolicyOutcome()
         if self.promote_batch is not None and cand.size > self.promote_batch:
@@ -104,7 +111,7 @@ class TPPPolicy:
         if assume_unique:
             bulk = getattr(pool, "_try_bulk_step", None)
             if bulk is not None:
-                res = bulk(cand)
+                res = bulk(cand, _sched=_sched)
                 if res is not None:
                     out.pm_pr, out.pm_de, out.pm_fail, out.direct_reclaim = res
                     return out
@@ -137,6 +144,63 @@ class TPPPolicy:
         out.pm_de += bg + direct
         out.direct_reclaim += direct
         return out
+
+    def step_batch(
+        self,
+        pools,
+        cands,
+        assume_unique: bool = False,
+    ) -> list[PolicyOutcome]:
+        """One policy decision batch across a whole fm-size vector.
+
+        ``pools[s]`` / ``cands[s]`` are one fast-memory size's pool and its
+        presorted promotion candidates (see :meth:`step_hot_sorted` for the
+        candidate contract). The TPP promote/reclaim schedules of every
+        size are computed in **one vectorized pass** over stacked
+        watermark/free-page vectors (:func:`repro.tiering.page_pool.
+        _bulk_schedule_batch`) instead of ``n_sizes`` Python loops; each
+        pool then applies its schedule through the same bulk commit path a
+        serial :meth:`step_hot_sorted` call uses, falling back to the
+        chunked loop per size whenever the bulk victim-identity
+        precondition fails. Outcome-identical to calling
+        :meth:`step_hot_sorted` per size, in order.
+        """
+        if not assume_unique:
+            return [
+                self.step_hot_sorted(pool, cand, assume_unique=False)
+                for pool, cand in zip(pools, cands)
+            ]
+        if self.promote_batch is not None:
+            cands = [c[: self.promote_batch] for c in cands]
+        n = len(pools)
+        free = np.empty(n, dtype=np.int64)
+        fast_count = np.empty(n, dtype=np.int64)
+        min_free = np.empty(n, dtype=np.int64)
+        low_free = np.empty(n, dtype=np.int64)
+        high_free = np.empty(n, dtype=np.int64)
+        kswapd = np.empty(n, dtype=np.int64)
+        n_cand = np.empty(n, dtype=np.int64)
+        for s, (pool, cand) in enumerate(zip(pools, cands)):
+            wm = pool.watermarks
+            free[s] = pool.fast_free
+            fast_count[s] = pool.fast_used
+            min_free[s] = wm.min_free
+            low_free[s] = wm.low_free
+            high_free[s] = wm.high_free
+            kswapd[s] = pool.kswapd_batch
+            n_cand[s] = cand.size
+        sched = _bulk_schedule_batch(
+            free, fast_count, min_free, low_free, high_free, kswapd, n_cand
+        )
+        return [
+            self.step_hot_sorted(
+                pool,
+                cand,
+                assume_unique=True,
+                _sched=tuple(int(col[s]) for col in sched),
+            )
+            for s, (pool, cand) in enumerate(zip(pools, cands))
+        ]
 
 
 class FirstTouchPolicy:

@@ -14,12 +14,20 @@ import numpy as np
 import pytest
 
 from repro.core.microbench import generate_microbench
+from repro.core.perfdb import PerfDB, PerfRecord
 from repro.core.telemetry import ConfigVector
 from repro.core.trace import IntervalAccess, Trace
-from repro.core.tuner import build_database, scale_config
+from repro.core.tuner import TunaTuner, TunerConfig, build_database, scale_config
+from repro.core.watermark import WatermarkController
 from repro.sim.engine import run_trace, simulate
-from repro.sim.sweep import sweep_fm_fracs
-from repro.tiering.page_pool import LazyHeat, TieredPagePool, _FastSet
+from repro.sim.sweep import TunedSlice, sweep_fm_fracs, sweep_tuned
+from repro.tiering.page_pool import (
+    LazyHeat,
+    TieredPagePool,
+    _FastSet,
+    _bulk_schedule,
+    _bulk_schedule_batch,
+)
 from repro.tiering.reference_pool import ReferencePagePool
 
 
@@ -155,6 +163,165 @@ class TestSweepEquivalence:
         assert np.array_equal(
             db_fast.records[0].times, db_runtrace.records[0].times
         )
+
+
+def synthetic_db(rss=6_000, max_loss=0.4):
+    """A one-record database whose loss curve grows linearly as fm
+    shrinks, so every sane τ maps to a definite (mid-curve) target size
+    and the tuner actually moves the watermarks."""
+    grid = np.round(np.arange(1.0, 0.19, -0.05), 3)
+    cv = ConfigVector(
+        pacc_f=10_000, pacc_s=500, pm_de=20, pm_pr=20, ai=6.0,
+        rss_pages=rss, hot_thr=4, num_threads=1,
+    )
+    times = 1.0 + np.linspace(0.0, max_loss, grid.size)
+    db = PerfDB()
+    db.add(PerfRecord(config=cv, fm_fracs=grid, times=times))
+    db.build()
+    return db
+
+
+def make_tuner(db, tau, max_step_frac=0.08):
+    """A tuner with an *unbound* controller (the sweep/engine binds it)."""
+    return TunaTuner(
+        db,
+        WatermarkController(max_step_frac=max_step_frac),
+        TunerConfig(target_loss=tau, cooldown_windows=3),
+    )
+
+
+def assert_tuned_equal(sim_res, sweep_res, sim_tuner, sweep_tuner):
+    assert sim_res.stats == sweep_res.stats
+    assert np.array_equal(sim_res.interval_times, sweep_res.interval_times)
+    assert np.array_equal(sim_res.fm_sizes, sweep_res.fm_sizes)
+    assert sim_res.configs == sweep_res.configs
+    assert sim_res.total_time == sweep_res.total_time
+    if sim_tuner is None:
+        assert sweep_tuner is None
+        return
+    assert [d.__dict__ for d in sim_tuner.decisions] == [
+        d.__dict__ for d in sweep_tuner.decisions
+    ]
+    assert [e.__dict__ for e in sim_tuner.controller.log] == [
+        e.__dict__ for e in sweep_tuner.controller.log
+    ]
+
+
+class TestTunedSweepEquivalence:
+    """sweep_tuned == one simulate(..., tuner=...) per slice, bit for bit:
+    counters, interval times, config vectors, per-interval fm sizes, tuner
+    decisions and watermark event logs."""
+
+    SPECS = [(0.05, 3), (0.10, 2), (0.20, 4), (None, None)]
+
+    def _run_pair(self, tr, db):
+        per = []
+        for tau, te in self.SPECS:
+            tuner = make_tuner(db, tau) if tau is not None else None
+            per.append(
+                (
+                    simulate(tr, fm_frac=1.0, tuner=tuner, tune_every=te),
+                    tuner,
+                )
+            )
+        tuners = [
+            make_tuner(db, tau) if tau is not None else None
+            for tau, _ in self.SPECS
+        ]
+        slices = [
+            TunedSlice(1.0, tuner, te)
+            for tuner, (_, te) in zip(tuners, self.SPECS)
+        ]
+        return per, list(zip(sweep_tuned(tr, slices), tuners))
+
+    def test_random_trace_with_live_watermark_moves(self):
+        tr = random_trace(3, n_intervals=30)
+        db = synthetic_db()
+        per, swept = self._run_pair(tr, db)
+        moved = 0
+        for (sim_res, sim_tuner), (sweep_res, sweep_tuner) in zip(per, swept):
+            assert_tuned_equal(sim_res, sweep_res, sim_tuner, sweep_tuner)
+            if sweep_tuner is not None:
+                moved += len(sweep_tuner.controller.log)
+        # the scenario must exercise actuation, not just idle along
+        assert moved > 0
+        assert any(res.fm_sizes.min() < tr.rss_pages for res, _ in swept[:3])
+
+    def test_microbench_trace(self):
+        tr = microbench_trace(rss=8_000, pacc_f=24_000, pacc_s=800,
+                              n_intervals=12)
+        db = synthetic_db(rss=8_000)
+        per, swept = self._run_pair(tr, db)
+        for (sim_res, sim_tuner), (sweep_res, sweep_tuner) in zip(per, swept):
+            assert_tuned_equal(sim_res, sweep_res, sim_tuner, sweep_tuner)
+
+    def test_reference_pool_anchor(self):
+        """The frozen seed pool is the golden model for the tuned path too:
+        simulate(tuner=...) over ReferencePagePool == the tuned sweep."""
+        tr = random_trace(5, n_intervals=24)
+        db = synthetic_db()
+        ref_tuner = make_tuner(db, 0.10)
+        ref = simulate(tr, fm_frac=1.0, tuner=ref_tuner, tune_every=2,
+                       pool_factory=ReferencePagePool)
+        sweep_tuner = make_tuner(db, 0.10)
+        (res,) = sweep_tuned(tr, [TunedSlice(1.0, sweep_tuner, 2)])
+        assert_tuned_equal(ref, res, ref_tuner, sweep_tuner)
+
+    def test_plain_slice_matches_untuned_simulate(self):
+        tr = random_trace(6)
+        (res,) = sweep_tuned(tr, [TunedSlice(0.6)])
+        per = simulate(tr, fm_frac=0.6)
+        assert res.stats == per.stats
+        assert np.array_equal(res.interval_times, per.interval_times)
+        assert np.array_equal(res.fm_sizes, per.fm_sizes)
+
+    def test_feedback_guard_equivalence(self):
+        """Deep-shrink slices trip the closed-loop feedback guard (grow
+        hard + cooldown); the sweep must replay that path exactly too."""
+        tr = random_trace(7, n_intervals=30)
+        db = synthetic_db(max_loss=0.02)  # db says everything is safe
+        sim_tuner = make_tuner(db, 0.05, max_step_frac=0.2)
+        sim_res = simulate(tr, fm_frac=1.0, tuner=sim_tuner, tune_every=2)
+        sweep_tuner = make_tuner(db, 0.05, max_step_frac=0.2)
+        (res,) = sweep_tuned(tr, [TunedSlice(1.0, sweep_tuner, 2)])
+        assert_tuned_equal(sim_res, res, sim_tuner, sweep_tuner)
+
+
+class TestBatchPolicySchedule:
+    """The cross-size vectorized TPP schedule == the scalar recurrence."""
+
+    def test_matches_scalar_on_random_states(self):
+        rng = np.random.default_rng(11)
+        n = 500
+        cap = rng.integers(100, 5_000, size=n)
+        fm = np.maximum(1, (cap * rng.uniform(0.05, 1.0, size=n)).astype(np.int64))
+        low = cap - fm
+        min_free = (0.8 * low).astype(np.int64)
+        fast_count = rng.integers(0, cap + 1)
+        free = cap - fast_count
+        kswapd = np.maximum(128, cap // 64)
+        n_cand = rng.integers(0, 3_000, size=n)
+        batch = _bulk_schedule_batch(
+            free, fast_count, min_free, low, low, kswapd, n_cand
+        )
+        for s in range(n):
+            scalar = _bulk_schedule(
+                int(free[s]), int(fast_count[s]), int(min_free[s]),
+                int(low[s]), int(low[s]), int(kswapd[s]), int(n_cand[s]),
+            )
+            assert tuple(int(col[s]) for col in batch) == scalar, s
+
+    def test_step_batch_matches_serial_steps(self):
+        from repro.tiering.policy import TPPPolicy
+
+        tr = random_trace(9)
+        fracs = np.array([0.9, 0.5, 0.25])
+        res = sweep_fm_fracs(tr, fracs)  # drives step_batch internally
+        for i, f in enumerate(fracs):
+            per = simulate(tr, fm_frac=float(f),
+                           policy=TPPPolicy(hot_thr=4))
+            assert res.stats[i] == per.stats
+            assert np.array_equal(res.interval_times[i], per.interval_times)
 
 
 class TestIncrementalPrimitives:

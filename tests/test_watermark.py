@@ -1,0 +1,119 @@
+"""WatermarkController edge cases (paper Section 4 actuation).
+
+The controller is the only path through which the tuner touches the pool,
+so its clamping/hysteresis corner cases decide whether a noisy tuner can
+thrash the reclaimer: deadband suppression, per-call max-step rate
+limiting (including convergence over repeated calls), clamping of absurd
+targets into ``[1, hw_capacity]``, and the audit log the benchmarks
+(Figs. 3-8) consume.
+"""
+
+import pytest
+
+from repro.core.watermark import WatermarkController, WatermarkEvent
+from repro.tiering.page_pool import TieredPagePool
+
+
+def make(cap=1000, **kw):
+    pool = TieredPagePool(num_pages=cap, hw_capacity=cap)
+    return pool, WatermarkController(pool, **kw)
+
+
+class TestDeadband:
+    def test_small_changes_suppressed_and_unlogged(self):
+        pool, ctl = make(deadband_frac=0.01, max_step_frac=0.5)
+        assert ctl.set_size(995) == 1000  # |Δ| = 5 < 10 = deadband
+        assert ctl.set_size(991) == 1000
+        assert ctl.log == []
+        assert pool.effective_fm_size == 1000
+
+    def test_change_at_deadband_boundary_applies(self):
+        pool, ctl = make(deadband_frac=0.01, max_step_frac=0.5)
+        # |Δ| = 10 == deadband_frac * cap: not strictly inside the band
+        assert ctl.set_size(990) == 990
+        assert len(ctl.log) == 1
+
+    def test_deadband_is_relative_to_current_not_requested(self):
+        pool, ctl = make(deadband_frac=0.01, max_step_frac=1.0)
+        assert ctl.set_size(800) == 800
+        # same absolute target far from the original size, close to current
+        assert ctl.set_size(805) == 800
+        assert len(ctl.log) == 1
+
+
+class TestMaxStepClamp:
+    def test_single_call_clamped(self):
+        pool, ctl = make(max_step_frac=0.1)
+        assert ctl.set_size(100) == 900  # one 10% step, not 90%
+
+    def test_repeated_calls_converge_step_by_step(self):
+        pool, ctl = make(max_step_frac=0.1, deadband_frac=0.0)
+        sizes = [ctl.set_size(500) for _ in range(6)]
+        assert sizes == [900, 800, 700, 600, 500, 500]
+        # the no-op final call (target reached) adds no event
+        assert [e.new_fm for e in ctl.log] == [900, 800, 700, 600, 500]
+        assert pool.effective_fm_size == 500
+
+    def test_growth_is_rate_limited_too(self):
+        pool, ctl = make(max_step_frac=0.1, deadband_frac=0.0)
+        ctl.set_size(500)
+        for _ in range(4):
+            ctl.set_size(500)
+        assert pool.effective_fm_size == 500
+        assert ctl.set_size(1000) == 600
+        assert ctl.set_size(1000) == 700
+
+    def test_max_step_floor_of_one_page(self):
+        # tiny capacity: int(0.1 * 5) == 0 must still allow 1-page steps
+        pool = TieredPagePool(num_pages=5, hw_capacity=5)
+        ctl = WatermarkController(pool, max_step_frac=0.1, deadband_frac=0.0)
+        assert ctl.set_size(1) == 4
+
+
+class TestCapacityClamp:
+    def test_target_above_capacity_clamps(self):
+        pool, ctl = make(max_step_frac=1.0, deadband_frac=0.0)
+        pool.set_fm_size(900)
+        assert ctl.set_size(10_000) == 1000
+        assert pool.effective_fm_size == 1000
+
+    def test_target_zero_or_negative_clamps_to_one(self):
+        pool = TieredPagePool(num_pages=10, hw_capacity=10)
+        ctl = WatermarkController(pool, max_step_frac=1.0, deadband_frac=0.0)
+        assert ctl.set_size(0) == 1
+        assert pool.effective_fm_size == 1
+        assert ctl.set_size(-37) == 1  # inside deadband of current? no: 0.0
+        assert pool.effective_fm_size == 1
+
+
+class TestEventLog:
+    def test_event_contents(self):
+        pool, ctl = make(max_step_frac=0.1, deadband_frac=0.0)
+        ctl.set_size(500, t=1.5)
+        ctl.set_size(500, t=2.5)
+        assert [type(e) for e in ctl.log] == [WatermarkEvent, WatermarkEvent]
+        e0, e1 = ctl.log
+        assert (e0.t, e0.old_fm, e0.new_fm) == (1.5, 1000, 900)
+        assert (e1.t, e1.old_fm, e1.new_fm) == (2.5, 900, 800)
+        # the log chains: each event's old_fm is the previous new_fm
+        assert e1.old_fm == e0.new_fm
+
+    def test_suppressed_calls_leave_no_events(self):
+        pool, ctl = make(deadband_frac=0.05, max_step_frac=1.0)
+        ctl.set_size(999, t=0.1)
+        ctl.set_size(1000, t=0.2)
+        assert ctl.log == []
+
+
+class TestLateBinding:
+    def test_unbound_controller_raises(self):
+        ctl = WatermarkController()
+        with pytest.raises(RuntimeError, match="no pool bound"):
+            ctl.set_size(100)
+
+    def test_bind_then_actuate(self):
+        ctl = WatermarkController(max_step_frac=1.0, deadband_frac=0.0)
+        pool = TieredPagePool(num_pages=100, hw_capacity=100)
+        assert ctl.bind(pool) is ctl
+        assert ctl.set_size(40) == 40
+        assert pool.effective_fm_size == 40
