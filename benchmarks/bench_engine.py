@@ -16,6 +16,11 @@ to end, seed vs current engine:
    per-target ``simulate(..., tuner=...)`` over the reference pool. New:
    one :func:`repro.sim.sweep.sweep_tuned` pass carrying every target's
    tuner as a live slice.
+4. **thrash path** — the knee regime the Tuna model hunts (hot set ~2x
+   the fast tier, rotating: reclaim demand reaches into same-interval
+   promotions). Seed: per-size reference-pool loop. New: one
+   :func:`repro.sim.sweep.sweep_fm_fracs` pass, asserted chunked-loop-free
+   via :func:`repro.tiering.policy.chunked_step_count`.
 
 Plus single-run engine throughput (intervals/sec) on the application
 trace. Every path is asserted to produce bit-identical outputs (config
@@ -61,7 +66,9 @@ from repro.core.tuner import TunaTuner, TunerConfig, build_database, scale_confi
 from repro.core.watermark import WatermarkController
 from repro.sim.engine import simulate
 from repro.sim.sweep import TunedSlice, sweep_fm_fracs, sweep_tuned
+from repro.sim.workloads import thrash_trace
 from repro.tiering.page_pool import TieredPagePool
+from repro.tiering.policy import chunked_step_count, reset_chunked_step_count
 from repro.tiering.reference_pool import ReferencePagePool
 
 OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_engine.json"
@@ -94,6 +101,12 @@ class BenchParams:
     # Table 3 sensitivity sweep so the tuners actually shrink/grow
     tuned_targets: tuple = (0.02, 0.05, 0.10, 0.15, 0.25)
     tune_every: int = 3
+    # thrash scenario: rotating hot set ~2x the mid-curve fast tier, the
+    # fracs chosen so every size's reclaim digs into same-step promotions
+    thrash_rss: int = 20_000
+    thrash_intervals: int = 40
+    thrash_fracs: tuple = (0.6, 0.45, 0.35, 0.25)
+    thrash_repeats: int = 5
 
 
 FULL = BenchParams(quick=False)
@@ -106,6 +119,9 @@ QUICK = BenchParams(
     repeats=4,
     ips_repeats=2,
     max_configs=6,
+    thrash_rss=8_000,
+    thrash_intervals=16,
+    thrash_repeats=4,
 )
 
 
@@ -330,6 +346,63 @@ def run(report, params: BenchParams = FULL) -> dict:
         f"{tuned_speedup:.2f}x",
     )
 
+    # --- the thrash path: the migration-failure knee (hot set ~2x the
+    #     fast tier, rotating). Seed: per-size reference loop. New: one
+    #     fixed-size sweep, which must stay on the bulk policy step —
+    #     zero chunked-loop executions — while reproducing the seed
+    #     outputs exactly.
+    thrash_tr = thrash_trace(
+        n_intervals=p.thrash_intervals, rss_pages=p.thrash_rss
+    )
+    thrash_fracs = np.asarray(p.thrash_fracs, dtype=np.float64)
+
+    def _seed_thrash():
+        return [
+            simulate(
+                thrash_tr, fm_frac=float(f), pool_factory=ReferencePagePool
+            )
+            for f in thrash_fracs
+        ]
+
+    def _new_thrash():
+        return sweep_fm_fracs(thrash_tr, thrash_fracs)
+
+    thrash_seed_runs = _seed_thrash()
+    reset_chunked_step_count()
+    thrash_new = _new_thrash()
+    thrash_chunked = chunked_step_count()
+    if thrash_chunked:
+        raise AssertionError(
+            f"engine bench: thrash sweep executed the chunked loop "
+            f"{thrash_chunked} times"
+        )
+    thrash_migrations = 0
+    for i, r_seed in enumerate(thrash_seed_runs):
+        if r_seed.stats != thrash_new.stats[i] or not np.array_equal(
+            r_seed.interval_times, thrash_new.interval_times[i]
+        ):
+            raise AssertionError("engine bench: thrash path outputs diverge")
+        thrash_migrations += r_seed.migrations
+    if thrash_migrations == 0:
+        # without churn the scenario is not in the thrash regime at all
+        raise AssertionError("engine bench: thrash scenario did not migrate")
+
+    thrash_seed_ts, thrash_new_ts = [], []
+    for _ in range(p.thrash_repeats):
+        thrash_seed_ts.append(_timed(_seed_thrash))
+        thrash_new_ts.append(_timed(_new_thrash))
+    th_seed, th_new = min(thrash_seed_ts), min(thrash_new_ts)
+    thrash_ratio = float(
+        np.median([n / s for s, n in zip(thrash_seed_ts, thrash_new_ts)])
+    )
+    thrash_speedup = th_seed / th_new
+    report("engine/thrash_path_seed", th_seed * 1e6, f"{th_seed:.2f}s")
+    report("engine/thrash_path_new", th_new * 1e6, f"{th_new:.2f}s")
+    report(
+        "engine/thrash_path_speedup", thrash_speedup * 1e6,
+        f"{thrash_speedup:.2f}x",
+    )
+
     results = {
         "quick": p.quick,
         "n_configs": len(configs),
@@ -354,6 +427,15 @@ def run(report, params: BenchParams = FULL) -> dict:
         "tuned_path_new_s": round(tt_new, 3),
         "tuned_path_speedup": round(tuned_speedup, 2),
         "tuned_path_ratio": round(tuned_ratio, 4),
+        "thrash_rss": p.thrash_rss,
+        "thrash_intervals": p.thrash_intervals,
+        "thrash_fracs": list(p.thrash_fracs),
+        "thrash_migrations": int(thrash_migrations),
+        "thrash_sweep_chunked_steps": int(thrash_chunked),
+        "thrash_path_seed_s": round(th_seed, 3),
+        "thrash_path_new_s": round(th_new, 3),
+        "thrash_path_speedup": round(thrash_speedup, 2),
+        "thrash_path_ratio": round(thrash_ratio, 4),
     }
     if not p.quick:
         # full runs own the committed baseline; they keep the CI quick
@@ -367,7 +449,7 @@ def run(report, params: BenchParams = FULL) -> dict:
     return results
 
 
-GATED_PATHS = ("bench_db_path", "tuned_path")
+GATED_PATHS = ("bench_db_path", "tuned_path", "thrash_path")
 
 
 def check_gate(fresh: dict, baseline: dict, margin: float = 1.25) -> list[str]:

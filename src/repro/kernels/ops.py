@@ -29,6 +29,36 @@ def _interpret() -> bool:
     return _MODE == "interpret" or jax.default_backend() != "tpu"
 
 
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-compat ``shard_map``: newer jax exports ``jax.shard_map``
+    (replication checking via ``check_vma``); the pinned 0.4.x line only
+    has ``jax.experimental.shard_map.shard_map`` (same knob named
+    ``check_rep``). Resolve whichever this jax provides — replication
+    checking stays off either way (the LSE merge's psum outputs are
+    per-shard-identical by construction, which the checker cannot see).
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        try:
+            return sm(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_vma=False,
+            )
+        except TypeError:
+            # intermediate releases export jax.shard_map with the old
+            # check_rep spelling
+            return sm(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=False,
+            )
+    from jax.experimental.shard_map import shard_map as sm
+
+    return sm(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False,
+    )
+
+
 # --------------------------------------------------------------- attention
 def attention(q, k, v, causal: bool = True):
     """Training/prefill attention; flash kernel on TPU, reference on CPU."""
@@ -110,20 +140,18 @@ def cp_decode_attention(q, k_cache, v_cache, valid_len, mesh,
     qspec = P(batch_axis, None, None, None)
     kvspec = P(batch_axis, seq_axis, None, None)
     if quant:
-        fn = jax.shard_map(
+        fn = _shard_map(
             local,
             mesh=mesh,
             in_specs=(qspec, kvspec, kvspec, kvspec, kvspec, P()),
             out_specs=qspec,
-            check_vma=False,
         )
         return fn(q, k_cache, v_cache, k_scale, v_scale, valid_len)
-    fn = jax.shard_map(
+    fn = _shard_map(
         lambda qb, kb, vb, vlen: local(qb, kb, vb, None, None, vlen),
         mesh=mesh,
         in_specs=(qspec, kvspec, kvspec, P()),
         out_specs=qspec,
-        check_vma=False,
     )
     return fn(q, k_cache, v_cache, valid_len)
 

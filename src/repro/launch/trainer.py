@@ -14,7 +14,7 @@ import jax
 
 from repro.checkpoint import CheckpointManager
 from repro.data import SyntheticLMDataset
-from repro.launch.train import make_train_fns
+from repro.launch.train import make_train_fns, width_scaled_lr
 from repro.models.config import ModelConfig
 from repro.runtime import StepWatchdog, StragglerMonitor, retry_step
 
@@ -40,8 +40,24 @@ def train(
     remat: str = "none",
     seed: int = 0,
     inject_failure_at: int | None = None,
+    lr: float | None = None,
+    warmup: int | None = None,
+    total_steps: int = 10_000,
 ) -> TrainReport:
-    fns = make_train_fns(cfg, mesh, remat=remat)
+    # The production schedule (3e-4 peak, 200-step warmup) never leaves
+    # early warmup on the reduced `.scaled()` configs: a 25-step smoke run
+    # tops out at lr ~4e-5, so losses only reflect per-batch noise. The
+    # defaults transfer the peak lr across width and shorten warmup for
+    # smoke widths. Both stay functions of the *global* step only (never
+    # of this call's ``steps``), so an interrupted run resumed from a
+    # checkpoint replays the exact same schedule (bit-exact resume).
+    if lr is None:
+        lr = width_scaled_lr(cfg.d_model)
+    if warmup is None:
+        warmup = 3 if cfg.d_model <= 256 else 200
+    fns = make_train_fns(
+        cfg, mesh, lr=lr, warmup=warmup, total_steps=total_steps, remat=remat
+    )
     ds = SyntheticLMDataset(cfg.vocab_size, seq_len, global_batch, seed=seed)
     step_jit = jax.jit(
         fns["step"],

@@ -23,7 +23,17 @@ in a single pass**:
   vectorized policy decision batch per interval**
   (:meth:`~repro.tiering.policy.TPPPolicy.step_batch` over stacked
   watermark/free-page vectors), so the policy layer does not pay
-  ``n_sizes`` Python loops either.
+  ``n_sizes`` Python loops either;
+* every size commits its schedule through the pool's bulk step — **in
+  every regime, including thrash**. When a size's reclaim demand reaches
+  into pages promoted earlier in the same step (watermarks near capacity,
+  candidate counts far beyond the headroom, kswapd starved — exactly the
+  knee region the Tuna model hunts), victim identities are resolved
+  against the schedule's availability horizons in one merge per slice
+  (:func:`repro.tiering.page_pool._resolve_step_victims`) instead of
+  dropping to the per-size chunked loop. Sweeps are chunked-loop-free end
+  to end; :func:`repro.tiering.policy.chunked_step_count` counts any
+  fallback executions and the engine benchmark asserts it stays zero.
 
 Tuned-sweep mode (:func:`sweep_tuned`)
 --------------------------------------
@@ -63,6 +73,12 @@ of the PR-1 schema (``bench_db_path_{seed_s,new_s,speedup}``,
 :func:`sweep_tuned` pass), ``tuned_targets`` (the loss-target vector
 swept), ``tuned_outputs_identical`` (the equivalence gate that ran before
 timing), and ``quick`` (whether the CI quick mode produced the file).
+``thrash_path_seed_s`` / ``thrash_path_new_s`` / ``thrash_path_speedup``
+/ ``thrash_path_ratio`` track the thrash scenario (hot set ~2x the fast
+tier, rotating): a fixed-size sweep deep in the migration-failure regime,
+seed per-size reference loop vs one sweep pass, with
+``thrash_sweep_chunked_steps`` asserting the sweep never executed the
+chunked loop.
 """
 
 from __future__ import annotations
@@ -131,6 +147,7 @@ def _sweep_run(
     collect_configs: bool,
     tuners: list | None = None,
     tune_everys: list | None = None,
+    kswapd_batch: int | None = None,
 ):
     """Shared sweep driver: one trace pass across the whole size vector.
 
@@ -157,7 +174,7 @@ def _sweep_run(
             interval_touch=interval_touch,
             hw_capacity=cap,
             page_bytes=hw.page_bytes,
-            kswapd_batch=None,
+            kswapd_batch=kswapd_batch,
             seed=seed,
         )
         pool.set_fm_size(int(round(fm_fracs[s] * cap)))
@@ -348,20 +365,23 @@ def sweep_fm_fracs(
     hw_capacity_pages: int | None = None,
     seed: int = 0,
     collect_configs: bool = False,
+    kswapd_batch: int | None = None,
 ) -> SweepResult:
     """Run ``trace`` once, concurrently at every fraction in ``fm_fracs``.
 
     Equivalent to ``[simulate(trace, fm_frac=f, policy=TPPPolicy(hot_thr))
     for f in fm_fracs]`` (same counters, same interval times), at roughly
     the cost of the most expensive single size plus one cross-size
-    vectorized policy step per interval.
+    vectorized policy step per interval. ``kswapd_batch`` overrides every
+    slice pool's background-reclaim budget (the equivalence tests starve
+    it to force the thrash regime); ``None`` keeps the pool default.
     """
     fm_fracs = np.asarray(fm_fracs, dtype=np.float64)
     if fm_fracs.size == 0:
         raise ValueError("sweep_fm_fracs needs at least one fm fraction")
     times, pools, configs_out, _, _ = _sweep_run(
         trace, fm_fracs, hot_thr, hw, hw_capacity_pages, seed,
-        collect_configs,
+        collect_configs, kswapd_batch=kswapd_batch,
     )
     return SweepResult(
         name=trace.name,
@@ -379,6 +399,7 @@ def sweep_tuned(
     hw: HardwareProfile = OPTANE_LIKE,
     hw_capacity_pages: int | None = None,
     seed: int = 0,
+    kswapd_batch: int | None = None,
 ) -> list:
     """Run ``trace`` once across a vector of :class:`TunedSlice` settings.
 
@@ -403,6 +424,7 @@ def sweep_tuned(
     times, pools, configs_out, fm_sizes, costs = _sweep_run(
         trace, fm_fracs, hot_thr, hw, hw_capacity_pages, seed,
         collect_configs=True, tuners=tuners, tune_everys=tune_everys,
+        kswapd_batch=kswapd_batch,
     )
     return [
         SimResult(

@@ -16,12 +16,19 @@ operates on.
 | pagerank | 15.8 G    | ~60 MB         | full sweeps, power law      |
 | xsbench  | 16.4 G    | ~60 MB         | random lookups, high AI     |
 | btree    | 10.8 G    | ~45 MB         | Zipf lookups, hot root      |
+
+``thrash`` is not from the paper's table: it is the adversarial rotating
+working set (~2x the fast tier) that pins the migration-failure /
+direct-reclaim regime the Tuna model's knee lives in — the engine
+benchmark and the equivalence suite sweep it to exercise the bulk
+policy step's thrash path.
 """
 
 from repro.sim.workloads.base import PageMapper
 from repro.sim.workloads.graphs import bfs_trace, pagerank_trace, sssp_trace
 from repro.sim.workloads.xsbench import xsbench_trace
 from repro.sim.workloads.btree import btree_trace
+from repro.sim.workloads.thrash import thrash_trace
 
 WORKLOADS = {
     "bfs": bfs_trace,
@@ -29,7 +36,8 @@ WORKLOADS = {
     "pagerank": pagerank_trace,
     "xsbench": xsbench_trace,
     "btree": btree_trace,
+    "thrash": thrash_trace,
 }
 
 __all__ = ["WORKLOADS", "PageMapper", "bfs_trace", "sssp_trace",
-           "pagerank_trace", "xsbench_trace", "btree_trace"]
+           "pagerank_trace", "xsbench_trace", "btree_trace", "thrash_trace"]

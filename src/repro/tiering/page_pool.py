@@ -406,6 +406,7 @@ def _bulk_schedule(
     high_free: int,
     kswapd_batch: int,
     n_cand: int,
+    events_out: list | None = None,
 ) -> tuple[int, int, int, int, int, int]:
     """Scalar TPP promote/reclaim schedule for one policy step.
 
@@ -416,6 +417,14 @@ def _bulk_schedule(
     integers; :meth:`TieredPagePool._try_bulk_step` then applies the array
     work once. Returns ``(pm_pr, pm_de, pm_fail, direct_total, events,
     d_demand)``.
+
+    ``events_out``, when given, receives one ``(promoted_prefix, demand)``
+    tuple per demoting reclaim invocation, in step order (the direct and
+    kswapd portions of one invocation are fused: no promotion happens
+    between them, so they select victims from the same availability set).
+    ``promoted_prefix`` is how many candidates had been promoted when the
+    reclaim ran — the availability horizon the thrash-regime victim
+    resolver (:func:`_resolve_step_victims`) partitions against.
     """
     done = pm_de = pm_fail = direct_total = events = 0
     d_demand = 0
@@ -423,10 +432,12 @@ def _bulk_schedule(
         headroom = free - min_free
         if headroom <= 0:
             # run_reclaim(allow_direct=True)
+            d_event = 0
             if free < min_free:
                 n = min(min_free - free, fast_count)
                 if n > 0:
                     d_demand += n
+                    d_event += n
                     fast_count -= n
                     free += n
                     pm_de += n
@@ -436,9 +447,12 @@ def _bulk_schedule(
                 n = min(high_free - free, kswapd_batch, fast_count)
                 if n > 0:
                     d_demand += n
+                    d_event += n
                     fast_count -= n
                     free += n
                     pm_de += n
+            if events_out is not None and d_event:
+                events_out.append((done, d_event))
             headroom = free - min_free
             if headroom <= 0:
                 pm_fail = n_cand - done
@@ -455,6 +469,8 @@ def _bulk_schedule(
             fast_count -= n
             free += n
             pm_de += n
+            if events_out is not None:
+                events_out.append((done, n))
     return done, pm_de, pm_fail, direct_total, events, d_demand
 
 
@@ -543,6 +559,76 @@ def _bulk_schedule_batch(
     free += n
     pm_de += n
     return done, pm_de, pm_fail, direct_total, events, d_demand
+
+
+def _resolve_step_victims(
+    base_eff: np.ndarray,
+    base_ids: np.ndarray,
+    cand_eff: np.ndarray,
+    cand_ids: np.ndarray,
+    events: list,
+) -> tuple[int, np.ndarray]:
+    """Victim identities for a bulk step whose reclaim demand reaches into
+    the same step's promotions (the thrash regime).
+
+    The chunked loop interleaves promotion chunks with reclaim; each
+    reclaim demotes the lexicographically (effective heat, page id)
+    coldest *current* fast pages — a set that, under pressure, includes
+    candidates promoted by earlier chunks of the same step. Because the
+    ranking key is frozen for the whole interval, that interleaving is a
+    pure merge process between two key-sorted streams:
+
+    * ``base_ids``/``base_eff`` — the pre-step fast tier in ranking
+      order (only the coldest ``sum(d for _, d in events)`` entries are
+      ever consumed, so callers pass a window that long);
+    * the promoted candidates (``cand_ids``/``cand_eff``, in promotion
+      order), each entering the merge at its ``events`` availability
+      horizon — a candidate is demotable only by reclaims that ran after
+      its promotion chunk.
+
+    Per event the ``d`` globally-coldest available pages are a prefix of
+    each stream, found by an O(log d) boundary search; the candidate
+    stream is maintained as one key-sorted pending array re-partitioned
+    at each availability horizon. No per-page replay, no tier writes —
+    the caller commits both streams' victims in single array operations.
+
+    Returns ``(n_base, cand_taken)``: the step demotes
+    ``base_ids[:n_base]`` and ``cand_ids[cand_taken]`` (mask in
+    promotion order).
+    """
+    order = np.lexsort((cand_ids, cand_eff))
+    inv = np.empty(order.size, dtype=np.int64)
+    inv[order] = np.arange(order.size, dtype=np.int64)
+    s_eff = cand_eff[order]
+    s_ids = cand_ids[order]
+    taken = np.zeros(order.size, dtype=bool)  # by key-sorted position
+    pend = np.empty(0, dtype=np.int64)  # available, key-sorted positions
+    b = 0  # consumed prefix of the base stream
+    p_prev = 0
+    n_base = base_ids.size
+    for p, d in events:
+        if p > p_prev:
+            new = np.sort(inv[p_prev:p])
+            pend = np.insert(pend, np.searchsorted(pend, new), new)
+            p_prev = p
+        # split d = x base + y pending, prefix-wise in key order: binary
+        # search for the unique boundary (keys are distinct: ids tie-break)
+        lo = max(0, d - pend.size)
+        hi = min(d, n_base - b)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            j = pend[d - mid - 1]
+            if (s_eff[j], s_ids[j]) > (base_eff[b + mid], base_ids[b + mid]):
+                lo = mid + 1
+            else:
+                hi = mid
+        x = lo
+        y = d - x
+        if y:
+            taken[pend[:y]] = True
+            pend = pend[y:]
+        b += x
+    return b, taken[inv]
 
 
 class _FastSet:
@@ -989,10 +1075,32 @@ class TieredPagePool:
         return self._heat.current(np.asarray(pages, dtype=np.int64))
 
     # ------------------------------------------------------- bulk policy step
+    def _schedule_events(self, n_cand: int) -> list:
+        """Re-run the scalar schedule recurrence on this pool's current
+        (pre-step) state to recover the per-reclaim availability horizons
+        consumed by :func:`_resolve_step_victims`. Pure integer work; only
+        paid on the thrash path, and must run before any step mutation.
+        """
+        wm = self.watermarks
+        events: list = []
+        _bulk_schedule(
+            self.fast_free,
+            self._fast_used,
+            wm.min_free,
+            wm.low_free,
+            wm.high_free,
+            self.kswapd_batch,
+            int(n_cand),
+            events_out=events,
+        )
+        return events
+
     def _try_bulk_step(self, cand: np.ndarray, _sched=None):
-        """Whole-policy-step fast path for :class:`~repro.tiering.policy.
-        TPPPolicy`: returns ``(pm_pr, pm_de, pm_fail, direct)`` or ``None``
-        when the chunked loop must run.
+        """Whole-policy-step bulk path for :class:`~repro.tiering.policy.
+        TPPPolicy`: returns ``(pm_pr, pm_de, pm_fail, direct)``, or
+        ``None`` only when the pool's queue state was perturbed from
+        outside a policy step (stray pending entries / corrupted supply) —
+        every in-engine regime, including thrash, commits here.
 
         The TPP promote/reclaim interleaving is a scalar recurrence over
         ``fast_free`` and the watermarks (:func:`_bulk_schedule`) — chunk
@@ -1000,16 +1108,31 @@ class TieredPagePool:
         identity. So the whole step's schedule is first computed with plain
         integers, and the array work is applied once: promotions are a
         prefix of ``cand`` (every chunk fits its headroom by construction)
-        and victims are the front of the demotion queue. That victim
-        identity is only correct if no page promoted *during this step*
-        would have been selected — guaranteed exactly when the coldest
-        candidate is strictly hotter than the queue's ``D``-th entry (ties
-        fall back, preserving id order). ``cand`` must be unique (the
-        caller checks). ``_sched`` lets the batched policy step
-        (:meth:`~repro.tiering.policy.TPPPolicy.step_batch`) hand in a
-        schedule it computed for a whole size vector at once; it must have
-        been produced from this pool's current ``fast_free``/watermark
-        state.
+        and victims come from the front of the demotion ranking.
+
+        **Victim-resolution invariant.** Reading victims straight off the
+        ranking front is only correct while no page promoted *during this
+        step* would have been selected — guaranteed exactly when the
+        coldest promoted candidate is strictly hotter than the ranking's
+        ``D``-th entry (ties count as interference, preserving the
+        reference id order). When that precondition fails — the thrash
+        regime: reclaim demand reaching into same-step promotions — the
+        step's reclaim events are replayed as availability horizons over
+        the promotion prefix (:meth:`_schedule_events`), and
+        :func:`_resolve_step_victims` partitions the demotion-ranking
+        cursor against the same-step promotion set in one merge: the
+        interval-frozen ranking key makes the chunked loop's
+        promote/reclaim interleaving a deterministic two-stream merge, so
+        the resolved victim set is identical to the one the chunked loop
+        (and the reference pool's full sort) would demote page by page.
+        Promote + demote arrays are then committed once, exactly as in the
+        fast path.
+
+        ``cand`` must be unique (the caller checks). ``_sched`` lets the
+        batched policy step (:meth:`~repro.tiering.policy.TPPPolicy.
+        step_batch`) hand in a schedule it computed for a whole size
+        vector at once; it must have been produced from this pool's
+        current ``fast_free``/watermark state.
         """
         box = self._grank_box
         dq = None
@@ -1035,38 +1158,83 @@ class TieredPagePool:
                 int(cand.size),
             )
         pm_pr, pm_de, pm_fail, direct_total, events, d_demand = _sched
-        # --- validity: every victim must come from the pre-step fast tier
+        winners = cand[:pm_pr]
+        # --- victim identity: fast path when every victim provably comes
+        # from the pre-step fast tier; thrash path resolves the same-step
+        # promote/demote interleaving otherwise
         eff_cand = None
-        victims = None
+        victims = None  # base-stream victims (pre-step fast tier)
+        kept = winners  # promoted candidates still fast at step end
+        kept_eff = None
+        base_consumed = 0  # dq entries consumed by the thrash path
         new_ptr = self._gptr
         if d_demand:
             if box is not None:
                 g = box.get()
                 victims, new_ptr = g.walk(self.tier, self._gptr, d_demand)
-                if victims.size < d_demand:
-                    return None
-                if pm_pr and float(g.eff[cand[:pm_pr]].min()) <= float(
-                    g.eff[victims[-1]]
+                if victims.size < d_demand or (
+                    pm_pr
+                    and float(g.eff[winners].min())
+                    <= float(g.eff[victims[-1]])
                 ):
-                    return None  # a promoted page could be (tie-)selected
+                    if victims.size + pm_pr < d_demand:
+                        return None  # supply mismatch: corrupted state
+                    base_n, cand_taken = _resolve_step_victims(
+                        g.eff[victims],
+                        victims,
+                        g.eff[winners],
+                        winners,
+                        self._schedule_events(cand.size),
+                    )
+                    victims = victims[:base_n]
+                    kept = winners[~cand_taken]
+                    new_ptr = (
+                        int(g.rank[victims[-1]]) + 1
+                        if base_n
+                        else self._gptr
+                    )
             else:
                 dq._ensure(d_demand)
-                if dq.ids.size - dq.pos < d_demand:
-                    return None  # demand dips into this step's promotions
-                if pm_pr:
+                avail = dq.ids.size - dq.pos
+                interferes = avail < d_demand
+                if not interferes and pm_pr:
                     eff_cand = (
                         self._heat.lookahead(cand) + self.interval_touch[cand]
                     )
-                    if float(eff_cand[:pm_pr].min()) <= dq.eff[
-                        dq.pos + d_demand - 1
-                    ]:
-                        return None  # a promoted page could be (tie-)selected
+                    interferes = bool(
+                        float(eff_cand[:pm_pr].min())
+                        <= dq.eff[dq.pos + d_demand - 1]
+                    )
+                if interferes:
+                    if avail + pm_pr < d_demand:
+                        return None  # supply mismatch: corrupted state
+                    if eff_cand is None:
+                        eff_cand = (
+                            self._heat.lookahead(cand)
+                            + self.interval_touch[cand]
+                        )
+                    w = dq.pos + min(avail, d_demand)
+                    base_n, cand_taken = _resolve_step_victims(
+                        dq.eff[dq.pos : w],
+                        dq.ids[dq.pos : w],
+                        eff_cand[:pm_pr],
+                        winners,
+                        self._schedule_events(cand.size),
+                    )
+                    victims = dq.ids[dq.pos : dq.pos + base_n]
+                    base_consumed = base_n
+                    keep_m = ~cand_taken
+                    kept = winners[keep_m]
+                    kept_eff = eff_cand[:pm_pr][keep_m]
         # --- commit: one batched demote + one batched (prefix) promote
         if d_demand:
             if box is not None:
                 self._gptr = new_ptr
             else:
-                victims = dq.pop(d_demand)
+                if victims is None:
+                    victims = dq.pop(d_demand)
+                else:
+                    dq.pos += base_consumed
                 self._fast.remove(victims)
             self._tier[victims] = _SLOW
             self._fast_used -= d_demand
@@ -1074,25 +1242,28 @@ class TieredPagePool:
             self.stats.pgdemote_kswapd += pm_de - direct_total
         self.stats.direct_reclaim_events += events
         if pm_pr:
-            winners = cand[:pm_pr]
-            self._tier[winners] = _FAST
+            self._tier[kept] = _FAST
             self._fast_used += pm_pr
             if box is not None:
                 g = box.peek()
-                if g is not None:
-                    self._gptr = min(self._gptr, int(g.rank[winners].min()))
+                if g is not None and kept.size:
+                    self._gptr = min(self._gptr, int(g.rank[kept].min()))
             else:
-                self._fast.add(winners)
-                if eff_cand is None:
-                    dq.add_pending(
-                        winners,
-                        self._heat.lookahead(winners)
-                        + self.interval_touch[winners],
-                    )
+                self._fast.add(kept)
+                if kept_eff is not None:
+                    dq.add_pending(kept, kept_eff)
+                elif eff_cand is not None:
+                    dq.add_pending(kept, eff_cand[:pm_pr])
                 else:
-                    dq.add_pending(winners, eff_cand[:pm_pr])
+                    dq.add_pending(
+                        kept,
+                        self._heat.lookahead(kept)
+                        + self.interval_touch[kept],
+                    )
         self.stats.pgpromote_success += pm_pr
-        self.stats.pgpromote_fail += pm_fail
+        # pm_fail is reported to the policy outcome only: the chunked loop
+        # never calls promote() on the reclaim-exhausted tail, so the pool
+        # counter (what the profiler snapshots) must not include it either
         return pm_pr, pm_de, pm_fail, direct_total
 
     # ------------------------------------------------------------- sweep glue

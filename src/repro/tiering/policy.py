@@ -24,6 +24,28 @@ from repro.tiering.page_pool import (
     _bulk_schedule_batch,
 )
 
+# Process-wide count of chunked promote/reclaim loop executions (the
+# per-chunk Python fallback in :meth:`TPPPolicy.step_hot_sorted`). The
+# bulk path now covers every in-engine regime including thrash, so the
+# sweep engines are expected to keep this at zero — the engine benchmark
+# and the equivalence tests assert it via reset/read around their runs.
+# Every candidate-bearing chunked execution counts, whatever the pool:
+# pools without a bulk path (the reference pool runs chunked by design)
+# increment it too, so reset immediately before the section you assert
+# on. Steps with no promotion candidates never enter the loop and are
+# not counted.
+_chunked_steps = 0
+
+
+def chunked_step_count() -> int:
+    """Chunked-loop executions since the last reset (fallback telemetry)."""
+    return _chunked_steps
+
+
+def reset_chunked_step_count() -> None:
+    global _chunked_steps
+    _chunked_steps = 0
+
 
 @dataclass
 class PolicyOutcome:
@@ -97,10 +119,15 @@ class TPPPolicy:
         precomputes once per interval and mask-filters per fast-memory size
         (a subset of a stably sorted sequence keeps the stable order).
         With ``assume_unique`` (the caller has verified ``cand`` holds no
-        duplicate ids) the pool's bulk fast path may execute the whole
-        promote/reclaim schedule in O(1) array operations; it declines —
-        and the chunked loop below runs — whenever its victim-identity
-        precondition does not hold. ``_sched`` is a precomputed bulk
+        duplicate ids) the pool's bulk path executes the whole
+        promote/reclaim schedule in O(1) array operations — including the
+        thrash regime, where same-step promotions are resolved as demotion
+        victims by the bulk merge (see
+        :meth:`~repro.tiering.page_pool.TieredPagePool._try_bulk_step`).
+        The chunked loop below only runs for non-unique candidates, pools
+        without a bulk path (the reference pool), or queue state perturbed
+        from outside a policy step; executions are counted in
+        :func:`chunked_step_count`. ``_sched`` is a precomputed bulk
         schedule from :meth:`step_batch` (already clamped to
         ``promote_batch``).
         """
@@ -118,6 +145,9 @@ class TPPPolicy:
             # chunked fallback: the promotion chunks inherit cand's
             # verified invariants (unique, all slow)
             promote = getattr(pool, "_promote_cand", pool.promote)
+        if cand.size:
+            global _chunked_steps
+            _chunked_steps += 1
         # Promotion is interleaved with background reclaim (TPP decouples
         # allocation and reclaim): promote only into the headroom above the
         # min watermark, let kswapd restore the watermark, repeat. Direct
@@ -160,10 +190,12 @@ class TPPPolicy:
         watermark/free-page vectors (:func:`repro.tiering.page_pool.
         _bulk_schedule_batch`) instead of ``n_sizes`` Python loops; each
         pool then applies its schedule through the same bulk commit path a
-        serial :meth:`step_hot_sorted` call uses, falling back to the
-        chunked loop per size whenever the bulk victim-identity
-        precondition fails. Outcome-identical to calling
-        :meth:`step_hot_sorted` per size, in order.
+        serial :meth:`step_hot_sorted` call uses. Sizes whose reclaim
+        demand reaches into their own step's promotions (the thrash
+        regime) stay on the bulk path too: their victim identities are
+        resolved against the schedule's availability horizons in one merge
+        per slice, so no size drops to the chunked loop. Outcome-identical
+        to calling :meth:`step_hot_sorted` per size, in order.
         """
         if not assume_unique:
             return [

@@ -10,6 +10,9 @@ is kept verbatim as :class:`repro.tiering.reference_pool.ReferencePagePool`
 for exactly this purpose.
 """
 
+import functools
+import heapq
+
 import numpy as np
 import pytest
 
@@ -21,12 +24,14 @@ from repro.core.tuner import TunaTuner, TunerConfig, build_database, scale_confi
 from repro.core.watermark import WatermarkController
 from repro.sim.engine import run_trace, simulate
 from repro.sim.sweep import TunedSlice, sweep_fm_fracs, sweep_tuned
+from repro.tiering import policy as policy_mod
 from repro.tiering.page_pool import (
     LazyHeat,
     TieredPagePool,
     _FastSet,
     _bulk_schedule,
     _bulk_schedule_batch,
+    _resolve_step_victims,
 )
 from repro.tiering.reference_pool import ReferencePagePool
 
@@ -285,6 +290,172 @@ class TestTunedSweepEquivalence:
         sweep_tuner = make_tuner(db, 0.05, max_step_frac=0.2)
         (res,) = sweep_tuned(tr, [TunedSlice(1.0, sweep_tuner, 2)])
         assert_tuned_equal(sim_res, res, sim_tuner, sweep_tuner)
+
+
+class _ChunkedOnlyPool(TieredPagePool):
+    """Incremental pool with the bulk step disabled: forces the chunked
+    promote/reclaim loop, the third lane of the thrash equivalence."""
+
+    def _try_bulk_step(self, cand, _sched=None):
+        return None
+
+
+def pressure_trace(seed, rss=6_000, n_intervals=12):
+    """Rotating hot window ~ most of the RSS: candidate counts far beyond
+    any mid-curve headroom, so per-step reclaim demand digs into the same
+    step's promotions (the bulk path's thrash regime)."""
+    rng = np.random.default_rng(seed)
+    tr = Trace(name=f"press{seed}", rss_pages=rss)
+    hot_n = int(rss * rng.uniform(0.5, 0.8))
+    stride = max(1, int(hot_n * rng.uniform(0.15, 0.45)))
+    for i in range(n_intervals):
+        hot = (np.arange(hot_n) + i * stride) % rss
+        extra = rng.choice(rss, size=rss // 10, replace=False)
+        pages = np.unique(np.concatenate([hot, extra]))
+        counts = rng.integers(4, 9, size=pages.size)  # nearly all hot
+        tr.append(IntervalAccess(pages=pages, counts=counts, ops=1000.0))
+    return tr
+
+
+class TestThrashEquivalence:
+    """The thrash regime stays on the bulk path and stays bit-exact:
+    bulk == forced-chunked == ReferencePagePool per lane, across
+    near-capacity watermarks, candidate counts >> headroom, and starved
+    kswapd budgets — and the sweeps never execute the chunked loop."""
+
+    def _assert_three_lanes(self, tr, fracs, cap=None, kswapd=None):
+        policy_mod.reset_chunked_step_count()
+        res = sweep_fm_fracs(
+            tr, fracs, hw_capacity_pages=cap, kswapd_batch=kswapd,
+            collect_configs=True,
+        )
+        assert policy_mod.chunked_step_count() == 0
+        for i, f in enumerate(fracs):
+            ref = simulate(
+                tr, fm_frac=float(f), hw_capacity_pages=cap,
+                pool_factory=functools.partial(
+                    ReferencePagePool, kswapd_batch=kswapd
+                ),
+            )
+            chunked = simulate(
+                tr, fm_frac=float(f), hw_capacity_pages=cap,
+                pool_factory=functools.partial(
+                    _ChunkedOnlyPool, kswapd_batch=kswapd
+                ),
+            )
+            for lane in (ref, chunked):
+                assert res.stats[i] == lane.stats, f
+                assert np.array_equal(
+                    res.interval_times[i], lane.interval_times
+                ), f
+                assert res.configs[i] == lane.configs, f
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_pressure_sweeps_random(self, seed):
+        self._assert_three_lanes(
+            pressure_trace(seed), np.array([0.8, 0.45, 0.25, 0.1])
+        )
+
+    @pytest.mark.parametrize("kswapd", [1, 16, 96])
+    def test_kswapd_starved(self, kswapd):
+        self._assert_three_lanes(
+            pressure_trace(7, rss=4_000, n_intervals=8),
+            np.array([0.6, 0.3, 0.12]),
+            kswapd=kswapd,
+        )
+
+    def test_watermarks_near_capacity(self):
+        # hw capacity at half the RSS, fracs up to 1.0: low_free hits 0,
+        # promotions fail with reclaim exhausted (the latent seed
+        # stats-vs-outcome pm_fail divergence this regime exposed)
+        self._assert_three_lanes(
+            pressure_trace(11, rss=6_000, n_intervals=10),
+            np.array([1.0, 0.97, 0.55, 0.2]),
+            cap=3_000,
+            kswapd=32,
+        )
+
+    def test_tuned_slices_thrash_on_watermark_moves(self):
+        # aggressive tuner steps shrink mid-run: the moved watermarks make
+        # reclaim demand reach same-interval promotions (direct reclaim
+        # fires), and the tuned sweep must replay it all exactly
+        tr = pressure_trace(5, rss=5_000, n_intervals=16)
+        db = synthetic_db(rss=5_000)
+        specs = [(0.25, 2), (0.10, 3), (None, None)]
+        per = []
+        for tau, te in specs:
+            tuner = make_tuner(db, tau, max_step_frac=0.3) if tau else None
+            per.append(
+                (simulate(tr, fm_frac=0.9, tuner=tuner, tune_every=te), tuner)
+            )
+        tuners = [
+            make_tuner(db, tau, max_step_frac=0.3) if tau else None
+            for tau, _ in specs
+        ]
+        policy_mod.reset_chunked_step_count()
+        swept = sweep_tuned(
+            tr, [TunedSlice(0.9, t, te) for t, (_, te) in zip(tuners, specs)]
+        )
+        assert policy_mod.chunked_step_count() == 0
+        moved = direct = 0
+        for (sim_res, sim_tuner), sweep_res, sweep_tuner in zip(
+            per, swept, tuners
+        ):
+            assert_tuned_equal(sim_res, sweep_res, sim_tuner, sweep_tuner)
+            direct += sweep_res.stats["pgdemote_direct"]
+            if sweep_tuner is not None:
+                moved += len(sweep_tuner.controller.log)
+        assert moved > 0 and direct > 0  # the scenario must actually thrash
+
+    @pytest.mark.parametrize("seed", list(range(8)))
+    def test_victim_resolver_matches_event_replay(self, seed):
+        """Property check of the merge itself: random key-sorted base
+        streams, random candidate keys and random availability horizons
+        must select exactly the pages a per-event heap replay demotes."""
+        rng = np.random.default_rng(seed)
+        n_base = int(rng.integers(0, 60))
+        n_cand = int(rng.integers(1, 60))
+        # small integer keys force heavy cross-stream ties (broken by id)
+        base_eff = np.sort(rng.integers(0, 6, size=n_base)).astype(np.float64)
+        base_ids = np.arange(n_base, dtype=np.int64)
+        order = np.lexsort((base_ids, base_eff))
+        base_eff, base_ids = base_eff[order], base_ids[order]
+        cand_eff = rng.integers(0, 6, size=n_cand).astype(np.float64)
+        cand_ids = np.arange(1000, 1000 + n_cand, dtype=np.int64)
+        # availability horizons grow monotonically; every event's demand
+        # stays within the supply promoted-or-resident at that point
+        events, p, demanded = [], 0, 0
+        for _ in range(6):
+            p = int(rng.integers(p, n_cand + 1))
+            avail = n_base + p - demanded
+            if avail > 0:
+                d = int(rng.integers(1, avail + 1))
+                events.append((p, d))
+                demanded += d
+        if not events:
+            events = [(n_cand, max(1, (n_base + n_cand) // 2))]
+        n_b, taken = _resolve_step_victims(
+            base_eff, base_ids, cand_eff, cand_ids, events
+        )
+        # naive replay: per event, pop the d smallest available (eff, id)
+        heap, bi, p_prev = [], 0, 0
+        got_base, got_cand = 0, set()
+        for p_e, d in events:
+            for j in range(p_prev, p_e):
+                heapq.heappush(heap, (cand_eff[j], int(cand_ids[j]), j))
+            p_prev = p_e
+            for _ in range(d):
+                take_base = bi < n_base and (
+                    not heap
+                    or (base_eff[bi], int(base_ids[bi])) < heap[0][:2]
+                )
+                if take_base:
+                    got_base += 1
+                    bi += 1
+                elif heap:
+                    got_cand.add(heapq.heappop(heap)[2])
+        assert n_b == got_base, (seed, events)
+        assert set(np.flatnonzero(taken)) == got_cand, (seed, events)
 
 
 class TestBatchPolicySchedule:

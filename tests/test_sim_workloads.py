@@ -20,6 +20,7 @@ def small_traces():
         "bfs": bfs_trace(n=60_000, n_sources=4),
         "xsbench": WORKLOADS["xsbench"](n_intervals=8, lookups=30_000),
         "btree": WORKLOADS["btree"](n_intervals=8, queries=30_000),
+        "thrash": WORKLOADS["thrash"](n_intervals=8, rss_pages=4_000),
     }
 
 
