@@ -6,21 +6,24 @@ to end, seed vs current engine:
 1. **harvest** — collecting per-interval configuration vectors from an
    application trace at every probe fast-memory size. Seed: one
    ``simulate()`` per size over the reference (dense-rescan) pool.
-   New: one batched sweep (``collect_configs=True``) across all sizes.
+   New: one untuned :class:`~repro.sim.api.Experiment`
+   (``collect_configs=True``), which the :func:`repro.sim.api.run`
+   planner executes as a single batched sweep across all sizes.
 2. **db build** — populating the performance database over the harvested
    operating points. Seed: serial per-(config, fm_frac) reference-pool
-   loop. New: :func:`repro.core.tuner.build_database`'s batched sweep
-   engine with process fan-out.
+   loop. New: :func:`repro.core.tuner.build_database`, one scenario per
+   configuration through the same planner (batched sweep per record,
+   process fan-out across scenarios).
 3. **tuned path** — the paper's headline evaluation loop (TPP+Tuna,
    Figs. 3-8 / Tables 2-3): one closed-loop run per loss target. Seed:
    per-target ``simulate(..., tuner=...)`` over the reference pool. New:
-   one :func:`repro.sim.sweep.sweep_tuned` pass carrying every target's
-   tuner as a live slice.
+   one experiment whose per-target :class:`~repro.sim.api.TunerSpec`
+   policies ride a single tuned-sweep pass as live slices.
 4. **thrash path** — the knee regime the Tuna model hunts (hot set ~2x
    the fast tier, rotating: reclaim demand reaches into same-interval
-   promotions). Seed: per-size reference-pool loop. New: one
-   :func:`repro.sim.sweep.sweep_fm_fracs` pass, asserted chunked-loop-free
-   via :func:`repro.tiering.policy.chunked_step_count`.
+   promotions). Seed: per-size reference-pool loop. New: one untuned
+   experiment executed as a single sweep pass, asserted chunked-loop-free
+   via the ``RunSet.chunked_step_count`` provenance counter.
 
 Plus single-run engine throughput (intervals/sec) on the application
 trace. Every path is asserted to produce bit-identical outputs (config
@@ -64,11 +67,14 @@ from repro.core.microbench import generate_microbench
 from repro.core.trace import IntervalAccess, Trace
 from repro.core.tuner import TunaTuner, TunerConfig, build_database, scale_config
 from repro.core.watermark import WatermarkController
-from repro.sim.engine import simulate
-from repro.sim.sweep import TunedSlice, sweep_fm_fracs, sweep_tuned
+from repro.sim.api import Experiment, PolicySpec, Scenario, TunerSpec
+from repro.sim.api import run as run_experiment
+
+# the seed lanes deliberately pin the frozen pre-redesign implementation
+# (the timing baseline), not the deprecation shim around it
+from repro.sim.engine import _simulate as simulate
 from repro.sim.workloads import thrash_trace
 from repro.tiering.page_pool import TieredPagePool
-from repro.tiering.policy import chunked_step_count, reset_chunked_step_count
 from repro.tiering.reference_pool import ReferencePagePool
 
 OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_engine.json"
@@ -155,8 +161,15 @@ def _seed_harvest(trace: Trace):
 
 
 def _new_harvest(trace: Trace):
-    res = sweep_fm_fracs(trace, HARVEST_FRACS, collect_configs=True)
-    return {float(f): c for f, c in zip(res.fm_fracs, res.configs)}
+    rs = run_experiment(
+        Experiment(
+            name="bench_harvest",
+            scenarios=[Scenario(trace=trace)],
+            fm_fracs=HARVEST_FRACS,
+            collect_configs=True,
+        )
+    )
+    return {float(r.fm_frac): r.result.configs for r in rs.runs}
 
 
 def _operating_points(trace: Trace, by_frac, max_configs: int | None) -> list:
@@ -231,14 +244,31 @@ def _per_size_tuned(trace: Trace, db, p: BenchParams, pool_factory):
 
 
 def _new_tuned(trace: Trace, db, p: BenchParams):
-    """New TPP+Tuna path: every target's tuner rides one batched sweep."""
-    return sweep_tuned(
-        trace,
-        [
-            TunedSlice(1.0, _mk_tuner(db, tau), p.tune_every)
-            for tau in p.tuned_targets
-        ],
+    """New TPP+Tuna path: one declarative experiment whose per-target
+    tuner specs (mirroring :func:`_mk_tuner`) ride one batched tuned
+    sweep; the tuners themselves are constructed inside the run."""
+    rs = run_experiment(
+        Experiment(
+            name="bench_tuned",
+            scenarios=[Scenario(trace=trace)],
+            fm_fracs=(1.0,),
+            policies=[
+                PolicySpec(
+                    label=f"tau{tau:g}",
+                    tuner=TunerSpec(
+                        target_loss=tau,
+                        tune_every=p.tune_every,
+                        k_neighbors=1,
+                        cooldown_windows=3,
+                        max_step_frac=0.05,
+                    ),
+                )
+                for tau in p.tuned_targets
+            ],
+        ),
+        db=db,
     )
+    return [r.result for r in rs.runs]
 
 
 def _timed(fn) -> float:
@@ -365,21 +395,28 @@ def run(report, params: BenchParams = FULL) -> dict:
         ]
 
     def _new_thrash():
-        return sweep_fm_fracs(thrash_tr, thrash_fracs)
+        return run_experiment(
+            Experiment(
+                name="bench_thrash",
+                scenarios=[Scenario(trace=thrash_tr)],
+                fm_fracs=tuple(float(f) for f in thrash_fracs),
+            )
+        )
 
     thrash_seed_runs = _seed_thrash()
-    reset_chunked_step_count()
     thrash_new = _new_thrash()
-    thrash_chunked = chunked_step_count()
+    # provenance surfaced by the RunSet: the sweep must never have
+    # dropped to the per-size chunked loop
+    thrash_chunked = thrash_new.chunked_step_count
     if thrash_chunked:
         raise AssertionError(
             f"engine bench: thrash sweep executed the chunked loop "
             f"{thrash_chunked} times"
         )
     thrash_migrations = 0
-    for i, r_seed in enumerate(thrash_seed_runs):
-        if r_seed.stats != thrash_new.stats[i] or not np.array_equal(
-            r_seed.interval_times, thrash_new.interval_times[i]
+    for r_seed, rec in zip(thrash_seed_runs, thrash_new.runs):
+        if r_seed.stats != rec.result.stats or not np.array_equal(
+            r_seed.interval_times, rec.result.interval_times
         ):
             raise AssertionError("engine bench: thrash path outputs diverge")
         thrash_migrations += r_seed.migrations

@@ -16,6 +16,7 @@ refactors that the equivalence tests in
 
 from __future__ import annotations
 
+import hashlib
 import time
 from pathlib import Path
 
@@ -25,7 +26,8 @@ from repro.core.perfdb import PerfDB
 from repro.core.telemetry import ConfigVector
 from repro.core.trace import Trace, load_trace, save_trace
 from repro.core.tuner import build_database
-from repro.sim.sweep import sweep_fm_fracs
+from repro.sim.api import Experiment, Scenario
+from repro.sim.api import run as run_experiment
 from repro.sim.workloads import WORKLOADS
 
 CACHE = Path(__file__).parent / "_cache"
@@ -56,8 +58,15 @@ def steady_from(cvs: list, skip: int = 3, min_pacc: float = 500.0) -> list:
 def steady_configs(trace: Trace, fm_frac: float, skip: int = 3,
                    min_pacc: float = 500.0) -> list:
     """Per-interval config vectors of a workload at a given fm size."""
-    res = sweep_fm_fracs(trace, [fm_frac], collect_configs=True)
-    return steady_from(res.configs[0], skip, min_pacc)
+    rs = run_experiment(
+        Experiment(
+            name="steady_configs",
+            scenarios=[Scenario(trace=trace)],
+            fm_fracs=(float(fm_frac),),
+            collect_configs=True,
+        )
+    )
+    return steady_from(rs.record().result.configs, skip, min_pacc)
 
 
 def _representative_from(cvs: list, trace: Trace) -> ConfigVector:
@@ -106,7 +115,11 @@ def build_bench_db(
     with process fan-out across configurations.
     """
     CACHE.mkdir(exist_ok=True)
-    f = CACHE / "perfdb"
+    # the cache key carries the workload set: a database built from an
+    # older WORKLOADS dict (e.g. pre-thrash) must not be served silently —
+    # its operating points would not cover the newer scenarios
+    tag = hashlib.md5("|".join(sorted(WORKLOADS)).encode()).hexdigest()[:8]
+    f = CACHE / f"perfdb_{tag}"
     if (f.with_suffix(".json")).exists():
         return PerfDB.load(f)
     rng = np.random.default_rng(seed)
@@ -117,14 +130,20 @@ def build_bench_db(
     rep_fracs = (1.0, 0.95, 0.9, 0.8)
     for name in WORKLOADS:
         tr = get_trace(name)
-        # one batched sweep harvests every needed fast-memory size's
-        # interval vectors in a single pass over the workload trace
+        # one experiment per workload: the planner harvests every needed
+        # fast-memory size's interval vectors in a single batched sweep
+        # pass over the workload trace
         fracs_needed = sorted(set(rep_fracs) | set(fm_probe_points),
                               reverse=True)
-        res = sweep_fm_fracs(tr, fracs_needed, collect_configs=True)
-        by_frac = {
-            float(f): cvs for f, cvs in zip(res.fm_fracs, res.configs)
-        }
+        rs = run_experiment(
+            Experiment(
+                name=f"harvest[{name}]",
+                scenarios=[Scenario(trace=tr, name=name)],
+                fm_fracs=fracs_needed,
+                collect_configs=True,
+            )
+        )
+        by_frac = {float(r.fm_frac): r.result.configs for r in rs.runs}
         # aggregated operating-point vectors (what runtime queries look
         # like) — the paper's dense 100K-vector grid covers these; our
         # sparse build must include them explicitly

@@ -4,16 +4,24 @@ The tuner runs in the loop (default tuning interval), shrinking/growing the
 fast tier via watermarks. Reported per workload: average fast-memory saving
 (vs peak RSS) and overall performance loss vs the fast-memory-only baseline.
 
-Both sides of the comparison — the TPP-only baseline at full fast memory
-and the TPP+Tuna closed loop — ride as slices of **one batched tuned
-sweep** (:func:`repro.sim.sweep.sweep_tuned`) per workload, so each trace
-is executed once instead of once per configuration; the tuned slice is
-bit-exact against the old per-run ``simulate(..., tuner=...)`` path
-(pinned by ``tests/test_engine_equivalence.py``).
+Each workload is one declarative :class:`~repro.sim.api.Experiment`: the
+TPP-only baseline and every TPP+Tuna variant are policy specs of the same
+scenario, the tuners are constructed inside :func:`repro.sim.api.run` from
+their :class:`~repro.sim.api.TunerSpec`, and the planner executes the whole
+set as **one batched tuned sweep** per workload — each trace runs once
+instead of once per configuration, bit-exact against the old per-run
+``simulate(..., tuner=...)`` path (pinned by ``tests/test_api.py`` /
+``tests/test_engine_equivalence.py``).
 
 Paper: savings up to 16% (Btree); overall loss XSBench 1.8%, BFS 2%,
 PageRank 4.6%, SSSP 4.7%, Btree 4.6% — all within the 5% target; average
 fast-memory saving 8.5% (vs 5% for Pond on the same workloads/target).
+
+Beyond the paper's table, the adversarial ``thrash`` workload (rotating
+hot set ~2x the fast tier) rides the same experiment shape and reports
+``target_miss`` — how far the realized loss overshoots τ when churn makes
+the database's even-spread micro-benchmark mispredict (Jenga's motivating
+regime).
 """
 
 from __future__ import annotations
@@ -22,42 +30,58 @@ import time
 
 import numpy as np
 
-from repro.core.tuner import TunaTuner, TunerConfig
-from repro.core.watermark import WatermarkController
-from repro.sim.sweep import TunedSlice, sweep_tuned
-from repro.sim.workloads import WORKLOADS
+from repro.sim.api import Experiment, PolicySpec, Scenario, TunerSpec
+from repro.sim.api import run as run_experiment
 
 from benchmarks.common import build_bench_db, get_trace
 
 TUNE_EVERY = 3  # profiling intervals per tuning step (the paper's 2.5 s)
 
+# the paper's Table 1 evaluation set; `thrash` reports separately below
+PAPER_WORKLOADS = ("bfs", "sssp", "pagerank", "xsbench", "btree")
+TARGET_LOSS = 0.05
 
-def make_tuner(db, target_loss=0.05) -> TunaTuner:
-    """The benchmark suite's tuner configuration, with an unbound
-    watermark controller — the sweep binds it to its slice pool."""
-    return TunaTuner(
-        db,
-        WatermarkController(max_step_frac=0.04),
-        TunerConfig(target_loss=target_loss, cooldown_windows=5),
+
+def tuner_spec(target_loss=TARGET_LOSS, tune_every=TUNE_EVERY) -> TunerSpec:
+    """The benchmark suite's tuner configuration (declarative: the run
+    constructs the tuner + unbound watermark controller from this)."""
+    return TunerSpec(
+        target_loss=target_loss,
+        tune_every=tune_every,
+        cooldown_windows=5,
+        max_step_frac=0.04,
     )
 
 
 def run_tuned_slices(trace, db, specs, tune_every=TUNE_EVERY):
-    """One tuned sweep: a TPP-only baseline slice plus one TPP+Tuna slice
-    per ``(target_loss, tune_every)`` spec. Returns ``(base, results)``
-    where ``results[i]`` is the :class:`~repro.sim.engine.SimResult` of
-    spec ``i``."""
-    slices = [TunedSlice()]  # fm_frac=1.0, no tuner: the baseline
-    for target_loss, te in specs:
-        slices.append(
-            TunedSlice(
-                fm_frac=1.0,
-                tuner=make_tuner(db, target_loss),
-                tune_every=te if te is not None else tune_every,
+    """One experiment: a TPP-only baseline spec plus one TPP+Tuna spec per
+    ``(target_loss, tune_every)`` entry, executed as a single tuned sweep.
+    Returns ``(base, results)`` where ``results[i]`` is the
+    :class:`~repro.sim.engine.SimResult` of spec ``i``."""
+    policies = [PolicySpec(label="tpp")]
+    labels = []
+    for i, (target_loss, te) in enumerate(specs):
+        label = f"tuna[{i}]"  # explicit: (tau, every) pairs may repeat
+        policies.append(
+            PolicySpec(
+                label=label,
+                tuner=tuner_spec(
+                    target_loss, te if te is not None else tune_every
+                ),
             )
         )
-    results = sweep_tuned(trace, slices)
-    return results[0], results[1:]
+        labels.append(label)
+    rs = run_experiment(
+        Experiment(
+            name=f"fig3_7[{trace.name}]",
+            scenarios=[Scenario(trace=trace)],
+            fm_fracs=(1.0,),
+            policies=policies,
+        ),
+        db=db,
+    )
+    base = rs.result(policy="tpp")
+    return base, [rs.result(policy=lb) for lb in labels]
 
 
 def summarize(base, res, trace):
@@ -67,7 +91,7 @@ def summarize(base, res, trace):
     return saving, max_saving, overall_loss
 
 
-def run_workload(name, db, target_loss=0.05, tune_every=TUNE_EVERY):
+def run_workload(name, db, target_loss=TARGET_LOSS, tune_every=TUNE_EVERY):
     """Baseline + one tuned run of a workload, in a single trace pass.
 
     Returns ``(base, res, saving, max_saving, overall_loss)``.
@@ -81,7 +105,7 @@ def run_workload(name, db, target_loss=0.05, tune_every=TUNE_EVERY):
 def run(report) -> None:
     db = build_bench_db()
     savings = []
-    for name in WORKLOADS:
+    for name in PAPER_WORKLOADS:
         t0 = time.time()
         _, res, saving, max_saving, overall_loss = run_workload(name, db)
         savings.append(saving)
@@ -95,4 +119,16 @@ def run(report) -> None:
         "fig3_7/summary",
         0.0,
         f"mean_saving={np.mean(savings)*100:.1f}% (paper 8.5%, Pond 5%)",
+    )
+    # adversarial churn: the same experiment shape on the rotating hot set
+    # ~2x the fast tier; target_miss > 0 is where Tuna's even-spread
+    # micro-benchmark model mispredicts under churn
+    t0 = time.time()
+    _, res, saving, max_saving, overall_loss = run_workload("thrash", db)
+    report(
+        "fig3_7/thrash",
+        (time.time() - t0) * 1e6,
+        f"avg_saving={saving*100:.1f}%;overall_loss={overall_loss*100:.2f}%"
+        f";target_miss={(overall_loss - TARGET_LOSS)*100:+.2f}pp"
+        f";migr={res.migrations} (churn regime: model misprediction probe)",
     )

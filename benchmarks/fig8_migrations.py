@@ -3,9 +3,9 @@ for BFS. Tuna's watermark changes perturb the migration activity TPP
 performs; the workload keeps its loss within target while fast memory
 shrinks.
 
-Both sides come from one batched tuned sweep (the TPP-only slice and the
-TPP+Tuna slice of :func:`benchmarks.fig3_7_tuning.run_workload`'s single
-trace pass)."""
+Both sides come from one declarative experiment (the TPP-only spec and the
+TPP+Tuna spec of :func:`benchmarks.fig3_7_tuning.run_workload`'s single
+:func:`repro.sim.api.run` pass over the BFS trace)."""
 
 from __future__ import annotations
 

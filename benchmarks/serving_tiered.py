@@ -5,6 +5,14 @@ continuous-batching server and reports round-time percentiles, migration
 traffic, and promotion failures — the TPU deployment surface of the
 paper's technique (DESIGN.md §4), plus the Tuna-tuned row where the
 budget is chosen by the runtime instead of fixed.
+
+The whole table is one declarative :class:`~repro.sim.api.Experiment`
+executed through a **custom runner** (``backend="custom"``): the serving
+engine is not the interval simulator, so the scenario carries
+:func:`_serving_runner`, which builds the KV store + batcher + server per
+(budget, policy) cell — constructing the Tuna tuner inside the run from
+its :class:`~repro.sim.api.TunerSpec`, exactly like the simulator
+backends do.
 """
 
 from __future__ import annotations
@@ -13,9 +21,17 @@ import time
 
 import numpy as np
 
+from repro.sim.api import Experiment, PolicySpec, Scenario, TunerSpec
+from repro.sim.api import run as run_experiment
 
-def _mk(hbm_pages, total=4096, seed=0):
-    from repro.serving import ContinuousBatcher, TieredPagedKV, TieredServer
+TOTAL_PAGES = 4096
+ROUNDS = 600
+DRIFT_EVERY = 200
+BUDGET_FRACS = (1.0, 0.5, 0.25, 0.125)
+
+
+def _mk(hbm_pages, total=TOTAL_PAGES, seed=0):
+    from repro.serving import ContinuousBatcher, TieredPagedKV
     from repro.serving.kv_cache import KVPageConfig
 
     kv = TieredPagedKV(
@@ -28,34 +44,15 @@ def _mk(hbm_pages, total=4096, seed=0):
         n_sessions=400, page_size=16, max_batch=16, resumes_per_round=3.0,
         seed=seed,
     )
-    return kv, batcher, TieredServer(kv, batcher)
+    return kv, batcher
 
 
-def run(report) -> None:
-    rounds = 600
-    base = None
-    for frac in (1.0, 0.5, 0.25, 0.125):
-        t0 = time.time()
-        hbm = int(4096 * frac)
-        kv, batcher, server = _mk(hbm)
-        server.run(rounds, drift_every=200)
-        s = server.summary()
-        if base is None:
-            base = s["mean_round_ms"]
-        report(
-            f"serving/hbm_{int(frac*1000)}",
-            (time.time() - t0) * 1e6,
-            f"mean_ms={s['mean_round_ms']:.3f};p99_ms={s['p99_round_ms']:.3f}"
-            f";slowdown={s['mean_round_ms']/base:.2f}x"
-            f";migr_in={s['migrated_in']};fails={s['promote_failures']}",
-        )
-    # Tuna-tuned budget (the paper's loop on the serving tier)
-    t0 = time.time()
-    from repro.core import TunaTuner, TunerConfig, WatermarkController
+def _serving_db():
+    """Synthetic loss-curve database for the serving tier (the paper's
+    offline component stand-in on this engine)."""
     from repro.core.perfdb import PerfDB, PerfRecord
     from repro.core.telemetry import ConfigVector
 
-    kv, batcher, _ = _mk(1024)
     grid = np.array([1.0, 0.85, 0.7, 0.55, 0.4, 0.25])
     db = PerfDB()
     for pacc in (200, 800, 2400):
@@ -63,23 +60,90 @@ def run(report) -> None:
             loss = (pm / 32.0) * (1.0 / grid - 1.0) * 0.08
             db.add(PerfRecord(
                 config=ConfigVector(pacc_f=pacc, pacc_s=pm, pm_de=pm,
-                                    pm_pr=pm, ai=1e6, rss_pages=4096,
+                                    pm_pr=pm, ai=1e6, rss_pages=TOTAL_PAGES,
                                     hot_thr=2, num_threads=1),
                 fm_fracs=grid, times=1.0 + loss,
             ))
     db.build()
-    tuner = TunaTuner(
-        db, WatermarkController(kv.pool, max_step_frac=0.1),
-        TunerConfig(target_loss=0.05), peak_rss_pages=1024,
-    )
+    return db
+
+
+def _serving_runner(scenario, fm_frac, spec, db) -> dict:
+    """Custom execution backend: one server run per (budget, policy) cell.
+
+    ``fm_frac`` scales the HBM budget against the total KV footprint; a
+    tuned spec puts the Tuna loop on the serving tier (the tuner is built
+    from the spec inside this run and bound to the KV pool)."""
     from repro.serving import TieredServer
 
-    server = TieredServer(kv, batcher, tuner=tuner, tune_every=16)
-    server.run(rounds, drift_every=200)
-    s = server.summary()
+    t0 = time.time()
+    p = scenario.params
+    total = int(p.get("total_pages", TOTAL_PAGES))
+    hbm = int(round(total * fm_frac))
+    kv, batcher = _mk(hbm, total=total, seed=scenario.seed)
+    if spec.tuner is not None:
+        tuner = spec.tuner.build(db).bind_pool(kv.pool)
+        server = TieredServer(
+            kv, batcher, tuner=tuner, tune_every=spec.tuner.tune_every
+        )
+    else:
+        server = TieredServer(kv, batcher)
+    server.run(
+        int(p.get("rounds", ROUNDS)),
+        drift_every=int(p.get("drift_every", DRIFT_EVERY)),
+    )
+    summary = server.summary()
+    summary["wall_s"] = time.time() - t0  # per-cell timing for the report
+    return summary
+
+
+def run(report) -> None:
+    rs = run_experiment(
+        Experiment(
+            name="serving_tiered",
+            scenarios=[
+                Scenario(
+                    name="serving",
+                    runner=_serving_runner,
+                    params={
+                        "total_pages": TOTAL_PAGES,
+                        "rounds": ROUNDS,
+                        "drift_every": DRIFT_EVERY,
+                    },
+                )
+            ],
+            fm_fracs=BUDGET_FRACS,
+            policies=[
+                PolicySpec(label="fixed"),
+                # Tuna-tuned budget (the paper's loop on the serving tier),
+                # starting from the 25% budget the fixed row also visits
+                PolicySpec(
+                    label="tuna",
+                    fm_frac=0.25,
+                    tuner=TunerSpec(
+                        target_loss=0.05, tune_every=16, max_step_frac=0.1
+                    ),
+                ),
+            ],
+        ),
+        db=_serving_db(),
+    )
+    base = None
+    for frac in BUDGET_FRACS:
+        s = rs.result(policy="fixed", fm_frac=frac)
+        if base is None:
+            base = s["mean_round_ms"]
+        report(
+            f"serving/hbm_{int(frac*1000)}",
+            s["wall_s"] * 1e6,
+            f"mean_ms={s['mean_round_ms']:.3f};p99_ms={s['p99_round_ms']:.3f}"
+            f";slowdown={s['mean_round_ms']/base:.2f}x"
+            f";migr_in={s['migrated_in']};fails={s['promote_failures']}",
+        )
+    s = rs.result(policy="tuna")
     report(
         "serving/tuna_tuned",
-        (time.time() - t0) * 1e6,
+        s["wall_s"] * 1e6,
         f"mean_ms={s['mean_round_ms']:.3f};p99_ms={s['p99_round_ms']:.3f}"
         f";hbm_saving={s['fm_saving_vs_cap']*100:.1f}%"
         f";migr_in={s['migrated_in']};fails={s['promote_failures']}",

@@ -8,7 +8,8 @@ pd' = (y'-x')/x' (micro-benchmark at the same size vs micro-benchmark fast
 only). Report |pd' - pd| / pd.
 
 The measured side — the full-fm baseline plus every FM_GRID size — is one
-batched sweep (:func:`repro.sim.sweep.sweep_fm_fracs`) per workload
+declarative experiment per workload, which the
+:func:`repro.sim.api.run` planner executes as a single batched sweep
 instead of ``1 + len(FM_GRID)`` separate ``simulate()`` passes.
 
 Paper: error < 10% everywhere, growing as fast memory shrinks
@@ -21,7 +22,8 @@ import time
 
 import numpy as np
 
-from repro.sim.sweep import sweep_fm_fracs
+from repro.sim.api import Experiment, Scenario
+from repro.sim.api import run as run_experiment
 from repro.sim.workloads import WORKLOADS
 
 from benchmarks.common import build_bench_db, get_trace, representative_config
@@ -35,7 +37,14 @@ def run(report) -> None:
         t0 = time.time()
         tr = get_trace(name)
         # one pass: the full-fm baseline plus the whole measured size grid
-        times = sweep_fm_fracs(tr, (1.0,) + FM_GRID).total_times
+        rs = run_experiment(
+            Experiment(
+                name=f"table2[{name}]",
+                scenarios=[Scenario(trace=tr, name=name)],
+                fm_fracs=(1.0,) + FM_GRID,
+            )
+        )
+        times = rs.total_times()
         base = times[0]
         cv = representative_config(tr, fm_frac=1.0)
         recs = db.query(cv, k=3)

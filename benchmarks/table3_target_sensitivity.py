@@ -8,10 +8,11 @@
     17% loss; 5 s → ~2% saving, ~3% loss).
 
 The whole target/interval matrix — seven tuner configurations plus the
-TPP-only baseline — runs as slices of **one** batched tuned sweep over the
-SSSP trace (:func:`repro.sim.sweep.sweep_tuned`), instead of the old
-fifteen per-configuration ``simulate()`` passes (each old run also re-ran
-its own baseline).
+TPP-only baseline — is one declarative experiment over the SSSP trace
+(eight policy specs of a single scenario), which the
+:func:`repro.sim.api.run` planner executes as **one** batched tuned sweep
+instead of the old fifteen per-configuration ``simulate()`` passes (each
+old run also re-ran its own baseline).
 """
 
 from __future__ import annotations

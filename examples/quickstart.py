@@ -1,45 +1,76 @@
 """Quickstart: the paper's pipeline end to end on one workload.
 
-1. Generate a real BFS page-access trace.
+1. Generate a real XSBench page-access trace.
 2. Profile it, build a (small) Tuna performance database offline.
-3. Run BFS with TPP alone vs TPP+Tuna and compare fast-memory saving
-   and performance loss against the 5% target.
+3. Run XSBench with TPP alone vs TPP+Tuna — one declarative
+   `Experiment`, executed as a single batched tuned sweep — and compare
+   fast-memory saving and performance loss against the 5% target.
+
+Everything goes through the unified experiment API
+(`repro.sim.api.Scenario` / `Experiment` / `run`): runs are described as
+data, tuners are constructed inside the run from their `TunerSpec`, and
+results come back as a serializable `RunSet` (try `rs.to_json()`).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+CI executes this file with `-W "error:repro.sim:DeprecationWarning"`
+(every shim's message starts with "repro.sim."), so it can never regress
+onto the deprecated `simulate`/`sweep_*` entry points.
 """
 
 import numpy as np
 
-from repro.core import TunaTuner, TunerConfig, WatermarkController
 from repro.core.tuner import build_database
-from repro.sim.engine import run_trace, simulate
+from repro.sim.api import Experiment, PolicySpec, Scenario, TunerSpec, run
 from repro.sim.workloads import xsbench_trace
-from repro.tiering.page_pool import TieredPagePool
 
 print("== generating XSBench trace (real MC lookup kernel, page-instrumented)")
 trace = xsbench_trace(n_intervals=36, lookups=80_000)
 print(f"   rss={trace.rss_pages} pages, {len(trace)} profiling intervals")
 
 print("== profiling + building the performance database (offline)")
-probe = simulate(trace, fm_frac=0.9)
-configs = [c for c in probe.configs[3:] if c.pacc_f + c.pacc_s >= 500][::3][:10]
-db = build_database(configs, run_trace, fm_fracs=np.arange(1.0, 0.28, -0.06),
+probe = run(
+    Experiment(
+        name="profile",
+        scenarios=[Scenario(trace=trace)],
+        fm_fracs=(0.9,),
+        collect_configs=True,
+    )
+)
+cvs = probe.record().result.configs
+configs = [c for c in cvs[3:] if c.pacc_f + c.pacc_s >= 500][::3][:10]
+db = build_database(configs, fm_fracs=np.arange(1.0, 0.28, -0.06),
                     n_intervals=8)
 print(f"   {len(db.records)} execution records")
 
-print("== TPP alone (fast memory = peak RSS)")
-base = simulate(trace, fm_frac=1.0)
-print(f"   runtime {base.total_time*1e3:.1f} ms")
-
-print("== TPP + Tuna (5% loss target)")
-pool = TieredPagePool(trace.rss_pages, trace.rss_pages)
-tuner = TunaTuner(db, WatermarkController(pool, max_step_frac=0.05),
-                  TunerConfig(target_loss=0.05), peak_rss_pages=trace.rss_pages)
-tuned = simulate(trace, fm_frac=1.0, tuner=tuner, tune_every=5)
+print("== TPP alone vs TPP + Tuna (5% loss target): one tuned sweep")
+rs = run(
+    Experiment(
+        name="quickstart",
+        scenarios=[Scenario(trace=trace)],
+        fm_fracs=(1.0,),
+        policies=[
+            PolicySpec(label="tpp"),
+            PolicySpec(label="tpp+tuna",
+                       tuner=TunerSpec(target_loss=0.05, tune_every=5,
+                                       max_step_frac=0.05)),
+        ],
+    ),
+    db=db,
+)
+base = rs.result(policy="tpp")
+tuned = rs.result(policy="tpp+tuna")
+print(f"   TPP alone: runtime {base.total_time*1e3:.1f} ms "
+      f"(fast memory = peak RSS)")
 saving = 1 - tuned.fm_sizes.mean() / trace.rss_pages
 loss = (tuned.total_time - base.total_time) / base.total_time
-print(f"   runtime {tuned.total_time*1e3:.1f} ms "
+moves = len(rs.record(policy="tpp+tuna").watermark_log)
+print(f"   TPP+Tuna:  runtime {tuned.total_time*1e3:.1f} ms "
       f"(loss {loss*100:.2f}% vs 5% target), "
       f"avg fast-memory saving {saving*100:.1f}%, "
-      f"max saving {(1 - tuned.fm_sizes.min()/trace.rss_pages)*100:.1f}%")
+      f"max saving {(1 - tuned.fm_sizes.min()/trace.rss_pages)*100:.1f}%, "
+      f"{moves} watermark moves")
+print(f"   backends={list(rs.backends)}, "
+      f"chunked_step_count={rs.chunked_step_count}, "
+      f"runset_json={len(rs.to_json())} bytes")
 print("done.")

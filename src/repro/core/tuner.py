@@ -18,9 +18,7 @@ hardware in production) is injected as a callable.
 
 from __future__ import annotations
 
-import concurrent.futures as cf
-import multiprocessing as mp
-import os
+import functools
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, Sequence
 
@@ -201,34 +199,18 @@ def scale_config(cv: ConfigVector, max_rss_pages: int) -> ConfigVector:
     return ConfigVector.from_array(v)
 
 
-def _sweep_record_times(
-    cv: ConfigVector,
-    fm_fracs: np.ndarray,
-    n_intervals: int,
-    max_rss_pages: int,
-) -> np.ndarray:
-    """One database record's time curve via the batched sweep engine.
+def _microbench_trace(
+    cv: ConfigVector, n_intervals: int, max_rss_pages: int
+) -> Trace:
+    """Scenario trace factory for one database record's micro-benchmark.
 
-    Module-level so :func:`build_database`'s process fan-out can pickle it.
+    Module-level so :func:`repro.sim.api.run`'s process fan-out can pickle
+    ``functools.partial(_microbench_trace, cv, ...)`` — the trace is then
+    generated inside the worker instead of being shipped to it.
     """
-    from repro.sim.sweep import sweep_times
-
-    trace = generate_microbench(
+    return generate_microbench(
         scale_config(cv, max_rss_pages), n_intervals=n_intervals
     )
-    times = np.empty(fm_fracs.shape, dtype=np.float64)
-    full = fm_fracs >= 1.0 - 1e-9
-    if np.any(full):
-        # the fast-memory-only baseline is the NP_slow = 0 variant
-        # (paper Section 3.2/3.3): same work, no explicit slow array
-        times[full] = float(sweep_times(trace.fast_only(), [1.0])[0])
-    if not np.all(full):
-        times[~full] = sweep_times(trace, fm_fracs[~full])
-    return times
-
-
-def _sweep_record_star(args) -> np.ndarray:
-    return _sweep_record_times(*args)
 
 
 def build_database(
@@ -241,11 +223,15 @@ def build_database(
 ) -> PerfDB:
     """Offline: populate the performance database.
 
-    By default (``run_microbench=None``) each configuration's whole
-    fm-size curve is produced in one pass by the batched sweep engine
-    (:mod:`repro.sim.sweep`), with optional ``concurrent.futures`` process
-    fan-out across configurations (``workers``; ``None`` = serial below 12
-    configs, else one worker per core). The sweep is equivalent to running
+    By default (``run_microbench=None``) the whole build is **one
+    declarative experiment** executed through :func:`repro.sim.api.run`:
+    one :class:`~repro.sim.api.Scenario` per configuration (lazy
+    micro-benchmark trace factory, ``fast_only_at_full`` for the
+    NP_slow = 0 baseline variant at full size — paper Section 3.2/3.3)
+    against the shared fm-size vector. The planner produces each record's
+    curve in one batched sweep pass per scenario and fans scenarios out
+    across processes (``workers``; ``None`` = serial below 12 configs,
+    else one worker per core). The result is equivalent to running
     :func:`repro.sim.engine.run_trace` once per size — the engine
     equivalence tests pin this — at a fraction of the cost.
 
@@ -280,27 +266,34 @@ def build_database(
         db.build()
         return db
 
-    if workers is None:
-        workers = 1 if len(configs) < 12 else (os.cpu_count() or 1)
-    workers = max(1, min(int(workers), len(configs) or 1))
-    jobs = [(cv, fm_fracs, n_intervals, max_rss_pages) for cv in configs]
-    all_times: list[np.ndarray] | None = None
-    if workers > 1:
-        try:
-            # fork (where available) spares each worker the interpreter +
-            # numpy import; the workers run pure-numpy sweep code only
-            method = "fork" if "fork" in mp.get_all_start_methods() else None
-            ctx = mp.get_context(method)
-            with cf.ProcessPoolExecutor(workers, mp_context=ctx) as pool:
-                chunk = max(1, len(jobs) // (4 * workers))
-                all_times = list(
-                    pool.map(_sweep_record_star, jobs, chunksize=chunk)
+    if not configs:
+        db.build()
+        return db
+
+    from repro.sim.api import Experiment, PolicySpec, Scenario
+    from repro.sim.api import run as run_experiment
+
+    scenario_names = [f"config[{i}]" for i in range(len(configs))]
+    rs = run_experiment(
+        Experiment(
+            name="build_database",
+            scenarios=[
+                Scenario(
+                    trace=functools.partial(
+                        _microbench_trace, cv, n_intervals, max_rss_pages
+                    ),
+                    name=name,
+                    fast_only_at_full=True,
                 )
-        except (OSError, ValueError, cf.process.BrokenProcessPool):
-            all_times = None  # sandboxed / restricted env: fall back
-    if all_times is None:
-        all_times = [_sweep_record_star(job) for job in jobs]
-    for cv, times in zip(configs, all_times):
+                for name, cv in zip(scenario_names, configs)
+            ],
+            fm_fracs=fm_fracs,
+            policies=[PolicySpec()],
+        ),
+        parallelism=workers,
+    )
+    for name, cv in zip(scenario_names, configs):
+        times = rs.total_times(scenario=name)
         db.add(PerfRecord(config=cv, fm_fracs=fm_fracs, times=times))
     db.build()
     return db

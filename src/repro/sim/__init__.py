@@ -15,6 +15,15 @@ DMA/latency backend.
 
 from repro.sim.costmodel import HardwareProfile, OPTANE_LIKE, TPU_V5E_TIER
 from repro.sim.engine import run_trace, simulate, SimResult
+from repro.sim.api import (
+    Experiment,
+    PolicySpec,
+    RunRecord,
+    RunSet,
+    Scenario,
+    TunerSpec,
+    run,
+)
 
 __all__ = [
     "HardwareProfile",
@@ -23,4 +32,11 @@ __all__ = [
     "run_trace",
     "simulate",
     "SimResult",
+    "Experiment",
+    "PolicySpec",
+    "RunRecord",
+    "RunSet",
+    "Scenario",
+    "TunerSpec",
+    "run",
 ]

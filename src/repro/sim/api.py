@@ -1,0 +1,862 @@
+"""Unified experiment API: the declarative front door to the simulator.
+
+The Tuna evaluation is one pipeline — run a workload at a vector of
+fast-memory sizes and performance-loss targets, with or without a tuner in
+the loop, then compare against the model's prediction. This module exposes
+that pipeline as **data**:
+
+* :class:`Scenario` — what to run: a trace (object, workload name, or a
+  picklable zero-arg factory), the hardware profile, the hardware fast-tier
+  capacity, the RNG seed, and pool overrides (``kswapd_batch``,
+  ``pool_factory``). A scenario can instead carry a custom ``runner``
+  callable, which is how non-simulator engines (e.g. the tiered-KV serving
+  benchmark) plug into the same experiment shape.
+* :class:`PolicySpec` — how to manage pages: TPP or first-touch parameters
+  plus an optional :class:`TunerSpec`. Tuners are *constructed inside the
+  run* from their spec (never passed pre-bound), so experiments stay
+  serializable and scenario fan-out across processes works.
+* :class:`Experiment` — scenarios x fm-size vector x policy variants.
+* :func:`run` — executes an experiment and returns a :class:`RunSet`.
+
+The planner inside :func:`run` picks the execution backend per scenario
+automatically:
+
+========================  ====================================================
+spec shape                backend
+========================  ====================================================
+untuned TPP size vector   one batched :func:`repro.sim.sweep._sweep_fm_fracs`
+                          pass (``backend="sweep"``)
+any tuner in the loop     one :func:`repro.sim.sweep._sweep_tuned` pass where
+                          untuned TPP specs ride along as plain slices
+                          (``backend="tuned_sweep"``)
+unbatchable spec          per-size :func:`repro.sim.engine._simulate` — a
+                          custom ``pool_factory`` (e.g. the frozen
+                          ``ReferencePagePool`` golden model) or a non-TPP
+                          policy (``backend="simulate"``)
+``Scenario.runner`` set   the scenario's own callable (``backend="custom"``)
+========================  ====================================================
+
+Scenarios fan out across processes with ``concurrent.futures``
+(``parallelism=None`` keeps the database-build heuristic: serial below 12
+scenarios, else one worker per core), which is what absorbed the old
+``build_database`` fan-out helper. Every backend is bit-exact against the
+pre-redesign entry points (``simulate`` / ``sweep_fm_fracs`` /
+``sweep_tuned``), which ``tests/test_api.py`` pins — counters, interval
+times, config vectors, tuner decision lists, watermark event logs.
+
+RunSet JSON schema (``RunSet.to_json`` / ``RunSet.from_json``)
+--------------------------------------------------------------
+Lossless (floats round-trip via ``repr``), versioned by ``schema``::
+
+    {
+      "schema": "tuna-runset-v1",
+      "name": str,                     # experiment name
+      "spec": {                        # provenance: the experiment echo
+        "name": str,
+        "fm_fracs": [float, ...],
+        "collect_configs": bool,
+        "scenarios": [{"name", "trace", "seed", "hw",
+                       "hw_capacity_pages", "kswapd_batch",
+                       "pool_factory", "fast_only_at_full",
+                       "runner", "params"}, ...],
+        "policies":  [{"label", "kind", "hot_thr", "fm_frac",
+                       "tuner": {TunerSpec fields} | null}, ...],
+        "db_records": int | null       # size of the PerfDB used
+      },
+      "chunked_step_count": int,       # chunked-loop executions inside the
+                                       # sweep backends (0 = sweeps stayed
+                                       # fully vectorized)
+      "backends": [str, ...],          # backends the planner used
+      "runs": [{
+        "scenario": str, "policy": str, "fm_frac": float, "backend": str,
+        "result":                      # one per (scenario, policy, size)
+          {"kind": "sim", "name": str, "total_time": float,
+           "interval_times": [float, ...], "fm_sizes": [int, ...],
+           "configs": [{ConfigVector fields}, ...],
+           "stats": {counter: int, ...},
+           "costs": [{IntervalCosts fields}, ...]}
+          | {"kind": "custom", "payload": <runner dict>},
+        "decisions":                   # tuned specs only, else null
+          [{"t", "config": {ConfigVector fields}, "fm_frac", "fm_pages",
+            "predicted_loss"}, ...] | null,
+        "watermark_log": [{"t", "old_fm", "new_fm"}, ...] | null
+      }, ...]
+    }
+
+``runs`` order is deterministic: scenario-major (experiment order), then
+policy order, then size order. ``chunked_step_count`` counts only the sweep
+backends — the per-size ``simulate`` fallback may legitimately execute the
+chunked loop; the sweeps must not, and the engine benchmark asserts it.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import functools
+import json
+import multiprocessing as mp
+import os
+from dataclasses import asdict, dataclass, field
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.telemetry import ConfigVector
+from repro.core.trace import Trace
+from repro.core.tuner import TunaTuner, TunerConfig, TunerDecision
+from repro.core.watermark import WatermarkController, WatermarkEvent
+from repro.sim.costmodel import HardwareProfile, IntervalCosts, OPTANE_LIKE
+from repro.sim.engine import SimResult, _simulate
+from repro.sim.sweep import TunedSlice, _sweep_fm_fracs, _sweep_tuned
+from repro.tiering import policy as policy_mod
+from repro.tiering.page_pool import TieredPagePool
+from repro.tiering.policy import FirstTouchPolicy, TPPPolicy
+
+RUNSET_SCHEMA = "tuna-runset-v1"
+
+__all__ = [
+    "Experiment",
+    "PolicySpec",
+    "RunRecord",
+    "RunSet",
+    "RUNSET_SCHEMA",
+    "Scenario",
+    "TunerSpec",
+    "run",
+]
+
+
+# ------------------------------------------------------------------- specs
+
+
+@dataclass(frozen=True)
+class TunerSpec:
+    """Declarative Tuna tuner: everything needed to *construct* a
+    :class:`~repro.core.tuner.TunaTuner` + unbound
+    :class:`~repro.core.watermark.WatermarkController` pair inside the run
+    (the performance database itself is passed to :func:`run` — it is
+    runtime state, not spec)."""
+
+    target_loss: float = 0.05
+    tune_every: int = 3  # profiling intervals per tuning step
+    k_neighbors: int = 3
+    cooldown_windows: int = 3
+    min_fm_frac: float = 0.05
+    feedback: bool = True
+    feedback_margin: float = 1.0
+    tuning_interval_s: float = 2.5
+    # watermark-controller actuation limits
+    max_step_frac: float = 0.10
+    deadband_frac: float = 0.005
+
+    def build(self, db) -> TunaTuner:
+        """Construct the live tuner (controller unbound; the execution
+        backend binds it to its pool)."""
+        if db is None:
+            raise ValueError(
+                "PolicySpec has a TunerSpec but run() was given no "
+                "performance database (db=None)"
+            )
+        return TunaTuner(
+            db,
+            WatermarkController(
+                max_step_frac=self.max_step_frac,
+                deadband_frac=self.deadband_frac,
+            ),
+            TunerConfig(
+                target_loss=self.target_loss,
+                tuning_interval_s=self.tuning_interval_s,
+                k_neighbors=self.k_neighbors,
+                min_fm_frac=self.min_fm_frac,
+                feedback=self.feedback,
+                feedback_margin=self.feedback_margin,
+                cooldown_windows=self.cooldown_windows,
+            ),
+        )
+
+
+@dataclass(frozen=True)
+class PolicySpec:
+    """One page-management variant of an experiment.
+
+    ``kind`` is ``"tpp"`` (promotion/watermark-reclaim, the paper's
+    management system) or ``"first_touch"`` (no migration, the Fig. 1
+    baseline). ``tuner`` puts a Tuna tuner in the loop (TPP only).
+    ``fm_frac`` overrides the experiment's size vector for this spec —
+    tuned specs usually start at 1.0 while untuned curves sweep the vector.
+    """
+
+    kind: str = "tpp"
+    hot_thr: int = 4
+    tuner: TunerSpec | None = None
+    fm_frac: float | None = None
+    label: str | None = None
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("tpp", "first_touch"):
+            raise ValueError(f"unknown policy kind: {self.kind!r}")
+        if self.tuner is not None and self.kind != "tpp":
+            raise ValueError("tuners require kind='tpp'")
+
+    @property
+    def name(self) -> str:
+        if self.label is not None:
+            return self.label
+        if self.tuner is not None:
+            return (
+                f"tpp+tuna(tau={self.tuner.target_loss:g},"
+                f"every={self.tuner.tune_every})"
+            )
+        return self.kind
+
+    def build_policy(self):
+        if self.kind == "first_touch":
+            return FirstTouchPolicy(hot_thr=self.hot_thr)
+        return TPPPolicy(hot_thr=self.hot_thr)
+
+
+@dataclass
+class Scenario:
+    """What to run: workload + hardware + seed + pool overrides.
+
+    ``trace`` is a :class:`~repro.core.trace.Trace`, a workload name from
+    :data:`repro.sim.workloads.WORKLOADS`, or a picklable zero-arg callable
+    returning a Trace (resolved inside the worker, so process fan-out does
+    not ship trace arrays). ``pool_factory`` forces the per-size
+    ``simulate`` backend (the batched sweeps are specialized to the
+    incremental :class:`~repro.tiering.page_pool.TieredPagePool`).
+    ``fast_only_at_full`` runs full-size slices (``fm_frac >= 1``) on
+    ``trace.fast_only()`` — the micro-benchmark's NP_slow = 0 baseline
+    variant (paper Section 3.2/3.3) the database build needs.
+    ``runner(scenario, fm_frac, policy_spec, db) -> dict`` swaps the whole
+    execution engine (``backend="custom"``); ``params`` carries its
+    JSON-serializable knobs.
+    """
+
+    trace: Trace | str | Callable[[], Trace] | None = None
+    name: str | None = None
+    hw: HardwareProfile = OPTANE_LIKE
+    hw_capacity_pages: int | None = None
+    seed: int = 0
+    kswapd_batch: int | None = None
+    pool_factory: Callable | None = None
+    fast_only_at_full: bool = False
+    runner: Callable | None = None
+    params: dict = field(default_factory=dict)
+
+    @property
+    def resolved_name(self) -> str:
+        if self.name is not None:
+            return self.name
+        if isinstance(self.trace, Trace):
+            return self.trace.name
+        if isinstance(self.trace, str):
+            return self.trace
+        if self.trace is not None:
+            f = getattr(self.trace, "func", self.trace)
+            return getattr(f, "__name__", "scenario")
+        return "scenario"
+
+
+@dataclass
+class Experiment:
+    """Scenarios x fm-size vector x policy variants.
+
+    ``collect_configs`` asks the untuned sweep backend for per-interval
+    :class:`~repro.core.telemetry.ConfigVector` telemetry (the tuned sweep
+    and the per-size engine always collect it).
+    """
+
+    scenarios: Sequence[Scenario]
+    fm_fracs: Sequence[float] = (1.0,)
+    policies: Sequence[PolicySpec] = (PolicySpec(),)
+    collect_configs: bool = False
+    name: str = "experiment"
+
+
+# ----------------------------------------------------------------- results
+
+
+@dataclass
+class RunRecord:
+    """One (scenario, policy, fm size) cell of a :class:`RunSet`."""
+
+    scenario: str
+    policy: str
+    fm_frac: float
+    backend: str  # "sweep" | "tuned_sweep" | "simulate" | "custom"
+    result: SimResult | dict
+    decisions: list | None = None  # TunerDecision list (tuned specs)
+    watermark_log: list | None = None  # WatermarkEvent list (tuned specs)
+
+
+@dataclass
+class RunSet:
+    """Uniform result of :func:`run`: named, stacked per-slice results plus
+    provenance (spec echo, seeds, backends used, ``chunked_step_count``).
+    Lossless ``to_json``/``from_json`` — the schema is documented in the
+    module docstring."""
+
+    name: str
+    spec: dict
+    runs: list
+    chunked_step_count: int = 0
+    backends: tuple = ()
+
+    # ------------------------------------------------------------ access
+    def select(
+        self,
+        scenario: str | None = None,
+        policy: str | None = None,
+        fm_frac: float | None = None,
+    ) -> list:
+        out = []
+        for r in self.runs:
+            if scenario is not None and r.scenario != scenario:
+                continue
+            if policy is not None and r.policy != policy:
+                continue
+            if fm_frac is not None and abs(r.fm_frac - fm_frac) > 1e-12:
+                continue
+            out.append(r)
+        return out
+
+    def record(self, **kw) -> RunRecord:
+        recs = self.select(**kw)
+        if len(recs) != 1:
+            raise KeyError(
+                f"RunSet.record({kw}) matched {len(recs)} runs, expected 1"
+            )
+        return recs[0]
+
+    def result(self, **kw):
+        return self.record(**kw).result
+
+    def results(self, **kw) -> list:
+        return [r.result for r in self.select(**kw)]
+
+    def total_times(
+        self, scenario: str | None = None, policy: str | None = None
+    ) -> np.ndarray:
+        """Total execution time of every matching run, in ``runs`` order.
+
+        Simulator-backed runs only — custom-runner records hold an opaque
+        payload with no ``total_time`` and are rejected explicitly.
+        """
+        recs = self.select(scenario, policy)
+        for r in recs:
+            if not isinstance(r.result, SimResult):
+                raise TypeError(
+                    f"total_times() needs simulator results; run "
+                    f"{r.scenario!r}/{r.policy!r} has backend={r.backend!r}"
+                )
+        return np.array([r.result.total_time for r in recs])
+
+    # ----------------------------------------------------- serialization
+    def to_json(self, indent: int | None = None) -> str:
+        return json.dumps(
+            {
+                "schema": RUNSET_SCHEMA,
+                "name": self.name,
+                "spec": self.spec,
+                "chunked_step_count": int(self.chunked_step_count),
+                "backends": list(self.backends),
+                "runs": [
+                    {
+                        "scenario": r.scenario,
+                        "policy": r.policy,
+                        "fm_frac": r.fm_frac,
+                        "backend": r.backend,
+                        "result": _result_to_dict(r.result),
+                        "decisions": (
+                            None
+                            if r.decisions is None
+                            else [_decision_to_dict(d) for d in r.decisions]
+                        ),
+                        "watermark_log": (
+                            None
+                            if r.watermark_log is None
+                            else [asdict(e) for e in r.watermark_log]
+                        ),
+                    }
+                    for r in self.runs
+                ],
+            },
+            indent=indent,
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "RunSet":
+        d = json.loads(text)
+        if d.get("schema") != RUNSET_SCHEMA:
+            raise ValueError(f"unknown RunSet schema: {d.get('schema')!r}")
+        runs = [
+            RunRecord(
+                scenario=r["scenario"],
+                policy=r["policy"],
+                fm_frac=float(r["fm_frac"]),
+                backend=r["backend"],
+                result=_result_from_dict(r["result"]),
+                decisions=(
+                    None
+                    if r["decisions"] is None
+                    else [_decision_from_dict(x) for x in r["decisions"]]
+                ),
+                watermark_log=(
+                    None
+                    if r["watermark_log"] is None
+                    else [WatermarkEvent(**x) for x in r["watermark_log"]]
+                ),
+            )
+            for r in d["runs"]
+        ]
+        return cls(
+            name=d["name"],
+            spec=d["spec"],
+            runs=runs,
+            chunked_step_count=int(d["chunked_step_count"]),
+            backends=tuple(d["backends"]),
+        )
+
+
+def _result_to_dict(res) -> dict:
+    if isinstance(res, SimResult):
+        return {
+            "kind": "sim",
+            "name": res.name,
+            "total_time": float(res.total_time),
+            "interval_times": [float(x) for x in res.interval_times],
+            "fm_sizes": [int(x) for x in res.fm_sizes],
+            "configs": [c.to_dict() for c in res.configs],
+            "stats": {k: int(v) for k, v in res.stats.items()},
+            "costs": [asdict(c) for c in res.costs],
+        }
+    return {"kind": "custom", "payload": res}
+
+
+def _result_from_dict(d: dict):
+    if d["kind"] == "custom":
+        return d["payload"]
+    return SimResult(
+        name=d["name"],
+        total_time=float(d["total_time"]),
+        interval_times=np.array(d["interval_times"], dtype=np.float64),
+        configs=[ConfigVector(**c) for c in d["configs"]],
+        fm_sizes=np.array(d["fm_sizes"], dtype=np.int64),
+        stats=dict(d["stats"]),
+        costs=[IntervalCosts(**c) for c in d["costs"]],
+    )
+
+
+def _decision_to_dict(d: TunerDecision) -> dict:
+    return {
+        "t": d.t,
+        "config": d.config.to_dict(),
+        "fm_frac": d.fm_frac,
+        "fm_pages": d.fm_pages,
+        "predicted_loss": d.predicted_loss,
+    }
+
+
+def _decision_from_dict(d: dict) -> TunerDecision:
+    return TunerDecision(
+        t=d["t"],
+        config=ConfigVector(**d["config"]),
+        fm_frac=d["fm_frac"],
+        fm_pages=d["fm_pages"],
+        predicted_loss=d["predicted_loss"],
+    )
+
+
+# ----------------------------------------------------------------- planner
+
+
+def _resolve_trace(scenario: Scenario) -> Trace | None:
+    tr = scenario.trace
+    if tr is None or isinstance(tr, Trace):
+        return tr
+    if isinstance(tr, str):
+        from repro.sim.workloads import WORKLOADS
+
+        return WORKLOADS[tr]()
+    return tr()
+
+
+def _spec_fracs(spec: PolicySpec, fm_fracs: tuple) -> tuple:
+    return (float(spec.fm_frac),) if spec.fm_frac is not None else fm_fracs
+
+
+def _sim_result_from_slice(sweep_res, i: int, eff_fm: int) -> SimResult:
+    """Lift one fixed-size sweep slice into the uniform SimResult shape
+    (bit-identical to the per-size engine's result for the same slice)."""
+    times = sweep_res.interval_times[i]
+    return SimResult(
+        name=sweep_res.name,
+        total_time=float(np.sum(times)),
+        interval_times=times.copy(),
+        configs=(
+            sweep_res.configs[i] if sweep_res.configs is not None else []
+        ),
+        fm_sizes=np.full(times.size, eff_fm, dtype=np.int64),
+        stats=sweep_res.stats[i],
+        costs=list(sweep_res.costs[i]) if sweep_res.costs is not None else [],
+    )
+
+
+def _effective_fm(cap: int, frac: float) -> int:
+    # Watermarks.for_size clamping: what effective_fm_size reports all run
+    return int(max(1, min(cap, int(round(frac * cap)))))
+
+
+def _run_scenario(
+    scenario: Scenario,
+    fm_fracs: tuple,
+    policies: tuple,
+    db,
+    collect_configs: bool,
+):
+    """Execute every (policy, size) cell of one scenario.
+
+    Returns ``(records, chunked)`` where ``records`` is in (policy-major,
+    size) order and ``chunked`` counts chunked-loop executions inside the
+    *sweep* backends only. Module-level so the process fan-out can pickle
+    it.
+    """
+    sname = scenario.resolved_name
+    cells: dict = {}
+    chunked = 0
+
+    if scenario.runner is not None:
+        for pi, spec in enumerate(policies):
+            for fi, f in enumerate(_spec_fracs(spec, fm_fracs)):
+                payload = scenario.runner(scenario, float(f), spec, db)
+                cells[(pi, fi)] = RunRecord(
+                    sname, spec.name, float(f), "custom", payload
+                )
+        return _ordered(cells, policies, fm_fracs), 0
+
+    trace = _resolve_trace(scenario)
+    if trace is None:
+        raise ValueError(f"scenario {sname!r} has neither trace nor runner")
+    cap = int(scenario.hw_capacity_pages or trace.rss_pages)
+
+    def trace_for(frac: float) -> Trace:
+        if scenario.fast_only_at_full and frac >= 1.0 - 1e-9:
+            return trace.fast_only()
+        return trace
+
+    # --- partition specs: batchable TPP vs per-size engine fallback
+    sim_cells: list = []
+    tpp_groups: dict = {}  # hot_thr -> [(pi, spec)]
+    for pi, spec in enumerate(policies):
+        if scenario.pool_factory is not None or spec.kind != "tpp":
+            for fi, f in enumerate(_spec_fracs(spec, fm_fracs)):
+                sim_cells.append((pi, fi, float(f), spec))
+        else:
+            tpp_groups.setdefault(spec.hot_thr, []).append((pi, spec))
+
+    for hot_thr, group in tpp_groups.items():
+        if any(spec.tuner is not None for _, spec in group):
+            # one tuned sweep carries the whole group; untuned specs ride
+            # along as plain (tuner-free) slices. fast_only_at_full splits
+            # the group by trace variant (full-size slices run the
+            # NP_slow = 0 variant), at most two passes.
+            by_variant: dict = {}
+            for pi, spec in group:
+                for fi, f in enumerate(_spec_fracs(spec, fm_fracs)):
+                    tuner = (
+                        spec.tuner.build(db)
+                        if spec.tuner is not None
+                        else None
+                    )
+                    te = (
+                        spec.tuner.tune_every
+                        if spec.tuner is not None
+                        else None
+                    )
+                    use_fast_only = (
+                        scenario.fast_only_at_full and f >= 1.0 - 1e-9
+                    )
+                    slices, keys = by_variant.setdefault(
+                        use_fast_only, ([], [])
+                    )
+                    slices.append(TunedSlice(float(f), tuner, te))
+                    keys.append((pi, fi, float(f), spec, tuner))
+            results, keys = [], []
+            for use_fast_only, (slices, vkeys) in by_variant.items():
+                before = policy_mod.chunked_step_count()
+                results.extend(
+                    _sweep_tuned(
+                        trace.fast_only() if use_fast_only else trace,
+                        slices,
+                        hot_thr=hot_thr,
+                        hw=scenario.hw,
+                        hw_capacity_pages=scenario.hw_capacity_pages,
+                        seed=scenario.seed,
+                        kswapd_batch=scenario.kswapd_batch,
+                    )
+                )
+                chunked += policy_mod.chunked_step_count() - before
+                keys.extend(vkeys)
+            for (pi, fi, f, spec, tuner), res in zip(keys, results):
+                cells[(pi, fi)] = RunRecord(
+                    sname,
+                    spec.name,
+                    f,
+                    "tuned_sweep",
+                    res,
+                    decisions=(
+                        list(tuner.decisions) if tuner is not None else None
+                    ),
+                    watermark_log=(
+                        list(tuner.controller.log)
+                        if tuner is not None
+                        else None
+                    ),
+                )
+        else:
+            for pi, spec in group:
+                fracs = _spec_fracs(spec, fm_fracs)
+                farr = np.asarray(fracs, dtype=np.float64)
+                full = (
+                    farr >= 1.0 - 1e-9
+                    if scenario.fast_only_at_full
+                    else np.zeros(farr.size, dtype=bool)
+                )
+                parts = []
+                if bool(full.any()):
+                    parts.append((np.flatnonzero(full), trace.fast_only()))
+                if bool((~full).any()):
+                    parts.append((np.flatnonzero(~full), trace))
+                for idxs, tr in parts:
+                    before = policy_mod.chunked_step_count()
+                    res = _sweep_fm_fracs(
+                        tr,
+                        farr[idxs],
+                        hot_thr=hot_thr,
+                        hw=scenario.hw,
+                        hw_capacity_pages=scenario.hw_capacity_pages,
+                        seed=scenario.seed,
+                        collect_configs=collect_configs,
+                        kswapd_batch=scenario.kswapd_batch,
+                    )
+                    chunked += policy_mod.chunked_step_count() - before
+                    for j, fi in enumerate(idxs):
+                        f = float(farr[fi])
+                        cells[(pi, int(fi))] = RunRecord(
+                            sname,
+                            spec.name,
+                            f,
+                            "sweep",
+                            _sim_result_from_slice(
+                                res, j, _effective_fm(cap, f)
+                            ),
+                        )
+
+    # --- per-size engine fallback (custom pool / non-TPP policies)
+    for pi, fi, f, spec in sim_cells:
+        pool_factory = scenario.pool_factory or TieredPagePool
+        if scenario.kswapd_batch is not None:
+            pool_factory = functools.partial(
+                pool_factory, kswapd_batch=scenario.kswapd_batch
+            )
+        tuner = spec.tuner.build(db) if spec.tuner is not None else None
+        res = _simulate(
+            trace_for(f),
+            fm_frac=f,
+            policy=spec.build_policy(),
+            hw=scenario.hw,
+            hw_capacity_pages=scenario.hw_capacity_pages,
+            tuner=tuner,
+            tune_every=(
+                spec.tuner.tune_every if spec.tuner is not None else None
+            ),
+            seed=scenario.seed,
+            pool_factory=pool_factory,
+        )
+        cells[(pi, fi)] = RunRecord(
+            sname,
+            spec.name,
+            f,
+            "simulate",
+            res,
+            decisions=list(tuner.decisions) if tuner is not None else None,
+            watermark_log=(
+                list(tuner.controller.log) if tuner is not None else None
+            ),
+        )
+
+    return _ordered(cells, policies, fm_fracs), chunked
+
+
+def _ordered(cells: dict, policies: tuple, fm_fracs: tuple) -> list:
+    return [
+        cells[(pi, fi)]
+        for pi, spec in enumerate(policies)
+        for fi in range(len(_spec_fracs(spec, fm_fracs)))
+    ]
+
+
+def _run_scenario_star(args):
+    return _run_scenario(*args)
+
+
+def _run_scenario_trapped(args):
+    """Fan-out wrapper: job exceptions come back as values, so the parent
+    can tell a failing *job* (re-raise it) from a failing *executor*
+    (fall back to serial) — pool.map folds both into raised exceptions."""
+    try:
+        return "ok", _run_scenario(*args)
+    except Exception as e:  # noqa: BLE001 - transported, re-raised in parent
+        return "err", e
+
+
+# --------------------------------------------------------------------- run
+
+
+def _qualname(obj) -> str | None:
+    if obj is None:
+        return None
+    f = getattr(obj, "func", obj)  # unwrap functools.partial
+    if not hasattr(f, "__qualname__"):
+        f = type(f)  # instance-based callable: name its class, not its id
+    return f"{getattr(f, '__module__', '')}.{f.__qualname__}"
+
+
+def _trace_ref(trace) -> dict | str | None:
+    if isinstance(trace, Trace):
+        return {"name": trace.name, "rss_pages": int(trace.rss_pages)}
+    if isinstance(trace, str):
+        return trace
+    return _qualname(trace)
+
+
+def _experiment_spec(
+    experiment: Experiment, fm_fracs: tuple, policies: tuple, db
+) -> dict:
+    return {
+        "name": experiment.name,
+        "fm_fracs": list(fm_fracs),
+        "collect_configs": bool(experiment.collect_configs),
+        "scenarios": [
+            {
+                "name": sc.resolved_name,
+                "trace": _trace_ref(sc.trace),
+                "seed": int(sc.seed),
+                "hw": asdict(sc.hw),
+                "hw_capacity_pages": sc.hw_capacity_pages,
+                "kswapd_batch": sc.kswapd_batch,
+                "pool_factory": _qualname(sc.pool_factory),
+                "fast_only_at_full": bool(sc.fast_only_at_full),
+                "runner": _qualname(sc.runner),
+                "params": sc.params,
+            }
+            for sc in experiment.scenarios
+        ],
+        "policies": [
+            {
+                "label": p.name,
+                "kind": p.kind,
+                "hot_thr": int(p.hot_thr),
+                "fm_frac": p.fm_frac,
+                "tuner": asdict(p.tuner) if p.tuner is not None else None,
+            }
+            for p in policies
+        ],
+        "db_records": (
+            len(db.records) if db is not None and hasattr(db, "records") else None
+        ),
+    }
+
+
+def run(
+    experiment: Experiment,
+    db=None,
+    parallelism: int | None = None,
+) -> RunSet:
+    """Execute ``experiment`` and return a :class:`RunSet`.
+
+    ``db`` is the :class:`~repro.core.perfdb.PerfDB` tuned specs query
+    (required iff any :class:`PolicySpec` carries a :class:`TunerSpec`;
+    custom runners receive it verbatim). ``parallelism`` fans scenarios out
+    across processes — ``None`` keeps the database-build heuristic (serial
+    below 12 scenarios, else one worker per core); sandboxed environments
+    fall back to serial execution automatically.
+    """
+    scenarios = list(experiment.scenarios)
+    if not scenarios:
+        raise ValueError("Experiment needs at least one scenario")
+    fm_fracs = tuple(float(f) for f in experiment.fm_fracs)
+    if not fm_fracs:
+        raise ValueError("Experiment needs at least one fm fraction")
+    policies = tuple(experiment.policies)
+    if not policies:
+        raise ValueError("Experiment needs at least one policy spec")
+    names = [sc.resolved_name for sc in scenarios]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate scenario names: {names}")
+    for sc in scenarios:
+        if sc.trace is None and sc.runner is None:
+            raise ValueError(
+                f"scenario {sc.resolved_name!r} has neither trace nor runner"
+            )
+    pnames = [p.name for p in policies]
+    if len(set(pnames)) != len(pnames):
+        raise ValueError(f"duplicate policy labels: {pnames}")
+    if db is None and any(p.tuner is not None for p in policies):
+        raise ValueError(
+            "experiment has tuned policy specs but no performance database "
+            "was passed to run(db=...)"
+        )
+
+    jobs = [
+        (sc, fm_fracs, policies, db, experiment.collect_configs)
+        for sc in scenarios
+    ]
+    if parallelism is None:
+        parallelism = 1 if len(jobs) < 12 else (os.cpu_count() or 1)
+    parallelism = max(1, min(int(parallelism), len(jobs)))
+    outs = None
+    if parallelism > 1:
+        try:
+            # fork (where available) spares each worker the interpreter +
+            # numpy import; the workers run pure-numpy engine code only
+            method = "fork" if "fork" in mp.get_all_start_methods() else None
+            ctx = mp.get_context(method)
+            pool = cf.ProcessPoolExecutor(parallelism, mp_context=ctx)
+        except (OSError, ValueError):
+            pool = None  # sandboxed / restricted env: fall back to serial
+        if pool is not None:
+            try:
+                with pool:
+                    chunk = max(1, len(jobs) // (4 * parallelism))
+                    trapped = list(
+                        pool.map(_run_scenario_trapped, jobs, chunksize=chunk)
+                    )
+            except (OSError, cf.process.BrokenProcessPool):
+                # executor died (sandbox, fork bans, OOM-killed worker):
+                # fall back to serial. Errors raised *by a job* come back
+                # as ("err", e) values instead and are re-raised below — a
+                # bad spec or unreadable trace must not trigger a full
+                # serial re-execution.
+                trapped = None
+            if trapped is not None:
+                outs = []
+                for tag, val in trapped:
+                    if tag == "err":
+                        raise val
+                    outs.append(val)
+    if outs is None:
+        outs = [_run_scenario_star(job) for job in jobs]
+
+    runs, chunked = [], 0
+    for records, c in outs:
+        runs.extend(records)
+        chunked += c
+    return RunSet(
+        name=experiment.name,
+        spec=_experiment_spec(experiment, fm_fracs, policies, db),
+        runs=runs,
+        chunked_step_count=chunked,
+        backends=tuple(sorted({r.backend for r in runs})),
+    )

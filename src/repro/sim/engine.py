@@ -8,10 +8,18 @@ watermarks) and accumulates time from the cost model. Used for three jobs:
 2. executing **application workloads** (BFS/SSSP/...) to evaluate model
    accuracy and runtime tuning (the paper's evaluation);
 3. executing workloads **with the Tuna tuner in the loop** (TPP+Tuna).
+
+Since the unified experiment API landed, :func:`simulate` is a deprecated
+entry point: describe runs declaratively with
+:class:`repro.sim.api.Scenario` / :class:`repro.sim.api.Experiment` and
+execute them through :func:`repro.sim.api.run`, whose planner falls back to
+the per-size engine loop here (:func:`_simulate`) only for specs the
+batched sweeps cannot absorb (custom ``pool_factory``, non-TPP policies).
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -48,7 +56,7 @@ class SimResult:
         )
 
 
-def simulate(
+def _simulate(
     trace: Trace,
     fm_frac: float = 1.0,
     policy: TPPPolicy | FirstTouchPolicy | None = None,
@@ -149,6 +157,43 @@ def simulate(
     )
 
 
+def simulate(
+    trace: Trace,
+    fm_frac: float = 1.0,
+    policy: TPPPolicy | FirstTouchPolicy | None = None,
+    hw: HardwareProfile = OPTANE_LIKE,
+    hw_capacity_pages: int | None = None,
+    tuner: TunaTuner | None = None,
+    tune_every: int | None = None,
+    seed: int = 0,
+    pool_factory=TieredPagePool,
+) -> SimResult:
+    """Deprecated entry point; see :func:`repro.sim.api.run`.
+
+    Kept as a thin shim over :func:`_simulate` (identical results) for
+    external callers and for the equivalence tests that pin the unified
+    API against the pre-redesign paths.
+    """
+    warnings.warn(
+        "repro.sim.engine.simulate() is deprecated; describe the run with "
+        "repro.sim.api.Scenario/Experiment and execute it via "
+        "repro.sim.api.run()",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _simulate(
+        trace,
+        fm_frac=fm_frac,
+        policy=policy,
+        hw=hw,
+        hw_capacity_pages=hw_capacity_pages,
+        tuner=tuner,
+        tune_every=tune_every,
+        seed=seed,
+        pool_factory=pool_factory,
+    )
+
+
 def run_trace(
     trace: Trace,
     fm_frac: float,
@@ -156,6 +201,6 @@ def run_trace(
     hot_thr: int = 4,
 ) -> float:
     """Execution-time backend used to build the performance database."""
-    return simulate(
+    return _simulate(
         trace, fm_frac=fm_frac, policy=TPPPolicy(hot_thr=hot_thr), hw=hw
     ).total_time

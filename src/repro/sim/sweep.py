@@ -1,6 +1,17 @@
 """Batched fast-memory-size sweep engine (the offline database hot path
 and the TPP+Tuna closed-loop evaluation path).
 
+This module is the **execution backend layer** of the unified experiment
+API: runs are described declaratively with
+:class:`repro.sim.api.Scenario` / :class:`repro.sim.api.Experiment` and
+executed through :func:`repro.sim.api.run`, whose planner dispatches onto
+the batched sweeps here (:func:`_sweep_fm_fracs` for untuned size vectors,
+:func:`_sweep_tuned` for tuner-in-the-loop slices) and falls back to the
+per-size engine loop (:func:`repro.sim.engine._simulate`) only for specs
+the sweeps cannot absorb. The public names ``sweep_fm_fracs`` /
+``sweep_tuned`` / ``sweep_times`` remain as deprecated shims with
+identical results.
+
 Tuna's offline component executes the same micro-benchmark trace at ~21
 fast-memory sizes (paper Sections 3.3/5). Running :func:`repro.sim.engine.
 simulate` once per size repeats every size-independent computation — trace
@@ -78,11 +89,20 @@ timing), and ``quick`` (whether the CI quick mode produced the file).
 tier, rotating): a fixed-size sweep deep in the migration-failure regime,
 seed per-size reference loop vs one sweep pass, with
 ``thrash_sweep_chunked_steps`` asserting the sweep never executed the
-chunked loop.
+chunked loop (surfaced by ``RunSet.chunked_step_count`` since the bench
+moved onto the unified API).
+
+Alongside this BENCH schema, experiment results themselves have a
+serialized form: the versioned **RunSet JSON schema**
+(``tuna-runset-v1`` — spec echo, per-run results, tuner decisions,
+watermark logs, ``chunked_step_count`` provenance), documented in full in
+the :mod:`repro.sim.api` module docstring and round-trip-tested by
+``tests/test_api.py``.
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
@@ -113,6 +133,7 @@ class SweepResult:
     interval_times: np.ndarray  # [n_sizes, n_intervals]
     stats: list  # final pool counter snapshot per size
     configs: list | None = None  # per size: ConfigVector per interval
+    costs: list | None = None  # per size: IntervalCosts per interval
 
     @property
     def total_times(self) -> np.ndarray:
@@ -201,10 +222,13 @@ def _sweep_run(
             for _ in range(n_sizes)
         ]
         configs_out = [[] for _ in range(n_sizes)]
-    fm_sizes = costs = t_now = None
+    # the per-(size, interval) IntervalCosts are computed either way for
+    # the time accumulation; retaining them keeps every slice's result
+    # identical to the per-size engine's (which always returns costs)
+    costs = [[] for _ in range(n_sizes)]
+    fm_sizes = t_now = None
     if tuned:
         fm_sizes = np.zeros((n_sizes, n_intervals), dtype=np.int64)
-        costs = [[] for _ in range(n_sizes)]
         t_now = [0.0] * n_sizes
     for i, ia in enumerate(trace):
         pages = ia.pages
@@ -322,11 +346,11 @@ def _sweep_run(
                 rand_frac=ia.rand_frac,
             )
             times[s, i] = cost.total
+            costs[s].append(cost)
             if tuned:
                 # what simulate() records *before* the tuner step: the fm
                 # size in effect during this interval
                 fm_sizes[s, i] = pool.effective_fm_size
-                costs[s].append(cost)
                 t_now[s] += cost.total
         # --- one shared heat fold for all sizes (mirrors
         # TieredPagePool.end_interval's dense/indexed hybrid)
@@ -357,7 +381,7 @@ def _sweep_run(
     return times, pools, configs_out, fm_sizes, costs
 
 
-def sweep_fm_fracs(
+def _sweep_fm_fracs(
     trace: Trace,
     fm_fracs,
     hot_thr: int = 4,
@@ -379,7 +403,7 @@ def sweep_fm_fracs(
     fm_fracs = np.asarray(fm_fracs, dtype=np.float64)
     if fm_fracs.size == 0:
         raise ValueError("sweep_fm_fracs needs at least one fm fraction")
-    times, pools, configs_out, _, _ = _sweep_run(
+    times, pools, configs_out, _, costs = _sweep_run(
         trace, fm_fracs, hot_thr, hw, hw_capacity_pages, seed,
         collect_configs, kswapd_batch=kswapd_batch,
     )
@@ -389,10 +413,11 @@ def sweep_fm_fracs(
         interval_times=times,
         stats=[pool.stats.snapshot() for pool in pools],
         configs=configs_out,
+        costs=costs,
     )
 
 
-def sweep_tuned(
+def _sweep_tuned(
     trace: Trace,
     slices,
     hot_thr: int = 4,
@@ -440,11 +465,81 @@ def sweep_tuned(
     ]
 
 
+def _deprecated(name: str) -> None:
+    warnings.warn(
+        f"repro.sim.sweep.{name}() is deprecated; describe the run with "
+        "repro.sim.api.Scenario/Experiment and execute it via "
+        "repro.sim.api.run()",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def sweep_fm_fracs(
+    trace: Trace,
+    fm_fracs,
+    hot_thr: int = 4,
+    hw: HardwareProfile = OPTANE_LIKE,
+    hw_capacity_pages: int | None = None,
+    seed: int = 0,
+    collect_configs: bool = False,
+    kswapd_batch: int | None = None,
+) -> SweepResult:
+    """Deprecated entry point; see :func:`repro.sim.api.run`.
+
+    Thin shim over :func:`_sweep_fm_fracs` with identical results.
+    """
+    _deprecated("sweep_fm_fracs")
+    return _sweep_fm_fracs(
+        trace, fm_fracs, hot_thr=hot_thr, hw=hw,
+        hw_capacity_pages=hw_capacity_pages, seed=seed,
+        collect_configs=collect_configs, kswapd_batch=kswapd_batch,
+    )
+
+
+def sweep_tuned(
+    trace: Trace,
+    slices,
+    hot_thr: int = 4,
+    hw: HardwareProfile = OPTANE_LIKE,
+    hw_capacity_pages: int | None = None,
+    seed: int = 0,
+    kswapd_batch: int | None = None,
+) -> list:
+    """Deprecated entry point; see :func:`repro.sim.api.run`.
+
+    Thin shim over :func:`_sweep_tuned` with identical results.
+    """
+    _deprecated("sweep_tuned")
+    return _sweep_tuned(
+        trace, slices, hot_thr=hot_thr, hw=hw,
+        hw_capacity_pages=hw_capacity_pages, seed=seed,
+        kswapd_batch=kswapd_batch,
+    )
+
+
 def sweep_times(
     trace: Trace,
     fm_fracs,
     hot_thr: int = 4,
     hw: HardwareProfile = OPTANE_LIKE,
 ) -> np.ndarray:
-    """Total execution time per fm fraction (the database-build backend)."""
-    return sweep_fm_fracs(trace, fm_fracs, hot_thr=hot_thr, hw=hw).total_times
+    """Total execution time per fm fraction (the database-build backend).
+
+    Deprecated entry point, deduped onto the :func:`repro.sim.api.run`
+    planner: one untuned :class:`~repro.sim.api.Experiment` over the size
+    vector, which the planner executes as a single batched sweep —
+    identical times to the pre-redesign direct ``sweep_fm_fracs`` call.
+    """
+    _deprecated("sweep_times")
+    from repro.sim.api import Experiment, PolicySpec, Scenario, run
+
+    rs = run(
+        Experiment(
+            name="sweep_times",
+            scenarios=[Scenario(trace=trace, hw=hw)],
+            fm_fracs=tuple(float(f) for f in np.asarray(fm_fracs).ravel()),
+            policies=[PolicySpec(hot_thr=hot_thr)],
+        )
+    )
+    return np.array([rec.result.total_time for rec in rs.runs])

@@ -1,0 +1,573 @@
+"""The unified experiment API is pinned bit-exact against the
+pre-redesign entry points.
+
+``repro.sim.api.run`` is a planner over the same execution backends the
+old entry points exposed directly, so every cell of a ``RunSet`` must
+reproduce ``simulate`` / ``sweep_fm_fracs`` / ``sweep_tuned`` exactly:
+migration counters, interval times, config vectors, per-interval fm
+sizes, tuner decision lists, and watermark event logs. On top of that:
+backend selection, chunked-loop-free sweep provenance, process fan-out
+determinism, lossless ``RunSet`` JSON round-trips, and the deprecation
+shims (each warns once and returns results identical to ``run()``).
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.perfdb import PerfDB, PerfRecord
+from repro.core.telemetry import ConfigVector
+from repro.core.trace import IntervalAccess, Trace
+from repro.core.tuner import TunaTuner, TunerConfig
+from repro.core.watermark import WatermarkController
+from repro.sim.api import (
+    Experiment,
+    PolicySpec,
+    RunSet,
+    Scenario,
+    TunerSpec,
+    run,
+)
+from repro.sim.engine import _simulate
+from repro.tiering.policy import FirstTouchPolicy
+from repro.tiering.reference_pool import ReferencePagePool
+
+
+def random_trace(seed, rss=4_000, n_intervals=10):
+    rng = np.random.default_rng(seed)
+    tr = Trace(name=f"rand{seed}", rss_pages=rss)
+    for _ in range(n_intervals):
+        k = int(rng.integers(300, 1600))
+        pages = rng.choice(rss, size=k, replace=False)
+        tr.append(
+            IntervalAccess(
+                pages=pages, counts=rng.integers(1, 9, size=k), ops=1000.0
+            )
+        )
+    return tr
+
+
+def pressure_trace(seed, rss=3_000, n_intervals=8):
+    """Rotating hot window over most of the RSS: the thrash regime."""
+    rng = np.random.default_rng(seed)
+    tr = Trace(name=f"press{seed}", rss_pages=rss)
+    hot_n = int(rss * 0.7)
+    for i in range(n_intervals):
+        hot = (np.arange(hot_n) + i * (hot_n // 3)) % rss
+        pages = np.unique(
+            np.concatenate([hot, rng.choice(rss, size=rss // 10, replace=False)])
+        )
+        tr.append(
+            IntervalAccess(
+                pages=pages,
+                counts=rng.integers(4, 9, size=pages.size),
+                ops=1000.0,
+            )
+        )
+    return tr
+
+
+def synthetic_db(rss=4_000, max_loss=0.4):
+    grid = np.round(np.arange(1.0, 0.19, -0.05), 3)
+    cv = ConfigVector(
+        pacc_f=10_000, pacc_s=500, pm_de=20, pm_pr=20, ai=6.0,
+        rss_pages=rss, hot_thr=4, num_threads=1,
+    )
+    db = PerfDB()
+    db.add(
+        PerfRecord(
+            config=cv, fm_fracs=grid,
+            times=1.0 + np.linspace(0.0, max_loss, grid.size),
+        )
+    )
+    db.build()
+    return db
+
+
+TUNER_SPEC = TunerSpec(target_loss=0.05, tune_every=2, max_step_frac=0.08)
+
+
+def live_tuner(db, spec=TUNER_SPEC) -> TunaTuner:
+    """The pre-redesign construction the spec must reproduce."""
+    return TunaTuner(
+        db,
+        WatermarkController(
+            max_step_frac=spec.max_step_frac,
+            deadband_frac=spec.deadband_frac,
+        ),
+        TunerConfig(
+            target_loss=spec.target_loss,
+            k_neighbors=spec.k_neighbors,
+            cooldown_windows=spec.cooldown_windows,
+        ),
+    )
+
+
+def assert_result_equal(got, want, configs=True, fm_sizes=True):
+    assert got.stats == want.stats
+    assert np.array_equal(got.interval_times, want.interval_times)
+    assert got.total_time == want.total_time
+    assert got.costs == want.costs  # IntervalCosts, every backend
+    if fm_sizes:
+        assert np.array_equal(got.fm_sizes, want.fm_sizes)
+    if configs:
+        assert got.configs == want.configs
+
+
+class TestPlannerEquivalence:
+    """run() == the pre-redesign per-entry-point paths, bit for bit."""
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_untuned_matches_per_size_simulate(self, seed):
+        tr = random_trace(seed)
+        fracs = (1.0, 0.7, 0.4, 0.15)
+        rs = run(
+            Experiment(
+                scenarios=[Scenario(trace=tr)],
+                fm_fracs=fracs,
+                collect_configs=True,
+            )
+        )
+        assert rs.backends == ("sweep",)
+        for f in fracs:
+            rec = rs.record(fm_frac=f)
+            assert rec.backend == "sweep"
+            assert_result_equal(rec.result, _simulate(tr, fm_frac=f))
+
+    def test_tuned_matches_pre_sweep_simulate(self):
+        tr = random_trace(3, n_intervals=24)
+        db = synthetic_db()
+        ref_tuner = live_tuner(db)
+        want = _simulate(
+            tr, fm_frac=1.0, tuner=ref_tuner,
+            tune_every=TUNER_SPEC.tune_every,
+        )
+        rs = run(
+            Experiment(
+                scenarios=[Scenario(trace=tr)],
+                fm_fracs=(1.0,),
+                policies=[
+                    PolicySpec(label="base"),
+                    PolicySpec(label="tuned", tuner=TUNER_SPEC),
+                ],
+            ),
+            db=db,
+        )
+        rec = rs.record(policy="tuned")
+        assert rec.backend == "tuned_sweep"
+        assert_result_equal(rec.result, want)
+        # the tuner was constructed *inside* the run; its decision list
+        # and watermark event log must replay the pre-bound tuner exactly
+        assert [d.__dict__ for d in rec.decisions] == [
+            d.__dict__ for d in ref_tuner.decisions
+        ]
+        assert [e.__dict__ for e in rec.watermark_log] == [
+            e.__dict__ for e in ref_tuner.controller.log
+        ]
+        assert len(rec.watermark_log) > 0  # the scenario must actuate
+        # the untuned spec rode the same tuned sweep as a plain slice
+        base = rs.record(policy="base")
+        assert base.backend == "tuned_sweep"
+        assert base.decisions is None
+        assert_result_equal(base.result, _simulate(tr, fm_frac=1.0))
+
+    def test_reference_pool_forces_simulate_backend(self):
+        tr = random_trace(4)
+        rs = run(
+            Experiment(
+                scenarios=[Scenario(trace=tr, pool_factory=ReferencePagePool)],
+                fm_fracs=(0.6, 0.3),
+            )
+        )
+        for f in (0.6, 0.3):
+            rec = rs.record(fm_frac=f)
+            assert rec.backend == "simulate"
+            assert_result_equal(
+                rec.result,
+                _simulate(tr, fm_frac=f, pool_factory=ReferencePagePool),
+            )
+
+    def test_first_touch_forces_simulate_backend(self):
+        tr = random_trace(5)
+        rs = run(
+            Experiment(
+                scenarios=[Scenario(trace=tr)],
+                fm_fracs=(0.5,),
+                policies=[
+                    PolicySpec(label="tpp"),
+                    PolicySpec(kind="first_touch", label="ft"),
+                ],
+            )
+        )
+        assert rs.record(policy="tpp").backend == "sweep"
+        ft = rs.record(policy="ft")
+        assert ft.backend == "simulate"
+        assert_result_equal(
+            ft.result, _simulate(tr, fm_frac=0.5, policy=FirstTouchPolicy())
+        )
+
+    def test_fast_only_at_full(self):
+        tr = random_trace(6)
+        tr.slow_pages = np.arange(0, tr.rss_pages, 3, dtype=np.int64)
+        rs = run(
+            Experiment(
+                scenarios=[Scenario(trace=tr, fast_only_at_full=True)],
+                fm_fracs=(1.0, 0.5),
+            )
+        )
+        assert_result_equal(
+            rs.record(fm_frac=1.0).result,
+            _simulate(tr.fast_only(), fm_frac=1.0),
+            configs=False,
+        )
+        assert_result_equal(
+            rs.record(fm_frac=0.5).result,
+            _simulate(tr, fm_frac=0.5),
+            configs=False,
+        )
+
+    def test_fast_only_at_full_on_tuned_backend(self):
+        # the NP_slow = 0 substitution must hold on the tuned sweep too:
+        # full-size slices run trace.fast_only(), others the raw trace
+        tr = random_trace(13, n_intervals=16)
+        tr.slow_pages = np.arange(0, tr.rss_pages, 4, dtype=np.int64)
+        db = synthetic_db()
+        rs = run(
+            Experiment(
+                scenarios=[Scenario(trace=tr, fast_only_at_full=True)],
+                fm_fracs=(1.0, 0.6),
+                policies=[
+                    PolicySpec(label="base"),
+                    PolicySpec(label="tuned", fm_frac=1.0, tuner=TUNER_SPEC),
+                ],
+            ),
+            db=db,
+        )
+        assert rs.record(policy="tuned").backend == "tuned_sweep"
+        ref_tuner = live_tuner(db)
+        assert_result_equal(
+            rs.record(policy="tuned").result,
+            _simulate(
+                tr.fast_only(), fm_frac=1.0, tuner=ref_tuner,
+                tune_every=TUNER_SPEC.tune_every,
+            ),
+        )
+        assert_result_equal(
+            rs.record(policy="base", fm_frac=1.0).result,
+            _simulate(tr.fast_only(), fm_frac=1.0),
+        )
+        assert_result_equal(
+            rs.record(policy="base", fm_frac=0.6).result,
+            _simulate(tr, fm_frac=0.6),
+        )
+
+    def test_policy_fm_frac_override(self):
+        tr = random_trace(7)
+        rs = run(
+            Experiment(
+                scenarios=[Scenario(trace=tr)],
+                fm_fracs=(1.0, 0.5),
+                policies=[
+                    PolicySpec(label="curve"),
+                    PolicySpec(label="pinned", fm_frac=0.3),
+                ],
+                collect_configs=True,
+            )
+        )
+        assert [r.fm_frac for r in rs.select(policy="curve")] == [1.0, 0.5]
+        assert [r.fm_frac for r in rs.select(policy="pinned")] == [0.3]
+        assert_result_equal(
+            rs.record(policy="pinned").result, _simulate(tr, fm_frac=0.3)
+        )
+
+    def test_sweeps_are_chunked_loop_free(self):
+        # the thrash regime must stay on the bulk policy step; the RunSet
+        # surfaces the count as provenance
+        rs = run(
+            Experiment(
+                scenarios=[Scenario(trace=pressure_trace(0), kswapd_batch=16)],
+                fm_fracs=(0.6, 0.3, 0.12),
+            )
+        )
+        assert rs.chunked_step_count == 0
+        assert rs.backends == ("sweep",)
+
+    def test_scenario_fanout_matches_serial(self):
+        traces = [random_trace(s, n_intervals=6) for s in (8, 9, 10)]
+        exp = Experiment(
+            scenarios=[Scenario(trace=tr) for tr in traces],
+            fm_fracs=(0.8, 0.4),
+            collect_configs=True,
+        )
+        serial = run(exp, parallelism=1)
+        fanned = run(exp, parallelism=2)  # falls back serial if sandboxed
+        assert [r.scenario for r in serial.runs] == [
+            r.scenario for r in fanned.runs
+        ]
+        for a, b in zip(serial.runs, fanned.runs):
+            assert (a.policy, a.fm_frac) == (b.policy, b.fm_frac)
+            assert_result_equal(a.result, b.result)
+
+    def test_workload_name_and_callable_scenarios(self):
+        tr = random_trace(11, n_intervals=4)
+
+        def factory():
+            return random_trace(11, n_intervals=4)
+
+        rs_obj = run(
+            Experiment(scenarios=[Scenario(trace=tr)], fm_fracs=(0.5,))
+        )
+        rs_fn = run(
+            Experiment(
+                scenarios=[Scenario(trace=factory, name="rand11")],
+                fm_fracs=(0.5,),
+            )
+        )
+        assert_result_equal(
+            rs_fn.record().result, rs_obj.record().result, configs=False
+        )
+
+    def test_validation_errors(self):
+        tr = random_trace(12, n_intervals=3)
+        with pytest.raises(ValueError, match="at least one scenario"):
+            run(Experiment(scenarios=[]))
+        with pytest.raises(ValueError, match="duplicate policy labels"):
+            run(
+                Experiment(
+                    scenarios=[Scenario(trace=tr)],
+                    policies=[PolicySpec(label="x"), PolicySpec(label="x")],
+                )
+            )
+        with pytest.raises(ValueError, match="no performance database"):
+            run(
+                Experiment(
+                    scenarios=[Scenario(trace=tr)],
+                    policies=[PolicySpec(tuner=TunerSpec())],
+                )
+            )
+        with pytest.raises(ValueError, match="neither trace nor runner"):
+            run(Experiment(scenarios=[Scenario()]))
+        with pytest.raises(ValueError, match="kind"):
+            PolicySpec(kind="numa")
+        with pytest.raises(ValueError, match="tuners require"):
+            PolicySpec(kind="first_touch", tuner=TunerSpec())
+
+    def test_custom_runner_backend(self):
+        def runner(scenario, fm_frac, spec, db):
+            return {
+                "fm_frac": fm_frac,
+                "knob": scenario.params["knob"],
+                "policy": spec.name,
+            }
+
+        rs = run(
+            Experiment(
+                scenarios=[
+                    Scenario(name="svc", runner=runner, params={"knob": 7})
+                ],
+                fm_fracs=(1.0, 0.5),
+            )
+        )
+        assert rs.backends == ("custom",)
+        assert rs.result(fm_frac=0.5) == {
+            "fm_frac": 0.5, "knob": 7, "policy": "tpp",
+        }
+        # total_times is a simulator-result helper; custom payloads have
+        # no total_time and must be rejected explicitly
+        with pytest.raises(TypeError, match="backend='custom'"):
+            rs.total_times()
+
+
+class TestRunSetSerialization:
+    """to_json/from_json is lossless, including ConfigVectors, stats
+    snapshots, costs, tuner decisions, and watermark logs."""
+
+    def _tuned_runset(self):
+        tr = random_trace(20, n_intervals=18)
+        db = synthetic_db()
+        return run(
+            Experiment(
+                name="roundtrip",
+                scenarios=[Scenario(trace=tr)],
+                fm_fracs=(1.0,),
+                policies=[
+                    PolicySpec(label="base"),
+                    PolicySpec(label="tuned", tuner=TUNER_SPEC),
+                ],
+            ),
+            db=db,
+        )
+
+    def test_round_trip(self):
+        rs = self._tuned_runset()
+        text = rs.to_json()
+        back = RunSet.from_json(text)
+        assert back.name == rs.name
+        assert back.spec == rs.spec
+        assert back.chunked_step_count == rs.chunked_step_count
+        assert back.backends == rs.backends
+        assert len(back.runs) == len(rs.runs)
+        for a, b in zip(rs.runs, back.runs):
+            assert (a.scenario, a.policy, a.fm_frac, a.backend) == (
+                b.scenario, b.policy, b.fm_frac, b.backend
+            )
+            # bit-exact: counters, times, fm trajectories, config vectors
+            assert b.result.stats == a.result.stats
+            assert np.array_equal(b.result.interval_times, a.result.interval_times)
+            assert b.result.interval_times.dtype == a.result.interval_times.dtype
+            assert np.array_equal(b.result.fm_sizes, a.result.fm_sizes)
+            assert b.result.configs == a.result.configs
+            assert b.result.costs == a.result.costs
+            if a.decisions is None:
+                assert b.decisions is None
+            else:
+                assert [d.__dict__ for d in b.decisions] == [
+                    d.__dict__ for d in a.decisions
+                ]
+                assert [e.__dict__ for e in b.watermark_log] == [
+                    e.__dict__ for e in a.watermark_log
+                ]
+        # a second round trip is byte-identical (fixed point)
+        assert RunSet.from_json(back.to_json()).to_json() == text
+
+    def test_provenance_fields(self):
+        rs = self._tuned_runset()
+        assert rs.spec["name"] == "roundtrip"
+        assert rs.spec["fm_fracs"] == [1.0]
+        assert rs.spec["scenarios"][0]["seed"] == 0
+        assert rs.spec["policies"][1]["tuner"]["target_loss"] == 0.05
+        assert rs.spec["db_records"] == 1
+        assert rs.chunked_step_count == 0
+        assert "tuned_sweep" in rs.backends
+
+    def test_schema_version_checked(self):
+        rs = self._tuned_runset()
+        import json
+
+        d = json.loads(rs.to_json())
+        d["schema"] = "bogus"
+        with pytest.raises(ValueError, match="schema"):
+            RunSet.from_json(json.dumps(d))
+
+    def test_custom_payload_round_trip(self):
+        rs = run(
+            Experiment(
+                scenarios=[
+                    Scenario(
+                        name="svc",
+                        runner=lambda sc, f, spec, db: {"p99": 1.25, "n": 3},
+                    )
+                ],
+            )
+        )
+        back = RunSet.from_json(rs.to_json())
+        assert back.result(scenario="svc") == {"p99": 1.25, "n": 3}
+
+
+class TestDeprecatedShims:
+    """Each pre-redesign entry point warns exactly once per call and
+    returns results identical to the unified API."""
+
+    def _deprecations(self, w):
+        return [x for x in w if issubclass(x.category, DeprecationWarning)]
+
+    def test_simulate_shim(self):
+        from repro.sim.engine import simulate
+
+        tr = random_trace(30, n_intervals=5)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            res = simulate(tr, fm_frac=0.5)
+        assert len(self._deprecations(w)) == 1
+        want = run(
+            Experiment(
+                scenarios=[Scenario(trace=tr)],
+                fm_fracs=(0.5,),
+                collect_configs=True,
+            )
+        ).record().result
+        assert_result_equal(res, want)
+
+    def test_sweep_fm_fracs_shim(self):
+        from repro.sim.sweep import sweep_fm_fracs
+
+        tr = random_trace(31, n_intervals=5)
+        fracs = (0.8, 0.4)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            res = sweep_fm_fracs(tr, fracs, collect_configs=True)
+        assert len(self._deprecations(w)) == 1
+        rs = run(
+            Experiment(
+                scenarios=[Scenario(trace=tr)],
+                fm_fracs=fracs,
+                collect_configs=True,
+            )
+        )
+        for i, f in enumerate(fracs):
+            rec = rs.record(fm_frac=f)
+            assert res.stats[i] == rec.result.stats
+            assert np.array_equal(
+                res.interval_times[i], rec.result.interval_times
+            )
+            assert res.configs[i] == rec.result.configs
+
+    def test_sweep_tuned_shim(self):
+        from repro.sim.sweep import TunedSlice, sweep_tuned
+
+        tr = random_trace(32, n_intervals=16)
+        db = synthetic_db()
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            (res,) = sweep_tuned(
+                tr,
+                [TunedSlice(1.0, live_tuner(db), TUNER_SPEC.tune_every)],
+            )
+        assert len(self._deprecations(w)) == 1
+        rs = run(
+            Experiment(
+                scenarios=[Scenario(trace=tr)],
+                fm_fracs=(1.0,),
+                policies=[PolicySpec(tuner=TUNER_SPEC)],
+            ),
+            db=db,
+        )
+        assert_result_equal(res, rs.record().result)
+
+    def test_sweep_times_shim(self):
+        from repro.sim.sweep import sweep_times
+
+        tr = random_trace(33, n_intervals=5)
+        fracs = (0.9, 0.5, 0.2)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            times = sweep_times(tr, fracs)
+        assert len(self._deprecations(w)) == 1
+        rs = run(
+            Experiment(scenarios=[Scenario(trace=tr)], fm_fracs=fracs)
+        )
+        assert np.array_equal(times, rs.total_times())
+
+
+class TestBuildDatabaseOnPlanner:
+    """build_database constructs its runs exclusively through run()."""
+
+    def test_fanout_workers_match_serial(self):
+        from repro.core.tuner import build_database
+
+        cvs = [
+            ConfigVector(
+                pacc_f=20_000 + 1_000 * i, pacc_s=1_000, pm_de=30, pm_pr=30,
+                ai=8.0, rss_pages=6_000, hot_thr=4, num_threads=1,
+            )
+            for i in range(3)
+        ]
+        fracs = np.array([1.0, 0.6, 0.3])
+        db1 = build_database(cvs, fm_fracs=fracs, n_intervals=5,
+                             max_rss_pages=6_000, workers=1)
+        db2 = build_database(cvs, fm_fracs=fracs, n_intervals=5,
+                             max_rss_pages=6_000, workers=2)
+        for r1, r2 in zip(db1.records, db2.records):
+            assert np.array_equal(r1.times, r2.times)
+            assert r1.config == r2.config

@@ -1,0 +1,202 @@
+"""Watermark-edge property suite (ROADMAP PR-3 follow-up).
+
+``Watermarks.for_size`` extremes are where the bulk policy step earns its
+keep — and where PR 3 found (and fixed) the latent seed divergence that
+credited reclaim-exhausted promotion failures to ``pgpromote_fail``
+differently between the bulk and chunked paths. Hypothesis drives the
+three regimes the ISSUE names:
+
+* ``low_free == 0`` — fm == hw capacity while slow-tier promotion
+  candidates exist (hw capacity below the RSS): reclaim can free nothing,
+  so the whole candidate tail must fail identically in every lane;
+* size 1 — the smallest representable fast tier (``for_size`` clamps to
+  ``max(1, ...)``);
+* size == hw_capacity == RSS — ``low_free == 0`` with free headroom, so
+  promotions succeed without reclaim.
+
+Every case asserts three-lane equality — the unified-API sweep (bulk
+policy step, chunked-loop-free by provenance) vs the forced-chunked pool
+vs the frozen ``ReferencePagePool`` golden model — on migration counters
+(including ``pgpromote_fail`` on the reclaim-exhausted tail), interval
+times, and config vectors.
+"""
+
+import functools
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (test extra)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.trace import IntervalAccess, Trace
+from repro.sim.api import Experiment, Scenario, run
+from repro.sim.engine import _simulate
+from repro.tiering.page_pool import TieredPagePool, Watermarks
+from repro.tiering.reference_pool import ReferencePagePool
+
+
+class _ChunkedOnlyPool(TieredPagePool):
+    """Incremental pool with the bulk step disabled: forces the chunked
+    promote/reclaim loop (the second equivalence lane)."""
+
+    def _try_bulk_step(self, cand, _sched=None):
+        return None
+
+
+def churn_trace(seed, rss, n_intervals=6, slow_frac=0.5):
+    """Rotating hot window (touch counts past hot_thr) over an RSS whose
+    ``slow_frac`` is explicitly bound to the slow tier — so promotion
+    candidates exist even when the fast tier starts full."""
+    rng = np.random.default_rng(seed)
+    tr = Trace(name=f"edge{seed}", rss_pages=rss)
+    tr.slow_pages = np.sort(
+        rng.choice(rss, size=int(rss * slow_frac), replace=False)
+    )
+    hot_n = int(rss * 0.6)
+    for i in range(n_intervals):
+        hot = (np.arange(hot_n) + i * (hot_n // 3)) % rss
+        pages = np.unique(
+            np.concatenate([hot, rng.choice(rss, rss // 8, replace=False)])
+        )
+        tr.append(
+            IntervalAccess(
+                pages=pages,
+                counts=rng.integers(4, 9, size=pages.size),
+                ops=500.0,
+            )
+        )
+    return tr
+
+
+def assert_three_lanes(tr, cap, fm_frac, kswapd=None):
+    """Sweep (bulk) == forced-chunked == ReferencePagePool, bit for bit."""
+    rs = run(
+        Experiment(
+            name="watermark_edge",
+            scenarios=[
+                Scenario(trace=tr, hw_capacity_pages=cap, kswapd_batch=kswapd)
+            ],
+            fm_fracs=(fm_frac,),
+            collect_configs=True,
+        )
+    )
+    assert rs.chunked_step_count == 0  # the sweep stayed on the bulk step
+    bulk = rs.record().result
+    for pool_cls in (_ChunkedOnlyPool, ReferencePagePool):
+        factory = (
+            functools.partial(pool_cls, kswapd_batch=kswapd)
+            if kswapd is not None
+            else pool_cls
+        )
+        lane = _simulate(
+            tr, fm_frac=fm_frac, hw_capacity_pages=cap, pool_factory=factory
+        )
+        assert bulk.stats == lane.stats, pool_cls.__name__
+        assert np.array_equal(
+            bulk.interval_times, lane.interval_times
+        ), pool_cls.__name__
+        assert bulk.configs == lane.configs, pool_cls.__name__
+    return bulk
+
+
+class TestForSizeProperties:
+    @given(
+        cap=st.integers(1, 2**31),
+        req=st.integers(-(2**31), 2**32),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_clamping_and_coupling(self, cap, req):
+        wm = Watermarks.for_size(cap, req)
+        fm = cap - wm.low_free
+        assert 1 <= fm <= cap  # size clamps into [1, hw_capacity]
+        assert wm.high_free == wm.low_free  # paper: high = low = new_fm
+        assert 0 <= wm.min_free <= wm.low_free  # min ~ 0.8 x low
+        # idempotent at the clamped size
+        again = Watermarks.for_size(cap, fm)
+        assert (again.min_free, again.low_free, again.high_free) == (
+            wm.min_free, wm.low_free, wm.high_free
+        )
+
+    def test_extreme_points(self):
+        wm = Watermarks.for_size(100, 100)  # fm == capacity
+        assert (wm.min_free, wm.low_free, wm.high_free) == (0, 0, 0)
+        wm = Watermarks.for_size(100, 0)  # clamped up to size 1
+        assert wm.low_free == 99
+        wm = Watermarks.for_size(100, 10**9)  # clamped down to capacity
+        assert wm.low_free == 0
+
+
+class TestWatermarkEdgeEquivalence:
+    @given(seed=st.integers(0, 1_000), kswapd=st.sampled_from([None, 1, 24]))
+    @settings(max_examples=8, deadline=None)
+    def test_low_free_zero_with_slow_candidates(self, seed, kswapd):
+        # fm == hw capacity < RSS: low_free == 0, the fast tier fills via
+        # first-touch + early promotions, hot slow pages keep arriving as
+        # candidates, and reclaim is exhausted — the promotion tail fails.
+        # This is exactly the PR-3 divergence: the chunked loop never
+        # calls promote() on the reclaim-exhausted tail, so
+        # stats.pgpromote_fail must stay *uncredited* in every lane (the
+        # tail's pm_fail is policy-outcome telemetry, charged by the cost
+        # model — covered by the interval-time equality in
+        # assert_three_lanes). slow_frac > 0.5 guarantees demand beyond
+        # capacity.
+        rss = 1_200 + (seed % 5) * 160
+        cap = rss // 2
+        tr = churn_trace(seed, rss, n_intervals=8, slow_frac=0.65)
+        bulk = assert_three_lanes(tr, cap=cap, fm_frac=1.0, kswapd=kswapd)
+        stats = bulk.stats
+        # the regime fired: the fast tier filled completely ...
+        assert stats["pgpromote_success"] + stats["alloc_fast"] == cap
+        # ... while hot slow-tier candidates remained (the failed tail)
+        slow_hot = np.zeros(rss, dtype=bool)
+        for ia in tr:
+            slow_hot[ia.pages[ia.touches >= 4]] = True
+        n_slow_hot = int(slow_hot[tr.slow_pages].sum())
+        assert n_slow_hot > stats["pgpromote_success"]
+        # and the tail was not credited to the vmstat counter in any lane
+        # (stats equality above pins all three lanes to this value)
+        assert stats["pgpromote_fail"] == 0
+
+    @given(seed=st.integers(0, 1_000), kswapd=st.sampled_from([None, 1]))
+    @settings(max_examples=6, deadline=None)
+    def test_size_one(self, seed, kswapd):
+        # the smallest representable fast tier: low_free == cap - 1
+        rss = 900 + (seed % 4) * 150
+        tr = churn_trace(seed, rss, slow_frac=0.3)
+        assert_three_lanes(tr, cap=rss, fm_frac=1.0 / rss, kswapd=kswapd)
+
+    @given(seed=st.integers(0, 1_000))
+    @settings(max_examples=6, deadline=None)
+    def test_size_equals_capacity_with_headroom(self, seed):
+        # fm == hw_capacity == RSS: low_free == 0 but free pages remain,
+        # so candidate promotions succeed without any reclaim
+        rss = 1_000 + (seed % 4) * 130
+        tr = churn_trace(seed, rss, slow_frac=0.4)
+        bulk = assert_three_lanes(tr, cap=rss, fm_frac=1.0)
+        assert bulk.stats["pgpromote_fail"] == 0
+        assert bulk.stats["pgpromote_success"] > 0
+
+    def test_edge_vector_in_one_sweep(self):
+        # all three extremes ride one batched experiment and still match
+        # the per-size lanes (the planner keeps slices independent)
+        rss = 1_400
+        tr = churn_trace(17, rss)
+        cap = rss // 2
+        fracs = (1.0 / cap, 0.5, 1.0)
+        rs = run(
+            Experiment(
+                scenarios=[Scenario(trace=tr, hw_capacity_pages=cap)],
+                fm_fracs=fracs,
+                collect_configs=True,
+            )
+        )
+        assert rs.chunked_step_count == 0
+        for f in fracs:
+            lane = _simulate(
+                tr, fm_frac=f, hw_capacity_pages=cap,
+                pool_factory=ReferencePagePool,
+            )
+            rec = rs.record(fm_frac=f)
+            assert rec.result.stats == lane.stats
+            assert np.array_equal(rec.result.interval_times, lane.interval_times)
