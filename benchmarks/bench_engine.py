@@ -24,6 +24,14 @@ to end, seed vs current engine:
    promotions). Seed: per-size reference-pool loop. New: one untuned
    experiment executed as a single sweep pass, asserted chunked-loop-free
    via the ``RunSet.chunked_step_count`` provenance counter.
+5. **admission path** — the same churn scenario under the TierBPF-style
+   ``admission`` policy backend (registry-routed, per-candidate admission
+   control layered on the TPP schedule). Seed: per-size reference-pool
+   loop with the same policy. New: one experiment whose spec names the
+   backend by kind only, executed as a single sweep pass — asserted
+   bit-identical, actually rejecting candidates (``pm_admit_fail`` > 0),
+   and chunked-loop-free, so the pluggable backends' sweep path cannot
+   silently regress onto the per-size chunked loop.
 
 Plus single-run engine throughput (intervals/sec) on the application
 trace. Every path is asserted to produce bit-identical outputs (config
@@ -75,6 +83,7 @@ from repro.sim.api import run as run_experiment
 from repro.sim.engine import _simulate as simulate
 from repro.sim.workloads import thrash_trace
 from repro.tiering.page_pool import TieredPagePool
+from repro.tiering.policy import AdmissionTPPPolicy
 from repro.tiering.reference_pool import ReferencePagePool
 
 OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_engine.json"
@@ -280,6 +289,50 @@ def _timed(fn) -> float:
     return time.perf_counter() - t0
 
 
+def _churn_lane(report, name, seed_fn, new_fn, check_pair, repeats,
+                empty_msg):
+    """Shared scaffold of the churn-scenario lanes (thrash, admission).
+
+    Runs both sides once; asserts the sweep never dropped to the chunked
+    loop (``RunSet.chunked_step_count`` provenance) and, via
+    ``check_pair(seed_result, run_record) -> activity`` per (size) pair,
+    that the outputs are bit-identical — raising ``empty_msg`` when the
+    summed activity is zero (a lane that exercised nothing times the
+    wrong thing). Then times interleaved best-of-``repeats`` and reports
+    the three ``engine/{name}_path_*`` rows. Returns ``(seed_s, new_s,
+    speedup, ratio, chunked, activity)`` with ``ratio`` the paired-median
+    gate metric.
+    """
+    seed_runs = seed_fn()
+    new_rs = new_fn()
+    chunked = new_rs.chunked_step_count
+    if chunked:
+        raise AssertionError(
+            f"engine bench: {name} sweep executed the chunked loop "
+            f"{chunked} times"
+        )
+    activity = 0
+    # strict: a planner regression that drops runs must fail the gate,
+    # not shrink its coverage
+    for r_seed, rec in zip(seed_runs, new_rs.runs, strict=True):
+        activity += check_pair(r_seed, rec)
+    if activity == 0:
+        raise AssertionError(empty_msg)
+    seed_ts, new_ts = [], []
+    for _ in range(repeats):
+        seed_ts.append(_timed(seed_fn))
+        new_ts.append(_timed(new_fn))
+    t_seed, t_new = min(seed_ts), min(new_ts)
+    ratio = float(np.median([n / s for s, n in zip(seed_ts, new_ts)]))
+    speedup = t_seed / t_new
+    report(f"engine/{name}_path_seed", t_seed * 1e6, f"{t_seed:.2f}s")
+    report(f"engine/{name}_path_new", t_new * 1e6, f"{t_new:.2f}s")
+    report(
+        f"engine/{name}_path_speedup", speedup * 1e6, f"{speedup:.2f}x"
+    )
+    return t_seed, t_new, speedup, ratio, chunked, activity
+
+
 def run(report, params: BenchParams = FULL) -> dict:
     p = params
     trace = _app_trace(p.app_rss, p.app_intervals)
@@ -403,42 +456,67 @@ def run(report, params: BenchParams = FULL) -> dict:
             )
         )
 
-    thrash_seed_runs = _seed_thrash()
-    thrash_new = _new_thrash()
-    # provenance surfaced by the RunSet: the sweep must never have
-    # dropped to the per-size chunked loop
-    thrash_chunked = thrash_new.chunked_step_count
-    if thrash_chunked:
-        raise AssertionError(
-            f"engine bench: thrash sweep executed the chunked loop "
-            f"{thrash_chunked} times"
-        )
-    thrash_migrations = 0
-    for r_seed, rec in zip(thrash_seed_runs, thrash_new.runs):
+    def _check_thrash(r_seed, rec):
         if r_seed.stats != rec.result.stats or not np.array_equal(
             r_seed.interval_times, rec.result.interval_times
         ):
             raise AssertionError("engine bench: thrash path outputs diverge")
-        thrash_migrations += r_seed.migrations
-    if thrash_migrations == 0:
-        # without churn the scenario is not in the thrash regime at all
-        raise AssertionError("engine bench: thrash scenario did not migrate")
+        return r_seed.migrations
 
-    thrash_seed_ts, thrash_new_ts = [], []
-    for _ in range(p.thrash_repeats):
-        thrash_seed_ts.append(_timed(_seed_thrash))
-        thrash_new_ts.append(_timed(_new_thrash))
-    th_seed, th_new = min(thrash_seed_ts), min(thrash_new_ts)
-    thrash_ratio = float(
-        np.median([n / s for s, n in zip(thrash_seed_ts, thrash_new_ts)])
-    )
-    thrash_speedup = th_seed / th_new
-    report("engine/thrash_path_seed", th_seed * 1e6, f"{th_seed:.2f}s")
-    report("engine/thrash_path_new", th_new * 1e6, f"{th_new:.2f}s")
-    report(
-        "engine/thrash_path_speedup", thrash_speedup * 1e6,
-        f"{thrash_speedup:.2f}x",
-    )
+    th_seed, th_new, thrash_speedup, thrash_ratio, thrash_chunked, \
+        thrash_migrations = _churn_lane(
+            report, "thrash", _seed_thrash, _new_thrash, _check_thrash,
+            p.thrash_repeats,
+            # without churn the scenario is not in the thrash regime at all
+            empty_msg="engine bench: thrash scenario did not migrate",
+        )
+
+    # --- the admission path: the registry-routed TierBPF-style backend on
+    #     the same churn scenario. Seed: per-size reference loop with the
+    #     same policy. New: one sweep pass named by PolicySpec.kind alone —
+    #     bit-identical outputs, really rejecting candidates, and never on
+    #     the chunked loop.
+    def _seed_admission():
+        return [
+            simulate(
+                thrash_tr, fm_frac=float(f),
+                policy=AdmissionTPPPolicy(),
+                pool_factory=ReferencePagePool,
+            )
+            for f in thrash_fracs
+        ]
+
+    def _new_admission():
+        return run_experiment(
+            Experiment(
+                name="bench_admission",
+                scenarios=[Scenario(trace=thrash_tr)],
+                fm_fracs=tuple(float(f) for f in thrash_fracs),
+                policies=[PolicySpec(kind="admission")],
+                collect_configs=True,
+            )
+        )
+
+    def _check_admission(r_seed, rec):
+        if (
+            r_seed.stats != rec.result.stats
+            or not np.array_equal(
+                r_seed.interval_times, rec.result.interval_times
+            )
+            or r_seed.configs != rec.result.configs
+        ):
+            raise AssertionError(
+                "engine bench: admission path outputs diverge"
+            )
+        return int(sum(c.pm_admit_fail for c in rec.result.configs))
+
+    adm_seed, adm_new_t, adm_speedup, adm_ratio, adm_chunked, \
+        adm_rejects = _churn_lane(
+            report, "admission", _seed_admission, _new_admission,
+            _check_admission, p.thrash_repeats,
+            # without rejections the admission stage timed nothing at all
+            empty_msg="engine bench: admission policy rejected no candidates",
+        )
 
     results = {
         "quick": p.quick,
@@ -473,6 +551,12 @@ def run(report, params: BenchParams = FULL) -> dict:
         "thrash_path_new_s": round(th_new, 3),
         "thrash_path_speedup": round(thrash_speedup, 2),
         "thrash_path_ratio": round(thrash_ratio, 4),
+        "admission_rejects": int(adm_rejects),
+        "admission_sweep_chunked_steps": int(adm_chunked),
+        "admission_path_seed_s": round(adm_seed, 3),
+        "admission_path_new_s": round(adm_new_t, 3),
+        "admission_path_speedup": round(adm_speedup, 2),
+        "admission_path_ratio": round(adm_ratio, 4),
     }
     if not p.quick:
         # full runs own the committed baseline; they keep the CI quick
@@ -486,7 +570,7 @@ def run(report, params: BenchParams = FULL) -> dict:
     return results
 
 
-GATED_PATHS = ("bench_db_path", "tuned_path", "thrash_path")
+GATED_PATHS = ("bench_db_path", "tuned_path", "thrash_path", "admission_path")
 
 
 def check_gate(fresh: dict, baseline: dict, margin: float = 1.25) -> list[str]:

@@ -5,13 +5,19 @@ they are cached under ``benchmarks/_cache``. Delete the directory to force
 a rebuild.
 
 **Cache invalidation:** ``benchmarks/_cache`` stores *outputs of the
-simulation engine* (workload traces and micro-benchmark execution times).
-Whenever engine semantics change — the cost model, the page pool's
-allocation/migration behaviour, the policy, or the micro-benchmark
-generator — the cached database silently describes the *old* engine:
-delete ``benchmarks/_cache`` after any such change. (Pure performance
-refactors that the equivalence tests in
-``tests/test_engine_equivalence.py`` pin down do not require it.)
+simulation engine* (workload traces, micro-benchmark execution times, and
+— since the drivers pass ``run(cache_dir=CACHE)`` — whole experiment
+``RunSet`` JSON documents, ``runset_*.json``). Whenever engine semantics
+change — the cost model, the page pool's allocation/migration behaviour,
+a policy backend, or the micro-benchmark generator — the cached artifacts
+silently describe the *old* engine: delete ``benchmarks/_cache`` after
+any such change. (Pure performance refactors that the equivalence tests
+in ``tests/test_engine_equivalence.py`` pin down do not require it.) The
+RunSet cache key is the experiment spec echo + the RunSet schema version,
+so spec edits and schema bumps miss on their own; but spec echoes name
+traces by (name, RSS) and the perf database by record count only, so
+regenerating either under the same identity needs the directory deleted
+too — same rule as the trace/perfdb caches above.
 """
 
 from __future__ import annotations
@@ -34,6 +40,25 @@ CACHE = Path(__file__).parent / "_cache"
 
 # fm sizes the performance database is exercised at (offline sweep)
 DB_FM_FRACS = np.round(np.arange(1.0, 0.199, -0.04), 3)
+
+
+def policy_kinds(tunable: bool = False) -> tuple:
+    """Every registered migrating, sweep-capable backend — the set the
+    figure/table drivers compare — derived from the policy registry so a
+    newly registered backend joins the comparisons without driver edits.
+    ``tunable=True`` further restricts to kinds that accept a Tuna tuner
+    (what the tuner-in-the-loop comparisons must use: a non-tunable kind
+    would fail ``PolicySpec(tuner=...)`` validation). The paper's
+    baseline (tpp) is kept first for stable report ordering.
+    """
+    from repro.tiering.policy import POLICIES
+
+    rest = sorted(
+        k for k, c in POLICIES.items()
+        if c.migrates and c.batchable and (c.tunable or not tunable)
+        and k != "tpp"
+    )
+    return ("tpp", *rest)
 
 
 def get_trace(name: str) -> Trace:

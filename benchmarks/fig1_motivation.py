@@ -12,6 +12,14 @@ pass per scenario and falls back to the per-size engine only for the
 unbatchable first-touch baseline. The thrash rows show the regime where
 migration failures explode — the churn the Tuna model's knee hunts and
 the motivating regime of thrash-responsive managers (Jenga, PAPERS.md).
+
+A second experiment compares the registered migration-policy backends on
+exactly that churn regime — thrash x {tpp, admission, thrash_guard} over
+the knee sizes — reporting how TierBPF-style admission control and the
+Jenga-style thrash guard trade migration traffic (and policy-rejected
+promotions, ``pm_admit_fail``) against realized loss under a management
+system the Tuna model was not fit on. Both experiments memoize their
+RunSets under ``benchmarks/_cache`` via ``run(cache_dir=...)``.
 """
 
 from __future__ import annotations
@@ -21,10 +29,13 @@ import time
 from repro.sim.api import Experiment, PolicySpec, Scenario
 from repro.sim.api import run as run_experiment
 
-from benchmarks.common import get_trace, loss
+from benchmarks.common import CACHE, get_trace, loss, policy_kinds
 
 FM_GRID = (1.0, 0.95, 0.895, 0.8, 0.7, 0.5, 0.266)
 SCENARIOS = ("bfs", "thrash")
+# the policy-backend comparison: churn workload x registered migrating
+# kinds, at the mid-curve and knee sizes
+POLICY_CMP_FRACS = (0.5, 0.266)
 
 
 def run(report) -> None:
@@ -40,7 +51,8 @@ def run(report) -> None:
                 PolicySpec(label="tpp"),
                 PolicySpec(kind="first_touch", label="first_touch"),
             ],
-        )
+        ),
+        cache_dir=CACHE,
     )
     # one experiment produced every row: report each row's amortized
     # share so summing the us column still totals one experiment (same
@@ -94,4 +106,37 @@ def run(report) -> None:
                 f";migr_blowup={blowup:.1f}x"
                 f";direct_demotes@26.6={knee[1].stats['pgdemote_direct']}"
                 f" (churn: the model's knee regime)",
+            )
+
+    # --- policy-backend comparison on the churn regime: how far do the
+    #     admission-controlled / thrash-responsive backends tame the
+    #     migration blowup TPP suffers at the knee?
+    t0 = time.time()
+    kinds = policy_kinds()
+    cmp_rs = run_experiment(
+        Experiment(
+            name="fig1_policy_cmp",
+            scenarios=[Scenario(trace=get_trace("thrash"), name="thrash")],
+            fm_fracs=POLICY_CMP_FRACS,
+            policies=[PolicySpec(kind=k, label=k) for k in kinds],
+            collect_configs=True,
+        ),
+        cache_dir=CACHE,
+    )
+    base = rs.result(scenario="thrash", policy="tpp", fm_frac=1.0)
+    per_row_us = (
+        (time.time() - t0) * 1e6 / (len(kinds) * len(POLICY_CMP_FRACS))
+    )
+    for kind in kinds:
+        for f in POLICY_CMP_FRACS:
+            res = cmp_rs.result(scenario="thrash", policy=kind, fm_frac=f)
+            admit_fail = int(sum(c.pm_admit_fail for c in res.configs))
+            report(
+                f"fig1/policy_{kind}_fm_{int(f*1000)}",
+                per_row_us,
+                f"loss={loss(res.total_time, base.total_time)*100:.2f}%"
+                f";migr={res.migrations}"
+                f";fail={res.stats['pgpromote_fail']}"
+                f";admit_fail={admit_fail}"
+                f";direct={res.stats['pgdemote_direct']}",
             )

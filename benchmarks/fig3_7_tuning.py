@@ -21,7 +21,12 @@ Beyond the paper's table, the adversarial ``thrash`` workload (rotating
 hot set ~2x the fast tier) rides the same experiment shape and reports
 ``target_miss`` — how far the realized loss overshoots τ when churn makes
 the database's even-spread micro-benchmark mispredict (Jenga's motivating
-regime).
+regime). A policy-comparison block then re-runs that churn scenario under
+every registered migrating backend (tpp, admission, thrash_guard) with
+the tuner in the loop — the database was built under TPP, so the per-kind
+``target_miss`` measures how far Tuna's size predictions transfer across
+management systems. Experiments memoize their RunSets under
+``benchmarks/_cache`` via ``run(cache_dir=...)``.
 """
 
 from __future__ import annotations
@@ -33,7 +38,7 @@ import numpy as np
 from repro.sim.api import Experiment, PolicySpec, Scenario, TunerSpec
 from repro.sim.api import run as run_experiment
 
-from benchmarks.common import build_bench_db, get_trace
+from benchmarks.common import CACHE, build_bench_db, get_trace, policy_kinds
 
 TUNE_EVERY = 3  # profiling intervals per tuning step (the paper's 2.5 s)
 
@@ -53,17 +58,20 @@ def tuner_spec(target_loss=TARGET_LOSS, tune_every=TUNE_EVERY) -> TunerSpec:
     )
 
 
-def run_tuned_slices(trace, db, specs, tune_every=TUNE_EVERY):
-    """One experiment: a TPP-only baseline spec plus one TPP+Tuna spec per
-    ``(target_loss, tune_every)`` entry, executed as a single tuned sweep.
-    Returns ``(base, results)`` where ``results[i]`` is the
+def run_tuned_slices(trace, db, specs, tune_every=TUNE_EVERY, kind="tpp"):
+    """One experiment: a baseline spec of policy ``kind`` plus one
+    ``kind``+Tuna spec per ``(target_loss, tune_every)`` entry, executed
+    as a single tuned sweep (any registered tunable kind works — the
+    planner routes it from the registry's capability flags). Returns
+    ``(base, results)`` where ``results[i]`` is the
     :class:`~repro.sim.engine.SimResult` of spec ``i``."""
-    policies = [PolicySpec(label="tpp")]
+    policies = [PolicySpec(kind=kind, label=kind)]
     labels = []
     for i, (target_loss, te) in enumerate(specs):
         label = f"tuna[{i}]"  # explicit: (tau, every) pairs may repeat
         policies.append(
             PolicySpec(
+                kind=kind,
                 label=label,
                 tuner=tuner_spec(
                     target_loss, te if te is not None else tune_every
@@ -73,14 +81,15 @@ def run_tuned_slices(trace, db, specs, tune_every=TUNE_EVERY):
         labels.append(label)
     rs = run_experiment(
         Experiment(
-            name=f"fig3_7[{trace.name}]",
+            name=f"fig3_7[{trace.name}:{kind}]",
             scenarios=[Scenario(trace=trace)],
             fm_fracs=(1.0,),
             policies=policies,
         ),
         db=db,
+        cache_dir=CACHE,
     )
-    base = rs.result(policy="tpp")
+    base = rs.result(policy=kind)
     return base, [rs.result(policy=lb) for lb in labels]
 
 
@@ -91,13 +100,16 @@ def summarize(base, res, trace):
     return saving, max_saving, overall_loss
 
 
-def run_workload(name, db, target_loss=TARGET_LOSS, tune_every=TUNE_EVERY):
+def run_workload(name, db, target_loss=TARGET_LOSS, tune_every=TUNE_EVERY,
+                 kind="tpp"):
     """Baseline + one tuned run of a workload, in a single trace pass.
 
     Returns ``(base, res, saving, max_saving, overall_loss)``.
     """
     tr = get_trace(name)
-    base, (res,) = run_tuned_slices(tr, db, [(target_loss, tune_every)])
+    base, (res,) = run_tuned_slices(
+        tr, db, [(target_loss, tune_every)], kind=kind
+    )
     saving, max_saving, overall_loss = summarize(base, res, tr)
     return base, res, saving, max_saving, overall_loss
 
@@ -120,9 +132,8 @@ def run(report) -> None:
         0.0,
         f"mean_saving={np.mean(savings)*100:.1f}% (paper 8.5%, Pond 5%)",
     )
-    # adversarial churn: the same experiment shape on the rotating hot set
-    # ~2x the fast tier; target_miss > 0 is where Tuna's even-spread
-    # micro-benchmark model mispredicts under churn
+    # adversarial churn: the rotating hot set ~2x the fast tier, from the
+    # paper's full-size start (the tpp row, Tuna's own configuration)...
     t0 = time.time()
     _, res, saving, max_saving, overall_loss = run_workload("thrash", db)
     report(
@@ -132,3 +143,48 @@ def run(report) -> None:
         f";target_miss={(overall_loss - TARGET_LOSS)*100:+.2f}pp"
         f";migr={res.migrations} (churn regime: model misprediction probe)",
     )
+    # ...and the cross-backend probe: the tuner dropped INTO the knee
+    # (fm_frac 0.5 start, where fig1's policy comparison shows the
+    # backends diverge) under every registered migrating kind. The
+    # database was built under TPP, so each kind's target_miss measures
+    # how far Tuna's size predictions transfer to an admission-controlled
+    # / thrash-responsive management system; migr shows how much churn
+    # the backend itself removed while the tuner climbs back out.
+    t0 = time.time()
+    tr = get_trace("thrash")
+    kinds = policy_kinds(tunable=True)
+    policies = []
+    for kind in kinds:
+        policies.append(
+            PolicySpec(kind=kind, label=f"{kind}_full", fm_frac=1.0)
+        )
+        policies.append(
+            PolicySpec(
+                kind=kind, label=f"{kind}_tuna", fm_frac=0.5,
+                tuner=tuner_spec(),
+            )
+        )
+    rs = run_experiment(
+        Experiment(
+            name="fig3_7_policy_cmp[thrash]",
+            scenarios=[Scenario(trace=tr)],
+            fm_fracs=(1.0,),
+            policies=policies,
+        ),
+        db=db,
+        cache_dir=CACHE,
+    )
+    per_row_us = (time.time() - t0) * 1e6 / len(kinds)
+    for kind in kinds:
+        base = rs.result(policy=f"{kind}_full")
+        res = rs.result(policy=f"{kind}_tuna")
+        saving, max_saving, overall_loss = summarize(base, res, tr)
+        report(
+            f"fig3_7/thrash_knee_{kind}",
+            per_row_us,
+            f"avg_saving={saving*100:.1f}%"
+            f";overall_loss={overall_loss*100:.2f}%"
+            f";target_miss={(overall_loss - TARGET_LOSS)*100:+.2f}pp"
+            f";migr={res.migrations}"
+            " (knee start: cross-backend model-transfer probe)",
+        )

@@ -7,15 +7,12 @@ import time
 
 
 def run(report) -> None:
-    import numpy as np
-
     t0 = time.time()
     try:
         from repro.kernels import ops as kops
     except Exception as e:
         report("kernels/__skip__", 0.0, f"kernels not built yet: {e!r}")
         return
-    import jax.numpy as jnp
 
     for name, fn in kops.BENCH_CASES.items():
         t0 = time.time()

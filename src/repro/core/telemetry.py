@@ -57,6 +57,9 @@ class ConfigVector:
     intensity: float = 1.0
     warm_pages: float = 0.0  # fast-tier pages seen below hot_thr
     warm_touches: float = 0.0  # their total sampled touches
+    # promotion candidates the policy itself declined (admission control /
+    # thrash-guard suppression) — carried as an extra, not an index dim
+    pm_admit_fail: float = 0.0
 
     def as_array(self) -> np.ndarray:
         # index dims only (intensity is metadata)
@@ -107,6 +110,7 @@ class IntervalProfiler:
         self._cachelines = 0
         self._warm_pages = 0
         self._warm_touches = 0
+        self._pm_admit_fail = 0
 
     def record_accesses(self, pacc_f: int, pacc_s: int, ops: float,
                         cachelines: int | None = None,
@@ -124,6 +128,7 @@ class IntervalProfiler:
     def record_policy(self, outcome: PolicyOutcome) -> None:
         self._pm_de += outcome.pm_de
         self._pm_pr += outcome.pm_pr
+        self._pm_admit_fail += outcome.pm_admit_fail
 
     @property
     def ai(self) -> float:
@@ -143,6 +148,7 @@ class IntervalProfiler:
             intensity=max(1.0, self._cachelines / max(self._accesses, 1)),
             warm_pages=float(self._warm_pages),
             warm_touches=float(self._warm_touches),
+            pm_admit_fail=float(self._pm_admit_fail),
         )
         self.reset()
         return cv

@@ -11,30 +11,40 @@ that pipeline as **data**:
   ``pool_factory``). A scenario can instead carry a custom ``runner``
   callable, which is how non-simulator engines (e.g. the tiered-KV serving
   benchmark) plug into the same experiment shape.
-* :class:`PolicySpec` — how to manage pages: TPP or first-touch parameters
-  plus an optional :class:`TunerSpec`. Tuners are *constructed inside the
-  run* from their spec (never passed pre-bound), so experiments stay
-  serializable and scenario fan-out across processes works.
+* :class:`PolicySpec` — how to manage pages: a ``kind`` resolved through
+  the :data:`repro.tiering.policy.POLICIES` registry (built-ins:
+  ``tpp``, ``admission``, ``thrash_guard``, ``first_touch``; third-party
+  backends join via :func:`repro.tiering.policy.register_policy` and need
+  zero edits here), a ``params`` dict passed verbatim to the policy
+  constructor and echoed losslessly through ``RunSet`` JSON, plus an
+  optional :class:`TunerSpec` (allowed iff the registered class is
+  ``tunable``). Tuners are *constructed inside the run* from their spec
+  (never passed pre-bound), so experiments stay serializable and scenario
+  fan-out across processes works.
 * :class:`Experiment` — scenarios x fm-size vector x policy variants.
 * :func:`run` — executes an experiment and returns a :class:`RunSet`.
 
 The planner inside :func:`run` picks the execution backend per scenario
-automatically:
+from the registered policy class's capability flags — there is no
+policy-kind string matching anywhere in the planner:
 
-========================  ====================================================
-spec shape                backend
-========================  ====================================================
-untuned TPP size vector   one batched :func:`repro.sim.sweep._sweep_fm_fracs`
-                          pass (``backend="sweep"``)
-any tuner in the loop     one :func:`repro.sim.sweep._sweep_tuned` pass where
-                          untuned TPP specs ride along as plain slices
-                          (``backend="tuned_sweep"``)
-unbatchable spec          per-size :func:`repro.sim.engine._simulate` — a
-                          custom ``pool_factory`` (e.g. the frozen
-                          ``ReferencePagePool`` golden model) or a non-TPP
-                          policy (``backend="simulate"``)
-``Scenario.runner`` set   the scenario's own callable (``backend="custom"``)
-========================  ====================================================
+==========================  ==================================================
+spec shape                  backend
+==========================  ==================================================
+untuned batchable vector    one batched :func:`repro.sim.sweep.
+                            _sweep_fm_fracs` pass per spec, sweeping its
+                            whole size vector (``backend="sweep"``)
+any tuner in the loop       one :func:`repro.sim.sweep._sweep_tuned` pass
+                            per (kind, hot_thr, params) group — the
+                            group's untuned specs ride along as plain
+                            slices (``backend="tuned_sweep"``)
+unbatchable spec            per-size :func:`repro.sim.engine._simulate` — a
+                            custom ``pool_factory`` (e.g. the frozen
+                            ``ReferencePagePool`` golden model) or a policy
+                            whose class has ``batchable=False`` (e.g.
+                            first-touch) (``backend="simulate"``)
+``Scenario.runner`` set     the scenario's own callable (``backend="custom"``)
+==========================  ==================================================
 
 Scenarios fan out across processes with ``concurrent.futures``
 (``parallelism=None`` keeps the database-build heuristic: serial below 12
@@ -46,10 +56,14 @@ times, config vectors, tuner decision lists, watermark event logs.
 
 RunSet JSON schema (``RunSet.to_json`` / ``RunSet.from_json``)
 --------------------------------------------------------------
-Lossless (floats round-trip via ``repr``), versioned by ``schema``::
+Lossless (floats round-trip via ``repr``), versioned by ``schema``.
+Current version ``tuna-runset-v2``: additive over v1 — policy entries
+gained the ``params`` echo (and config vectors the ``pm_admit_fail``
+extra); :meth:`RunSet.from_json` still loads v1 documents (missing keys
+take their defaults)::
 
     {
-      "schema": "tuna-runset-v1",
+      "schema": "tuna-runset-v2",
       "name": str,                     # experiment name
       "spec": {                        # provenance: the experiment echo
         "name": str,
@@ -60,6 +74,7 @@ Lossless (floats round-trip via ``repr``), versioned by ``schema``::
                        "pool_factory", "fast_only_at_full",
                        "runner", "params"}, ...],
         "policies":  [{"label", "kind", "hot_thr", "fm_frac",
+                       "params": {policy-constructor kwargs},
                        "tuner": {TunerSpec fields} | null}, ...],
         "db_records": int | null       # size of the PerfDB used
       },
@@ -87,16 +102,38 @@ Lossless (floats round-trip via ``repr``), versioned by ``schema``::
 policy order, then size order. ``chunked_step_count`` counts only the sweep
 backends — the per-size ``simulate`` fallback may legitimately execute the
 chunked loop; the sweeps must not, and the engine benchmark asserts it.
+The count is aggregated from the *per-policy-instance* counters
+(:attr:`repro.tiering.policy.MigrationPolicy.chunked_steps`) of the
+instances this run constructed, so concurrent ``run()`` calls and fan-out
+workers can never cross-pollute each other's provenance.
+
+Result caching
+--------------
+``run(experiment, ..., cache_dir=...)`` memoizes the whole RunSet as its
+JSON document under ``cache_dir`` (opt-in; the benchmark drivers pass
+``benchmarks/_cache``). The key is a stable hash of the experiment spec
+echo plus the RunSet schema version, so any spec change — or a schema
+bump — misses cleanly. Spec echoes identify traces by name/RSS (factory
+callables by qualified name, plus bound arguments for
+``functools.partial`` factories) and the database by record count only:
+regenerating a workload or rebuilding the database under the same
+identity requires deleting the cache directory, exactly like the
+existing trace/perfdb caches (see ``benchmarks/common.py``).
 """
 
 from __future__ import annotations
 
 import concurrent.futures as cf
 import functools
+import hashlib
+import inspect
 import json
 import multiprocessing as mp
 import os
+import re
+import uuid
 from dataclasses import asdict, dataclass, field
+from pathlib import Path
 from typing import Callable, Sequence
 
 import numpy as np
@@ -108,11 +145,12 @@ from repro.core.watermark import WatermarkController, WatermarkEvent
 from repro.sim.costmodel import HardwareProfile, IntervalCosts, OPTANE_LIKE
 from repro.sim.engine import SimResult, _simulate
 from repro.sim.sweep import TunedSlice, _sweep_fm_fracs, _sweep_tuned
-from repro.tiering import policy as policy_mod
 from repro.tiering.page_pool import TieredPagePool
-from repro.tiering.policy import FirstTouchPolicy, TPPPolicy
+from repro.tiering.policy import register_policy, resolve_policy
 
-RUNSET_SCHEMA = "tuna-runset-v1"
+RUNSET_SCHEMA = "tuna-runset-v2"
+# older schema versions from_json still understands (additive evolution)
+RUNSET_SCHEMA_COMPAT = ("tuna-runset-v1", RUNSET_SCHEMA)
 
 __all__ = [
     "Experiment",
@@ -179,11 +217,18 @@ class TunerSpec:
 class PolicySpec:
     """One page-management variant of an experiment.
 
-    ``kind`` is ``"tpp"`` (promotion/watermark-reclaim, the paper's
-    management system) or ``"first_touch"`` (no migration, the Fig. 1
-    baseline). ``tuner`` puts a Tuna tuner in the loop (TPP only).
-    ``fm_frac`` overrides the experiment's size vector for this spec —
-    tuned specs usually start at 1.0 while untuned curves sweep the vector.
+    ``kind`` names a class registered in
+    :data:`repro.tiering.policy.POLICIES` — built-ins: ``"tpp"``
+    (promotion/watermark-reclaim, the paper's management system),
+    ``"admission"`` (TierBPF-style migration admission control),
+    ``"thrash_guard"`` (Jenga-style ping-pong backoff), ``"first_touch"``
+    (no migration, the Fig. 1 baseline); anything a third party registered
+    works identically. ``params`` is passed verbatim to the policy
+    constructor (it must be JSON-serializable — it is echoed losslessly in
+    the ``RunSet`` provenance). ``tuner`` puts a Tuna tuner in the loop,
+    allowed iff the registered class is ``tunable``. ``fm_frac`` overrides
+    the experiment's size vector for this spec — tuned specs usually start
+    at 1.0 while untuned curves sweep the vector.
     """
 
     kind: str = "tpp"
@@ -191,28 +236,65 @@ class PolicySpec:
     tuner: TunerSpec | None = None
     fm_frac: float | None = None
     label: str | None = None
+    params: dict = field(default_factory=dict)
 
     def __post_init__(self) -> None:
-        if self.kind not in ("tpp", "first_touch"):
-            raise ValueError(f"unknown policy kind: {self.kind!r}")
-        if self.tuner is not None and self.kind != "tpp":
-            raise ValueError("tuners require kind='tpp'")
+        cls = resolve_policy(self.kind)  # raises listing registered kinds
+        if self.tuner is not None and not cls.tunable:
+            raise ValueError(
+                f"policy kind {self.kind!r} ({cls.__qualname__}) is not "
+                "tunable (registry tunable=False); tuners require a kind "
+                "whose registered class sets tunable=True"
+            )
+        if "hot_thr" in self.params:
+            # the dedicated field both feeds the constructor and keys the
+            # planner's sweep grouping; a params duplicate would bypass
+            # the grouping and then TypeError inside a fan-out worker
+            raise ValueError(
+                "pass hot_thr via the PolicySpec.hot_thr field, not params"
+            )
+        sig = inspect.signature(cls.__init__)
+        accepts_any = any(
+            p.kind is p.VAR_KEYWORD for p in sig.parameters.values()
+        )
+        if not accepts_any:
+            unknown = sorted(set(self.params) - set(sig.parameters))
+            if unknown:
+                accepted = sorted(
+                    k for k in sig.parameters if k not in ("self", "hot_thr")
+                )
+                raise ValueError(
+                    f"policy kind {self.kind!r} does not accept params "
+                    f"{unknown}; {cls.__qualname__} accepts {accepted}"
+                )
 
     @property
     def name(self) -> str:
         if self.label is not None:
             return self.label
+        base = self.kind
+        if self.params:
+            # distinct params must yield distinct default labels, or a
+            # params sweep trips run()'s duplicate-label validation
+            kv = ",".join(
+                f"{k}={v!r}" for k, v in sorted(self.params.items())
+            )
+            base = f"{self.kind}({kv})"
         if self.tuner is not None:
             return (
-                f"tpp+tuna(tau={self.tuner.target_loss:g},"
+                f"{base}+tuna(tau={self.tuner.target_loss:g},"
                 f"every={self.tuner.tune_every})"
             )
-        return self.kind
+        return base
+
+    @property
+    def policy_cls(self):
+        """The registered :class:`~repro.tiering.policy.MigrationPolicy`
+        subclass this spec resolves to (capability flags live here)."""
+        return resolve_policy(self.kind)
 
     def build_policy(self):
-        if self.kind == "first_touch":
-            return FirstTouchPolicy(hot_thr=self.hot_thr)
-        return TPPPolicy(hot_thr=self.hot_thr)
+        return self.policy_cls(hot_thr=self.hot_thr, **self.params)
 
 
 @dataclass
@@ -388,7 +470,7 @@ class RunSet:
     @classmethod
     def from_json(cls, text: str) -> "RunSet":
         d = json.loads(text)
-        if d.get("schema") != RUNSET_SCHEMA:
+        if d.get("schema") not in RUNSET_SCHEMA_COMPAT:
             raise ValueError(f"unknown RunSet schema: {d.get('schema')!r}")
         runs = [
             RunRecord(
@@ -514,14 +596,21 @@ def _run_scenario(
     policies: tuple,
     db,
     collect_configs: bool,
+    policy_classes: tuple = (),
 ):
     """Execute every (policy, size) cell of one scenario.
 
     Returns ``(records, chunked)`` where ``records`` is in (policy-major,
     size) order and ``chunked`` counts chunked-loop executions inside the
     *sweep* backends only. Module-level so the process fan-out can pickle
-    it.
+    it. ``policy_classes`` carries the specs' resolved policy classes:
+    spawn-start fan-out workers re-import :mod:`repro` but not the user
+    module that registered a third-party kind, so the classes ride the
+    job payload (pickled by reference, which imports their defining
+    module) and are re-registered here before any spec resolves.
     """
+    for cls in policy_classes:
+        register_policy(cls)
     sname = scenario.resolved_name
     cells: dict = {}
     chunked = 0
@@ -545,22 +634,34 @@ def _run_scenario(
             return trace.fast_only()
         return trace
 
-    # --- partition specs: batchable TPP vs per-size engine fallback
+    # --- partition specs: batchable (registry capability flag) vs the
+    #     per-size engine fallback; batchable specs group per constructed
+    #     policy identity (kind, hot_thr, params) — a group with a tuner
+    #     shares ONE tuned sweep pass, untuned specs sweep their own size
+    #     vector (one pass per spec; sizes, not specs, are what batch)
     sim_cells: list = []
-    tpp_groups: dict = {}  # hot_thr -> [(pi, spec)]
+    groups: dict = {}  # (kind, hot_thr, params-json) -> [(pi, spec)]
     for pi, spec in enumerate(policies):
-        if scenario.pool_factory is not None or spec.kind != "tpp":
+        if scenario.pool_factory is not None or not spec.policy_cls.batchable:
             for fi, f in enumerate(_spec_fracs(spec, fm_fracs)):
                 sim_cells.append((pi, fi, float(f), spec))
         else:
-            tpp_groups.setdefault(spec.hot_thr, []).append((pi, spec))
+            key = (
+                spec.kind,
+                spec.hot_thr,
+                json.dumps(spec.params, sort_keys=True),
+            )
+            groups.setdefault(key, []).append((pi, spec))
 
-    for hot_thr, group in tpp_groups.items():
+    for group in groups.values():
         if any(spec.tuner is not None for _, spec in group):
             # one tuned sweep carries the whole group; untuned specs ride
             # along as plain (tuner-free) slices. fast_only_at_full splits
             # the group by trace variant (full-size slices run the
-            # NP_slow = 0 variant), at most two passes.
+            # NP_slow = 0 variant), at most two passes. One policy
+            # instance serves every pass (stateful policies scope their
+            # state per slice pool).
+            group_policy = group[0][1].build_policy()
             by_variant: dict = {}
             for pi, spec in group:
                 for fi, f in enumerate(_spec_fracs(spec, fm_fracs)):
@@ -584,20 +685,19 @@ def _run_scenario(
                     keys.append((pi, fi, float(f), spec, tuner))
             results, keys = [], []
             for use_fast_only, (slices, vkeys) in by_variant.items():
-                before = policy_mod.chunked_step_count()
                 results.extend(
                     _sweep_tuned(
                         trace.fast_only() if use_fast_only else trace,
                         slices,
-                        hot_thr=hot_thr,
                         hw=scenario.hw,
                         hw_capacity_pages=scenario.hw_capacity_pages,
                         seed=scenario.seed,
                         kswapd_batch=scenario.kswapd_batch,
+                        policy=group_policy,
                     )
                 )
-                chunked += policy_mod.chunked_step_count() - before
                 keys.extend(vkeys)
+            chunked += group_policy.chunked_steps
             for (pi, fi, f, spec, tuner), res in zip(keys, results):
                 cells[(pi, fi)] = RunRecord(
                     sname,
@@ -616,6 +716,9 @@ def _run_scenario(
                 )
         else:
             for pi, spec in group:
+                # one policy instance per spec, shared across its trace
+                # variants (state is per pool, so variants stay isolated)
+                spec_policy = spec.build_policy()
                 fracs = _spec_fracs(spec, fm_fracs)
                 farr = np.asarray(fracs, dtype=np.float64)
                 full = (
@@ -629,18 +732,16 @@ def _run_scenario(
                 if bool((~full).any()):
                     parts.append((np.flatnonzero(~full), trace))
                 for idxs, tr in parts:
-                    before = policy_mod.chunked_step_count()
                     res = _sweep_fm_fracs(
                         tr,
                         farr[idxs],
-                        hot_thr=hot_thr,
                         hw=scenario.hw,
                         hw_capacity_pages=scenario.hw_capacity_pages,
                         seed=scenario.seed,
                         collect_configs=collect_configs,
                         kswapd_batch=scenario.kswapd_batch,
+                        policy=spec_policy,
                     )
-                    chunked += policy_mod.chunked_step_count() - before
                     for j, fi in enumerate(idxs):
                         f = float(farr[fi])
                         cells[(pi, int(fi))] = RunRecord(
@@ -652,8 +753,9 @@ def _run_scenario(
                                 res, j, _effective_fm(cap, f)
                             ),
                         )
+                chunked += spec_policy.chunked_steps
 
-    # --- per-size engine fallback (custom pool / non-TPP policies)
+    # --- per-size engine fallback (custom pool / unbatchable policies)
     for pi, fi, f, spec in sim_cells:
         pool_factory = scenario.pool_factory or TieredPagePool
         if scenario.kswapd_batch is not None:
@@ -723,12 +825,59 @@ def _qualname(obj) -> str | None:
     return f"{getattr(f, '__module__', '')}.{f.__qualname__}"
 
 
+def _arg_ref(v):
+    """Deterministic, JSON-serializable identity for a factory-bound
+    argument. ``repr`` alone is not enough: numpy reprs truncate interior
+    elements (silent cache collisions) and default object reprs embed
+    memory addresses (provenance noise + a key that never matches)."""
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    if isinstance(v, np.ndarray):
+        return {
+            "ndarray": hashlib.sha256(
+                np.ascontiguousarray(v).tobytes()
+            ).hexdigest()[:16],
+            "dtype": str(v.dtype),
+            "shape": list(v.shape),
+        }
+    if isinstance(v, (list, tuple)):
+        return [_arg_ref(x) for x in v]
+    if isinstance(v, dict):
+        return {str(k): _arg_ref(x) for k, x in sorted(v.items())}
+    r = repr(v)
+    if " at 0x" in r:
+        # default object repr: the address is nondeterministic, so the
+        # value cannot be identified across processes. The marker keeps
+        # provenance address-free, and run() refuses to *cache* a spec
+        # containing one — a silent wrong-entry hit would be far worse.
+        return f"<unidentified:{type(v).__module__}.{type(v).__qualname__}>"
+    return r
+
+
+def _callable_ref(obj) -> dict | str | None:
+    """Spec-echo identity for a factory/runner callable. Bound arguments
+    of ``functools.partial`` are identity: two partials over the same
+    function with different bound configs are different experiments (and
+    must not share a cache entry)."""
+    if obj is None:
+        return None
+    if isinstance(obj, functools.partial):
+        return {
+            "factory": _qualname(obj),
+            "args": [_arg_ref(a) for a in obj.args],
+            "keywords": {
+                k: _arg_ref(v) for k, v in sorted(obj.keywords.items())
+            },
+        }
+    return _qualname(obj)
+
+
 def _trace_ref(trace) -> dict | str | None:
     if isinstance(trace, Trace):
         return {"name": trace.name, "rss_pages": int(trace.rss_pages)}
     if isinstance(trace, str):
         return trace
-    return _qualname(trace)
+    return _callable_ref(trace)
 
 
 def _experiment_spec(
@@ -746,9 +895,9 @@ def _experiment_spec(
                 "hw": asdict(sc.hw),
                 "hw_capacity_pages": sc.hw_capacity_pages,
                 "kswapd_batch": sc.kswapd_batch,
-                "pool_factory": _qualname(sc.pool_factory),
+                "pool_factory": _callable_ref(sc.pool_factory),
                 "fast_only_at_full": bool(sc.fast_only_at_full),
-                "runner": _qualname(sc.runner),
+                "runner": _callable_ref(sc.runner),
                 "params": sc.params,
             }
             for sc in experiment.scenarios
@@ -759,6 +908,7 @@ def _experiment_spec(
                 "kind": p.kind,
                 "hot_thr": int(p.hot_thr),
                 "fm_frac": p.fm_frac,
+                "params": dict(p.params),
                 "tuner": asdict(p.tuner) if p.tuner is not None else None,
             }
             for p in policies
@@ -769,10 +919,21 @@ def _experiment_spec(
     }
 
 
+def _cache_path(cache_dir, name: str, spec: dict) -> Path:
+    """Cache key: stable hash of the experiment spec echo + the RunSet
+    schema version, so spec changes and schema bumps miss cleanly."""
+    digest = hashlib.sha256(
+        (RUNSET_SCHEMA + "\n" + json.dumps(spec, sort_keys=True)).encode()
+    ).hexdigest()[:16]
+    safe = re.sub(r"[^A-Za-z0-9._\[\]-]", "_", name)[:60]
+    return Path(cache_dir) / f"runset_{safe}_{digest}.json"
+
+
 def run(
     experiment: Experiment,
     db=None,
     parallelism: int | None = None,
+    cache_dir=None,
 ) -> RunSet:
     """Execute ``experiment`` and return a :class:`RunSet`.
 
@@ -781,7 +942,10 @@ def run(
     custom runners receive it verbatim). ``parallelism`` fans scenarios out
     across processes — ``None`` keeps the database-build heuristic (serial
     below 12 scenarios, else one worker per core); sandboxed environments
-    fall back to serial execution automatically.
+    fall back to serial execution automatically. ``cache_dir`` opts into
+    the RunSet result cache (see the module docstring's *Result caching*
+    section): a directory under which the whole RunSet is memoized as its
+    JSON document, keyed on the experiment spec echo + schema version.
     """
     scenarios = list(experiment.scenarios)
     if not scenarios:
@@ -803,14 +967,56 @@ def run(
     pnames = [p.name for p in policies]
     if len(set(pnames)) != len(pnames):
         raise ValueError(f"duplicate policy labels: {pnames}")
+    for p in policies:
+        try:
+            json.dumps(p.params, sort_keys=True)
+        except TypeError as e:
+            raise ValueError(
+                f"policy spec {p.name!r} has non-JSON-serializable params "
+                f"(they are echoed in the RunSet provenance): {e}"
+            ) from None
+    for sc in scenarios:
+        try:
+            json.dumps(sc.params, sort_keys=True)
+        except TypeError as e:
+            raise ValueError(
+                f"scenario {sc.resolved_name!r} has non-JSON-serializable "
+                f"params (they are echoed in the RunSet provenance): {e}"
+            ) from None
     if db is None and any(p.tuner is not None for p in policies):
         raise ValueError(
             "experiment has tuned policy specs but no performance database "
             "was passed to run(db=...)"
         )
 
+    spec = _experiment_spec(experiment, fm_fracs, policies, db)
+    cache_file = None
+    if cache_dir is not None:
+        if '"<unidentified:' in json.dumps(spec, sort_keys=True):
+            # a factory argument with a default (address-bearing) repr has
+            # no stable identity: caching would let two different
+            # experiments silently share an entry
+            raise ValueError(
+                "cache_dir requires every factory-bound argument to have "
+                "a stable identity; a bound object with a default repr "
+                "cannot be keyed (give it a __repr__, or drop cache_dir): "
+                + json.dumps(spec["scenarios"])
+            )
+        cache_file = _cache_path(cache_dir, experiment.name, spec)
+        if cache_file.exists():
+            try:
+                return RunSet.from_json(cache_file.read_text())
+            except (ValueError, KeyError, TypeError):
+                # truncated/corrupted entry (e.g. an interrupted writer
+                # before the atomic-replace era): recompute and overwrite
+                pass
+
+    policy_classes = tuple(
+        {p.kind: p.policy_cls for p in policies}.values()
+    )
     jobs = [
-        (sc, fm_fracs, policies, db, experiment.collect_configs)
+        (sc, fm_fracs, policies, db, experiment.collect_configs,
+         policy_classes)
         for sc in scenarios
     ]
     if parallelism is None:
@@ -853,10 +1059,21 @@ def run(
     for records, c in outs:
         runs.extend(records)
         chunked += c
-    return RunSet(
+    rs = RunSet(
         name=experiment.name,
-        spec=_experiment_spec(experiment, fm_fracs, policies, db),
+        spec=spec,
         runs=runs,
         chunked_step_count=chunked,
         backends=tuple(sorted({r.backend for r in runs})),
     )
+    if cache_file is not None:
+        cache_file.parent.mkdir(parents=True, exist_ok=True)
+        # atomic publish under a per-writer unique temp name: an
+        # interrupted run must not leave a truncated document under the
+        # final name, and concurrent writers (threads share a pid) must
+        # not interleave into each other's temp file — last replace wins,
+        # both documents being identical by construction
+        tmp = cache_file.with_suffix(f".tmp{uuid.uuid4().hex}")
+        tmp.write_text(rs.to_json())
+        os.replace(tmp, cache_file)
+    return rs

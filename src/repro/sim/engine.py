@@ -36,7 +36,7 @@ from repro.sim.costmodel import (
     interval_time,
 )
 from repro.tiering.page_pool import Tier, TieredPagePool
-from repro.tiering.policy import FirstTouchPolicy, TPPPolicy
+from repro.tiering.policy import MigrationPolicy, TPPPolicy
 
 
 @dataclass
@@ -59,7 +59,7 @@ class SimResult:
 def _simulate(
     trace: Trace,
     fm_frac: float = 1.0,
-    policy: TPPPolicy | FirstTouchPolicy | None = None,
+    policy: MigrationPolicy | None = None,
     hw: HardwareProfile = OPTANE_LIKE,
     hw_capacity_pages: int | None = None,
     tuner: TunaTuner | None = None,
@@ -160,7 +160,7 @@ def _simulate(
 def simulate(
     trace: Trace,
     fm_frac: float = 1.0,
-    policy: TPPPolicy | FirstTouchPolicy | None = None,
+    policy: MigrationPolicy | None = None,
     hw: HardwareProfile = OPTANE_LIKE,
     hw_capacity_pages: int | None = None,
     tuner: TunaTuner | None = None,

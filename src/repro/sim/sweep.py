@@ -43,8 +43,17 @@ in a single pass**:
   against the schedule's availability horizons in one merge per slice
   (:func:`repro.tiering.page_pool._resolve_step_victims`) instead of
   dropping to the per-size chunked loop. Sweeps are chunked-loop-free end
-  to end; :func:`repro.tiering.policy.chunked_step_count` counts any
-  fallback executions and the engine benchmark asserts it stays zero.
+  to end; the policy instance's per-instance ``chunked_steps`` counter
+  records any fallback executions (surfaced by the unified API as
+  ``RunSet.chunked_step_count``) and the engine benchmark asserts it
+  stays zero.
+
+Policies are pluggable: :func:`_sweep_fm_fracs` / :func:`_sweep_tuned`
+accept any *batchable* :class:`~repro.tiering.policy.MigrationPolicy`
+instance via ``policy=`` (default: :class:`~repro.tiering.policy.
+TPPPolicy`); the :mod:`repro.sim.api` planner constructs it from the
+``POLICIES`` registry, so admission-controlled and thrash-responsive
+backends ride the exact same vectorized decision batch.
 
 Tuned-sweep mode (:func:`sweep_tuned`)
 --------------------------------------
@@ -90,14 +99,18 @@ tier, rotating): a fixed-size sweep deep in the migration-failure regime,
 seed per-size reference loop vs one sweep pass, with
 ``thrash_sweep_chunked_steps`` asserting the sweep never executed the
 chunked loop (surfaced by ``RunSet.chunked_step_count`` since the bench
-moved onto the unified API).
+moved onto the unified API). ``admission_path_{seed_s,new_s,speedup,
+ratio}`` runs the same churn scenario under the registry-routed
+``admission`` policy backend (plus ``admission_rejects`` /
+``admission_sweep_chunked_steps``), so the pluggable backends' sweep path
+is benchmark-gated exactly like TPP's.
 
 Alongside this BENCH schema, experiment results themselves have a
 serialized form: the versioned **RunSet JSON schema**
-(``tuna-runset-v1`` — spec echo, per-run results, tuner decisions,
-watermark logs, ``chunked_step_count`` provenance), documented in full in
-the :mod:`repro.sim.api` module docstring and round-trip-tested by
-``tests/test_api.py``.
+(``tuna-runset-v2`` — spec echo incl. policy ``params``, per-run results,
+tuner decisions, watermark logs, ``chunked_step_count`` provenance),
+documented in full in the :mod:`repro.sim.api` module docstring and
+round-trip-tested by ``tests/test_api.py``.
 """
 
 from __future__ import annotations
@@ -121,7 +134,7 @@ from repro.tiering.page_pool import (
     Tier,
     TieredPagePool,
 )
-from repro.tiering.policy import TPPPolicy
+from repro.tiering.policy import MigrationPolicy, TPPPolicy
 
 
 @dataclass
@@ -161,7 +174,7 @@ class TunedSlice:
 def _sweep_run(
     trace: Trace,
     fm_fracs: np.ndarray,
-    hot_thr: int,
+    policy: MigrationPolicy,
     hw: HardwareProfile,
     hw_capacity_pages: int | None,
     seed: int,
@@ -172,13 +185,18 @@ def _sweep_run(
 ):
     """Shared sweep driver: one trace pass across the whole size vector.
 
-    Returns ``(times, pools, configs_out, fm_sizes, costs)`` where the
-    last two are ``None`` unless ``tuners`` is given (tuned mode).
+    ``policy`` is any *batchable* :class:`~repro.tiering.policy.
+    MigrationPolicy` instance (it must follow the TPP candidate contract:
+    per-interval hot-threshold promotion candidates fed to
+    ``step_batch``); the registry-driven planner in :mod:`repro.sim.api`
+    constructs it from the spec. Returns ``(times, pools, configs_out,
+    fm_sizes, costs)`` where the last two are ``None`` unless ``tuners``
+    is given (tuned mode).
     """
     n_sizes = fm_fracs.size
     num_pages = int(trace.rss_pages)
     cap = int(hw_capacity_pages or trace.rss_pages)
-    policy = TPPPolicy(hot_thr=hot_thr)
+    hot_thr = policy.hot_thr
 
     # stacked per-size tier state + state shared across sizes
     tier_b = np.full((n_sizes, num_pages), int(Tier.UNALLOCATED), dtype=np.int8)
@@ -390,6 +408,7 @@ def _sweep_fm_fracs(
     seed: int = 0,
     collect_configs: bool = False,
     kswapd_batch: int | None = None,
+    policy: MigrationPolicy | None = None,
 ) -> SweepResult:
     """Run ``trace`` once, concurrently at every fraction in ``fm_fracs``.
 
@@ -399,12 +418,17 @@ def _sweep_fm_fracs(
     vectorized policy step per interval. ``kswapd_batch`` overrides every
     slice pool's background-reclaim budget (the equivalence tests starve
     it to force the thrash regime); ``None`` keeps the pool default.
+    ``policy`` swaps in any batchable policy instance (its ``hot_thr``
+    wins over the ``hot_thr`` argument); its per-instance
+    ``chunked_steps`` counter records any fallback executions of the run.
     """
     fm_fracs = np.asarray(fm_fracs, dtype=np.float64)
     if fm_fracs.size == 0:
         raise ValueError("sweep_fm_fracs needs at least one fm fraction")
+    if policy is None:
+        policy = TPPPolicy(hot_thr=hot_thr)
     times, pools, configs_out, _, costs = _sweep_run(
-        trace, fm_fracs, hot_thr, hw, hw_capacity_pages, seed,
+        trace, fm_fracs, policy, hw, hw_capacity_pages, seed,
         collect_configs, kswapd_batch=kswapd_batch,
     )
     return SweepResult(
@@ -425,6 +449,7 @@ def _sweep_tuned(
     hw_capacity_pages: int | None = None,
     seed: int = 0,
     kswapd_batch: int | None = None,
+    policy: MigrationPolicy | None = None,
 ) -> list:
     """Run ``trace`` once across a vector of :class:`TunedSlice` settings.
 
@@ -435,6 +460,9 @@ def _sweep_tuned(
     tuner=sl.tuner, tune_every=sl.tune_every)`` per slice (counters,
     interval times, config vectors, fm sizes; the tuner's decision list
     and its controller's watermark event log accumulate identically).
+    ``policy`` swaps in any batchable policy instance (stateful policies
+    keep fully independent per-slice trajectories: their state is scoped
+    per pool); its ``hot_thr`` wins over the ``hot_thr`` argument.
     """
     from repro.sim.engine import SimResult
 
@@ -443,11 +471,13 @@ def _sweep_tuned(
     ]
     if not slices:
         raise ValueError("sweep_tuned needs at least one slice")
+    if policy is None:
+        policy = TPPPolicy(hot_thr=hot_thr)
     fm_fracs = np.asarray([sl.fm_frac for sl in slices], dtype=np.float64)
     tuners = [sl.tuner for sl in slices]
     tune_everys = [sl.tune_every for sl in slices]
     times, pools, configs_out, fm_sizes, costs = _sweep_run(
-        trace, fm_fracs, hot_thr, hw, hw_capacity_pages, seed,
+        trace, fm_fracs, policy, hw, hw_capacity_pages, seed,
         collect_configs=True, tuners=tuners, tune_everys=tune_everys,
         kswapd_batch=kswapd_batch,
     )
@@ -484,6 +514,7 @@ def sweep_fm_fracs(
     seed: int = 0,
     collect_configs: bool = False,
     kswapd_batch: int | None = None,
+    policy=None,
 ) -> SweepResult:
     """Deprecated entry point; see :func:`repro.sim.api.run`.
 
@@ -494,6 +525,7 @@ def sweep_fm_fracs(
         trace, fm_fracs, hot_thr=hot_thr, hw=hw,
         hw_capacity_pages=hw_capacity_pages, seed=seed,
         collect_configs=collect_configs, kswapd_batch=kswapd_batch,
+        policy=policy,
     )
 
 
@@ -505,6 +537,7 @@ def sweep_tuned(
     hw_capacity_pages: int | None = None,
     seed: int = 0,
     kswapd_batch: int | None = None,
+    policy=None,
 ) -> list:
     """Deprecated entry point; see :func:`repro.sim.api.run`.
 
@@ -514,7 +547,7 @@ def sweep_tuned(
     return _sweep_tuned(
         trace, slices, hot_thr=hot_thr, hw=hw,
         hw_capacity_pages=hw_capacity_pages, seed=seed,
-        kswapd_batch=kswapd_batch,
+        kswapd_batch=kswapd_batch, policy=policy,
     )
 
 

@@ -13,7 +13,17 @@ The state is held in flat integer numpy arrays so the same logic can be
 """
 
 from repro.tiering.page_pool import TieredPagePool, Tier, PoolStats
-from repro.tiering.policy import TPPPolicy, FirstTouchPolicy, PolicyOutcome
+from repro.tiering.policy import (
+    AdmissionTPPPolicy,
+    FirstTouchPolicy,
+    MigrationPolicy,
+    POLICIES,
+    PolicyOutcome,
+    register_policy,
+    resolve_policy,
+    ThrashGuardPolicy,
+    TPPPolicy,
+)
 from repro.tiering.reference_pool import ReferencePagePool
 
 __all__ = [
@@ -21,7 +31,13 @@ __all__ = [
     "ReferencePagePool",
     "Tier",
     "PoolStats",
+    "MigrationPolicy",
+    "POLICIES",
+    "register_policy",
+    "resolve_policy",
     "TPPPolicy",
+    "AdmissionTPPPolicy",
+    "ThrashGuardPolicy",
     "FirstTouchPolicy",
     "PolicyOutcome",
 ]

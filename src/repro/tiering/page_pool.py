@@ -1097,10 +1097,13 @@ class TieredPagePool:
 
     def _try_bulk_step(self, cand: np.ndarray, _sched=None):
         """Whole-policy-step bulk path for :class:`~repro.tiering.policy.
-        TPPPolicy`: returns ``(pm_pr, pm_de, pm_fail, direct)``, or
-        ``None`` only when the pool's queue state was perturbed from
-        outside a policy step (stray pending entries / corrupted supply) —
-        every in-engine regime, including thrash, commits here.
+        TPPPolicy` and its registered subclasses (the admission-controlled
+        and thrash-guard backends filter their candidate vectors *before*
+        scheduling, so they commit through this exact path): returns
+        ``(pm_pr, pm_de, pm_fail, direct)``, or ``None`` only when the
+        pool's queue state was perturbed from outside a policy step (stray
+        pending entries / corrupted supply) — every in-engine regime,
+        including thrash, commits here.
 
         The TPP promote/reclaim interleaving is a scalar recurrence over
         ``fast_free`` and the watermarks (:func:`_bulk_schedule`) — chunk

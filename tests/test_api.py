@@ -11,6 +11,7 @@ determinism, lossless ``RunSet`` JSON round-trips, and the deprecation
 shims (each warns once and returns results identical to ``run()``).
 """
 
+import functools
 import warnings
 
 import numpy as np
@@ -30,7 +31,15 @@ from repro.sim.api import (
     run,
 )
 from repro.sim.engine import _simulate
-from repro.tiering.policy import FirstTouchPolicy
+from repro.tiering.page_pool import TieredPagePool
+from repro.tiering.policy import (
+    POLICIES,
+    AdmissionTPPPolicy,
+    FirstTouchPolicy,
+    ThrashGuardPolicy,
+    TPPPolicy,
+    register_policy,
+)
 from repro.tiering.reference_pool import ReferencePagePool
 
 
@@ -348,10 +357,41 @@ class TestPlannerEquivalence:
             )
         with pytest.raises(ValueError, match="neither trace nor runner"):
             run(Experiment(scenarios=[Scenario()]))
-        with pytest.raises(ValueError, match="kind"):
+        # unknown kinds must list every registered alternative
+        with pytest.raises(
+            ValueError, match="registered kinds:.*admission.*tpp"
+        ):
             PolicySpec(kind="numa")
-        with pytest.raises(ValueError, match="tuners require"):
+        # tuner rejection is keyed on the registry's tunable flag
+        with pytest.raises(ValueError, match="tunable=False"):
             PolicySpec(kind="first_touch", tuner=TunerSpec())
+        # hot_thr must go through the dedicated field (it keys the
+        # planner's sweep grouping), never through params
+        with pytest.raises(ValueError, match="hot_thr"):
+            PolicySpec(kind="admission", params={"hot_thr": 8})
+        # typo'd params fail at spec construction with the accepted set,
+        # not as a bare TypeError deep inside a fan-out worker
+        with pytest.raises(
+            ValueError, match="admit_margn.*accepts.*admit_margin"
+        ):
+            PolicySpec(kind="admission", params={"admit_margn": 2.0})
+        with pytest.raises(ValueError, match="non-JSON-serializable params"):
+            run(
+                Experiment(
+                    scenarios=[Scenario(trace=tr)],
+                    # accepted param name, unserializable value: passes
+                    # the signature check, must die in run()'s JSON check
+                    policies=[PolicySpec(params={"promote_batch": object()})],
+                )
+            )
+        with pytest.raises(
+            ValueError, match="non-JSON-serializable params"
+        ):
+            run(
+                Experiment(
+                    scenarios=[Scenario(trace=tr, params={"n": object()})],
+                )
+            )
 
     def test_custom_runner_backend(self):
         def runner(scenario, fm_frac, spec, db):
@@ -548,6 +588,379 @@ class TestDeprecatedShims:
             Experiment(scenarios=[Scenario(trace=tr)], fm_fracs=fracs)
         )
         assert np.array_equal(times, rs.total_times())
+
+
+class TestPolicyRegistry:
+    """The registry is the only policy-routing surface: new kinds ride the
+    planner via their capability flags, params round-trip losslessly, and
+    third-party registrations need zero api.py edits."""
+
+    @pytest.mark.parametrize(
+        "kind,cls,params",
+        [
+            ("admission", AdmissionTPPPolicy, {"admit_margin": 1.5}),
+            ("thrash_guard", ThrashGuardPolicy, {"reuse_window": 3}),
+        ],
+    )
+    def test_new_kinds_ride_the_sweep(self, kind, cls, params):
+        tr = pressure_trace(1)
+        rs = run(
+            Experiment(
+                scenarios=[Scenario(trace=tr, kswapd_batch=16)],
+                fm_fracs=(0.6, 0.25),
+                policies=[PolicySpec(kind=kind, params=params)],
+                collect_configs=True,
+            )
+        )
+        assert rs.backends == ("sweep",)
+        assert rs.chunked_step_count == 0
+        for f in (0.6, 0.25):
+            rec = rs.record(fm_frac=f)
+            want = _simulate(
+                tr,
+                fm_frac=f,
+                policy=cls(**params),
+                pool_factory=functools.partial(
+                    TieredPagePool, kswapd_batch=16
+                ),
+            )
+            assert_result_equal(rec.result, want)
+
+    def test_params_reach_the_constructor(self):
+        spec = PolicySpec(kind="admission", params={"admit_margin": 3.5})
+        pol = spec.build_policy()
+        assert isinstance(pol, AdmissionTPPPolicy)
+        assert pol.admit_margin == 3.5
+        assert PolicySpec(kind="tpp").build_policy().hot_thr == 4
+
+    def test_params_sweep_gets_distinct_default_labels(self):
+        a = PolicySpec(kind="admission", params={"admit_margin": 1.5})
+        b = PolicySpec(kind="admission", params={"admit_margin": 3.0})
+        assert a.name != b.name
+        tr = random_trace(42, n_intervals=4)
+        rs = run(
+            Experiment(
+                scenarios=[Scenario(trace=tr)],
+                fm_fracs=(0.4,),
+                policies=[a, b],
+            )
+        )
+        assert [r.policy for r in rs.runs] == [a.name, b.name]
+
+    def test_admit_fail_flows_into_config_vectors(self):
+        tr = pressure_trace(2)
+        rs = run(
+            Experiment(
+                scenarios=[Scenario(trace=tr, kswapd_batch=16)],
+                fm_fracs=(0.3,),
+                policies=[
+                    PolicySpec(label="tpp"),
+                    PolicySpec(kind="admission", label="admission"),
+                ],
+                collect_configs=True,
+            )
+        )
+        adm = sum(
+            c.pm_admit_fail
+            for c in rs.result(policy="admission").configs
+        )
+        assert adm > 0
+        assert all(
+            c.pm_admit_fail == 0.0 for c in rs.result(policy="tpp").configs
+        )
+
+    def test_third_party_registration_round_trips(self):
+        @register_policy
+        class LukewarmPolicy(TPPPolicy):
+            """Promotes only every other interval (silly but stateless)."""
+
+            kind = "test_lukewarm"
+
+            def __init__(self, hot_thr=4, skip_odd=True):
+                super().__init__(hot_thr=hot_thr)
+                self.skip_odd = bool(skip_odd)
+                self._i = {}
+
+            def _admit(self, pool, cand):
+                i = self._i.get(id(pool), 0)
+                self._i[id(pool)] = i + 1
+                if self.skip_odd and i % 2 == 1:
+                    return cand[:0], int(cand.size)
+                return cand, 0
+
+        try:
+            tr = random_trace(40, n_intervals=6)
+            rs = run(
+                Experiment(
+                    name="third_party",
+                    scenarios=[Scenario(trace=tr)],
+                    fm_fracs=(0.5,),
+                    policies=[
+                        PolicySpec(
+                            kind="test_lukewarm",
+                            params={"skip_odd": True},
+                        )
+                    ],
+                )
+            )
+            assert rs.backends == ("sweep",)
+            # params echoed losslessly through the provenance + JSON
+            assert rs.spec["policies"][0]["params"] == {"skip_odd": True}
+            back = RunSet.from_json(rs.to_json())
+            assert back.spec == rs.spec
+            assert back.result().stats == rs.result().stats
+
+            # spawn-start fan-out: a worker process re-imports repro but
+            # not the registering module; _run_scenario must re-register
+            # the classes shipped in the job payload before resolving
+            from repro.sim.api import _run_scenario
+
+            spec = PolicySpec(kind="test_lukewarm")
+            POLICIES.pop("test_lukewarm")  # simulate a fresh worker
+            records, chunked = _run_scenario(
+                Scenario(trace=tr), (0.5,), (spec,), None, False,
+                policy_classes=(LukewarmPolicy,),
+            )
+            assert len(records) == 1
+            assert records[0].result.stats == rs.result().stats
+        finally:
+            POLICIES.pop("test_lukewarm", None)
+
+    def test_registry_rejects_duplicates_and_anonymous(self):
+        with pytest.raises(ValueError, match="already registered"):
+
+            @register_policy
+            class Impostor(TPPPolicy):
+                kind = "tpp"
+
+        with pytest.raises(ValueError, match="kind"):
+
+            @register_policy
+            class Nameless(TPPPolicy):
+                kind = ""
+
+    def test_schema_v2_with_v1_compat(self):
+        import json as json_mod
+
+        from repro.sim.api import RUNSET_SCHEMA
+
+        assert RUNSET_SCHEMA == "tuna-runset-v2"
+        tr = random_trace(41, n_intervals=4)
+        rs = run(
+            Experiment(scenarios=[Scenario(trace=tr)], fm_fracs=(0.5,))
+        )
+        d = json_mod.loads(rs.to_json())
+        assert d["schema"] == "tuna-runset-v2"
+        # a v1 document (no params echo) still loads: missing keys default
+        for p in d["spec"]["policies"]:
+            p.pop("params")
+        d["schema"] = "tuna-runset-v1"
+        back = RunSet.from_json(json_mod.dumps(d))
+        assert back.result().stats == rs.result().stats
+
+
+class TestChunkedStepScoping:
+    """chunked-loop provenance is scoped per policy instance (and the
+    deprecated module-level shims read a thread-local aggregate), so
+    concurrent runs cannot cross-pollute each other's counts."""
+
+    def test_per_instance_isolation(self):
+        tr = random_trace(50, n_intervals=5)
+        chunked_pol = TPPPolicy()  # reference pool has no bulk path
+        _simulate(
+            tr, fm_frac=0.4, policy=chunked_pol,
+            pool_factory=ReferencePagePool,
+        )
+        bulk_pol = TPPPolicy()
+        _simulate(tr, fm_frac=0.4, policy=bulk_pol)
+        assert chunked_pol.chunked_steps > 0
+        assert bulk_pol.chunked_steps == 0
+
+    def test_runset_provenance_untouched_by_other_instances(self):
+        tr = random_trace(51, n_intervals=5)
+        # a chunked-looping run in flight must not leak into the RunSet
+        # provenance of an unrelated sweep (the old process-wide global
+        # did exactly that across fan-out workers)
+        noisy = TPPPolicy()
+        _simulate(
+            tr, fm_frac=0.4, policy=noisy, pool_factory=ReferencePagePool
+        )
+        assert noisy.chunked_steps > 0
+        rs = run(
+            Experiment(scenarios=[Scenario(trace=tr)], fm_fracs=(0.5, 0.3))
+        )
+        assert rs.chunked_step_count == 0
+
+    def test_thread_local_aggregate_isolation(self):
+        import threading
+
+        from repro.tiering import policy as policy_mod
+
+        tr = random_trace(52, n_intervals=4)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            policy_mod.reset_chunked_step_count()
+            worker_counts = {}
+
+            def worker():
+                pol = TPPPolicy()
+                _simulate(
+                    tr, fm_frac=0.4, policy=pol,
+                    pool_factory=ReferencePagePool,
+                )
+                worker_counts["instance"] = pol.chunked_steps
+                worker_counts["tls"] = policy_mod.chunked_step_count()
+
+            t = threading.Thread(target=worker)
+            t.start()
+            t.join()
+            assert worker_counts["instance"] > 0
+            assert worker_counts["tls"] == worker_counts["instance"]
+            # this thread's aggregate never saw the worker's executions
+            assert policy_mod.chunked_step_count() == 0
+
+    def test_module_shims_deprecated(self):
+        from repro.tiering import policy as policy_mod
+
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            policy_mod.reset_chunked_step_count()
+            policy_mod.chunked_step_count()
+        deps = [
+            x for x in w if issubclass(x.category, DeprecationWarning)
+        ]
+        assert len(deps) == 2
+
+
+class TestResultCache:
+    """run(cache_dir=...) memoizes the whole RunSet keyed on the spec
+    echo + schema version."""
+
+    def _exp(self, fracs=(0.6, 0.3)):
+        return Experiment(
+            name="cached",
+            scenarios=[Scenario(trace=random_trace(60, n_intervals=5))],
+            fm_fracs=fracs,
+            collect_configs=True,
+        )
+
+    def test_second_run_is_served_from_cache(self, tmp_path):
+        rs1 = run(self._exp(), cache_dir=tmp_path)
+        files = sorted(tmp_path.glob("runset_*.json"))
+        assert len(files) == 1
+        # prove the second call reads the file, not the engine: mutate it
+        doc = files[0].read_text().replace('"cached"', '"tampered"', 1)
+        files[0].write_text(doc)
+        rs2 = run(self._exp(), cache_dir=tmp_path)
+        assert rs2.name == "tampered"
+        for a, b in zip(rs1.runs, rs2.runs):
+            assert a.result.stats == b.result.stats
+            assert np.array_equal(
+                a.result.interval_times, b.result.interval_times
+            )
+            assert a.result.configs == b.result.configs
+
+    def test_spec_change_misses(self, tmp_path):
+        run(self._exp(), cache_dir=tmp_path)
+        run(self._exp(fracs=(0.5,)), cache_dir=tmp_path)
+        assert len(list(tmp_path.glob("runset_*.json"))) == 2
+
+    def test_partial_factory_bound_args_are_cache_identity(self, tmp_path):
+        # the blessed lazy-trace pattern (build_database): two partials
+        # over the same factory with different bound args must not share
+        # a cache entry
+        def exp(n):
+            return Experiment(
+                name="partial",
+                scenarios=[
+                    Scenario(
+                        trace=functools.partial(
+                            random_trace, 61, n_intervals=n
+                        ),
+                        name="p",
+                    )
+                ],
+                fm_fracs=(0.5,),
+            )
+
+        rs4 = run(exp(4), cache_dir=tmp_path)
+        rs6 = run(exp(6), cache_dir=tmp_path)
+        assert len(list(tmp_path.glob("runset_*.json"))) == 2
+        assert len(rs4.result().interval_times) == 4
+        assert len(rs6.result().interval_times) == 6
+
+    def test_pool_factory_bound_args_are_cache_identity(self, tmp_path):
+        tr = random_trace(62, n_intervals=4)
+
+        def exp(halflife):
+            return Experiment(
+                name="pf",
+                scenarios=[
+                    Scenario(
+                        trace=tr,
+                        pool_factory=functools.partial(
+                            TieredPagePool, hotness_halflife=halflife
+                        ),
+                    )
+                ],
+                fm_fracs=(0.4,),
+            )
+
+        a = run(exp(2.0), cache_dir=tmp_path)
+        b = run(exp(8.0), cache_dir=tmp_path)
+        # the bound halflife is identity: two entries, no collision
+        assert len(list(tmp_path.glob("runset_*.json"))) == 2
+        assert a.spec != b.spec
+
+    def test_ndarray_bound_args_hash_full_contents(self):
+        # repr() truncates large arrays; the spec echo must not
+        from repro.sim.api import _arg_ref
+
+        x = np.arange(5000)
+        y = x.copy()
+        y[2500] += 1  # interior element repr() would elide
+        assert _arg_ref(x) != _arg_ref(y)
+        assert _arg_ref(x) == _arg_ref(x.copy())
+        # default-repr objects must not leak memory addresses
+        class Blob:
+            pass
+
+        ref = _arg_ref(Blob())
+        assert "0x" not in str(ref)
+        assert ref == _arg_ref(Blob())
+
+    def test_refuses_to_cache_unidentifiable_factory_args(self, tmp_path):
+        # a bound object with a default (address-bearing) repr has no
+        # stable identity: caching it could silently serve another
+        # experiment's results, so run() must refuse loudly
+        class Cfg:
+            pass
+
+        exp = Experiment(
+            name="unid",
+            scenarios=[
+                Scenario(
+                    trace=functools.partial(random_trace, 63, rss=Cfg())
+                )
+            ],
+            fm_fracs=(0.5,),
+        )
+        with pytest.raises(ValueError, match="stable identity"):
+            run(exp, cache_dir=tmp_path)
+
+    def test_cache_round_trip_is_lossless(self, tmp_path):
+        rs1 = run(self._exp(), cache_dir=tmp_path)
+        rs2 = run(self._exp(), cache_dir=tmp_path)
+        assert rs2.to_json() == rs1.to_json()
+
+    def test_corrupted_entry_recomputes_and_heals(self, tmp_path):
+        rs1 = run(self._exp(), cache_dir=tmp_path)
+        (f,) = tmp_path.glob("runset_*.json")
+        f.write_text(rs1.to_json()[: len(rs1.to_json()) // 2])  # truncated
+        rs2 = run(self._exp(), cache_dir=tmp_path)
+        assert rs2.to_json() == rs1.to_json()
+        # the entry was rewritten, so the next call is a clean hit again
+        assert RunSet.from_json(f.read_text()).to_json() == rs1.to_json()
 
 
 class TestBuildDatabaseOnPlanner:

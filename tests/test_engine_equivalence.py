@@ -324,12 +324,12 @@ class TestThrashEquivalence:
     kswapd budgets — and the sweeps never execute the chunked loop."""
 
     def _assert_three_lanes(self, tr, fracs, cap=None, kswapd=None):
-        policy_mod.reset_chunked_step_count()
+        sweep_policy = policy_mod.TPPPolicy(hot_thr=4)
         res = sweep_fm_fracs(
             tr, fracs, hw_capacity_pages=cap, kswapd_batch=kswapd,
-            collect_configs=True,
+            collect_configs=True, policy=sweep_policy,
         )
-        assert policy_mod.chunked_step_count() == 0
+        assert sweep_policy.chunked_steps == 0
         for i, f in enumerate(fracs):
             ref = simulate(
                 tr, fm_frac=float(f), hw_capacity_pages=cap,
@@ -392,11 +392,13 @@ class TestThrashEquivalence:
             make_tuner(db, tau, max_step_frac=0.3) if tau else None
             for tau, _ in specs
         ]
-        policy_mod.reset_chunked_step_count()
+        sweep_policy = policy_mod.TPPPolicy(hot_thr=4)
         swept = sweep_tuned(
-            tr, [TunedSlice(0.9, t, te) for t, (_, te) in zip(tuners, specs)]
+            tr,
+            [TunedSlice(0.9, t, te) for t, (_, te) in zip(tuners, specs)],
+            policy=sweep_policy,
         )
-        assert policy_mod.chunked_step_count() == 0
+        assert sweep_policy.chunked_steps == 0
         moved = direct = 0
         for (sim_res, sim_tuner), sweep_res, sweep_tuner in zip(
             per, swept, tuners
@@ -456,6 +458,124 @@ class TestThrashEquivalence:
                     got_cand.add(heapq.heappop(heap)[2])
         assert n_b == got_base, (seed, events)
         assert set(np.flatnonzero(taken)) == got_cand, (seed, events)
+
+
+BACKEND_CASES = [
+    ("admission", policy_mod.AdmissionTPPPolicy, {"admit_margin": 2.0}),
+    ("thrash_guard", policy_mod.ThrashGuardPolicy,
+     {"reuse_window": 2, "churn_frac": 0.25, "backoff_intervals": 2}),
+]
+
+
+class TestPluggableBackendEquivalence:
+    """The admission-controlled and thrash-responsive backends are anchored
+    exactly like PR 3 anchored TPP: bulk sweep == forced-chunked
+    ``_ChunkedOnlyPool`` == ``ReferencePagePool`` per lane (counters,
+    interval times, config vectors incl. the new ``pm_admit_fail`` extra),
+    with the sweep's policy instance asserted chunked-loop-free — on both
+    the fixed-size and the tuned sweep."""
+
+    def _assert_three_lanes(self, make_policy, tr, fracs, kswapd=None):
+        sweep_policy = make_policy()
+        res = sweep_fm_fracs(
+            tr, fracs, kswapd_batch=kswapd, collect_configs=True,
+            policy=sweep_policy,
+        )
+        assert sweep_policy.chunked_steps == 0
+        suppressed = 0
+        for i, f in enumerate(fracs):
+            suppressed += sum(c.pm_admit_fail for c in res.configs[i])
+            for pf in (ReferencePagePool, _ChunkedOnlyPool):
+                lane = simulate(
+                    tr, fm_frac=float(f), policy=make_policy(),
+                    pool_factory=functools.partial(pf, kswapd_batch=kswapd),
+                )
+                assert res.stats[i] == lane.stats, (f, pf)
+                assert np.array_equal(
+                    res.interval_times[i], lane.interval_times
+                ), (f, pf)
+                assert res.configs[i] == lane.configs, (f, pf)
+        # the scenario must actually exercise the admission/guard stage
+        assert suppressed > 0
+
+    @pytest.mark.parametrize("kind,cls,params", BACKEND_CASES)
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_pressure_three_lanes(self, kind, cls, params, seed):
+        self._assert_three_lanes(
+            lambda: cls(**params),
+            pressure_trace(seed, rss=4_000, n_intervals=8),
+            np.array([0.6, 0.3, 0.12]),
+            kswapd=16,
+        )
+
+    @pytest.mark.parametrize("kind,cls,params", BACKEND_CASES)
+    def test_tuned_sweep_matches_per_size(self, kind, cls, params):
+        tr = pressure_trace(5, rss=5_000, n_intervals=16)
+        db = synthetic_db(rss=5_000)
+        specs = [(0.25, 2), (None, None)]
+        per = []
+        for tau, te in specs:
+            tuner = make_tuner(db, tau, max_step_frac=0.3) if tau else None
+            per.append(
+                (
+                    simulate(
+                        tr, fm_frac=0.9, policy=cls(**params),
+                        tuner=tuner, tune_every=te,
+                    ),
+                    tuner,
+                )
+            )
+        tuners = [
+            make_tuner(db, tau, max_step_frac=0.3) if tau else None
+            for tau, _ in specs
+        ]
+        sweep_policy = cls(**params)
+        swept = sweep_tuned(
+            tr,
+            [TunedSlice(0.9, t, te) for t, (_, te) in zip(tuners, specs)],
+            policy=sweep_policy,
+        )
+        assert sweep_policy.chunked_steps == 0
+        for (sim_res, sim_tuner), sweep_res, sweep_tuner in zip(
+            per, swept, tuners
+        ):
+            assert_tuned_equal(sim_res, sweep_res, sim_tuner, sweep_tuner)
+
+    def test_admission_rejects_spikes_not_history(self):
+        """One-interval spikes are rejected; pages with reuse history pass
+        once their decayed mass clears the margin."""
+        pool = TieredPagePool(num_pages=100, hw_capacity=100)
+        pool.set_fm_size(50)
+        pool.place(np.arange(100, dtype=np.int64), policy_mod.Tier.SLOW)
+        pol = policy_mod.AdmissionTPPPolicy(hot_thr=4, admit_margin=2.0)
+        pages = np.arange(10, dtype=np.int64)
+        # intervals 1-2: pages touched at exactly hot_thr — the decayed
+        # history mass (0 then 4*decay) keeps the effective heat under
+        # margin * hot_thr == 8: every candidate is rejected
+        for _ in range(2):
+            pool.apply_accesses(pages, np.full(10, 4), touch_cap=4)
+            out = pol.step(pool, pages)
+            assert out.pm_pr == 0 and out.pm_admit_fail == 10
+            pool.end_interval()
+        # interval 3: two folds of history ((4*d + 4)*d ≈ 4.83) + 4
+        # touches clears the margin: all admitted, none rejected
+        pool.apply_accesses(pages, np.full(10, 4), touch_cap=4)
+        out = pol.step(pool, pages)
+        assert out.pm_admit_fail == 0 and out.pm_pr == 10
+
+    @pytest.mark.parametrize("reuse_window", [1, 2])
+    def test_thrash_guard_backs_off_pingpong(self, reuse_window):
+        """A rotating set ~2x the fast tier ping-pongs under plain TPP;
+        the guard must detect it and suppress re-promotions — including
+        at the minimum window (reuse_window=1 covers exactly the
+        immediately preceding step, where same-regime ping-pong lives)."""
+        tr = pressure_trace(9, rss=3_000, n_intervals=8)
+        guard = policy_mod.ThrashGuardPolicy(reuse_window=reuse_window)
+        res = simulate(tr, fm_frac=0.3, policy=guard)
+        tpp = simulate(tr, fm_frac=0.3)
+        suppressed = sum(c.pm_admit_fail for c in res.configs)
+        assert suppressed > 0
+        assert res.migrations < tpp.migrations
 
 
 class TestBatchPolicySchedule:

@@ -3,7 +3,6 @@ shape/dtype sweeps and property-based invariants."""
 
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 
 pytest.importorskip("hypothesis", reason="hypothesis not installed (test extra)")

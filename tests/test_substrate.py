@@ -3,7 +3,6 @@ elastic planning, optimizer behaviour, serving KV tiering."""
 
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager, save_checkpoint, load_checkpoint

@@ -1,6 +1,5 @@
 """End-to-end trainer: loss descends, failures retried, resume is exact."""
 
-import jax
 import numpy as np
 import pytest
 
@@ -33,7 +32,7 @@ def test_checkpoint_resume_bit_exact(tiny_cfg, tmp_path):
     # full run: 12 steps
     full = train(tiny_cfg, mesh, steps=12, global_batch=4, seq_len=32)
     # interrupted run: 8 steps with a checkpoint at 8, then resume to 12
-    part = train(
+    train(
         tiny_cfg, mesh, steps=8, global_batch=4, seq_len=32,
         ckpt_dir=tmp_path, ckpt_every=8,
     )
