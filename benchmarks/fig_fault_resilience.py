@@ -1,0 +1,206 @@
+"""Fault resilience: tuned TPP vs admission vs thrash_guard under injected
+faults (beyond the paper: the ARMS/Nomad-motivated robustness probe).
+
+Sweeps fault intensity (none / mild / harsh seeded
+:class:`~repro.sim.faults.FaultSpec` levels) over the adversarial
+``thrash`` workload and reports, per (level, policy backend): overall
+loss vs that level's fault-free full-size baseline, ``target_miss``
+(overshoot of the 5% target), migration traffic, the paper's
+``pgpromote_fail`` failure counter (retry-exhausted injected migrations
+land here), the tuner's degraded-decision counts (dropout holds, db-outage
+backoff/freeze, shrink-hysteresis clamps), and the injected-event volume
+from the RunSet provenance. The ``none`` rows are the control: they must
+match the fault-free tuned runs exactly (same cache entries).
+
+``--quick`` is the CI smoke lane: a small trace + tiny database, two fault
+levels, TPP only — asserting the resilience contract (run completes under
+db outages with degraded decisions instead of raising; exhausted retries
+surface in ``pgpromote_fail``) rather than timing anything.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.sim.api import Experiment, PolicySpec, Scenario
+from repro.sim.api import run as run_experiment
+from repro.sim.faults import FaultSpec
+
+from benchmarks.common import CACHE, build_bench_db, get_trace, policy_kinds
+from benchmarks.fig3_7_tuning import TARGET_LOSS, summarize, tuner_spec
+
+FAULT_SEED = 7
+
+
+def fault_levels() -> dict:
+    """Ordered fault-intensity levels; ``None`` is the fault-free control."""
+    return {
+        "none": None,
+        "mild": FaultSpec(
+            seed=FAULT_SEED,
+            promote_fail_rate=0.05,
+            max_retries=3,
+            telemetry_drop_rate=0.10,
+        ),
+        "harsh": FaultSpec(
+            seed=FAULT_SEED,
+            promote_fail_rate=0.20,
+            max_retries=2,
+            backoff_base=1,
+            demote_fail_rate=0.10,
+            kswapd_stall_rate=0.05,
+            kswapd_stall_len=2,
+            telemetry_drop_rate=0.15,
+            telemetry_noise_rate=0.20,
+            telemetry_noise_scale=0.5,
+            db_outage_rate=0.15,
+            db_outage_len=2,
+            actuation_lag=1,
+        ),
+    }
+
+
+def _degraded_counts(decisions) -> dict:
+    out: dict = {}
+    for d in decisions or ():
+        if d.degraded is not None:
+            out[d.degraded] = out.get(d.degraded, 0) + 1
+    return out
+
+
+def _fault_event_count(record) -> int:
+    return len(record.fault_events or ())
+
+
+def _level_experiment(trace, level: str, spec, kinds, db, cache_dir=None,
+                      tuned_start: float = 1.0):
+    """One experiment per fault level: every backend's full-size baseline
+    and tuned variant share the scenario (and its injected schedule).
+    ``tuned_start`` moves the tuned specs' starting size (the smoke lane
+    starts at the knee, where migration traffic flows immediately)."""
+    policies = []
+    for kind in kinds:
+        policies.append(
+            PolicySpec(kind=kind, label=f"{kind}_full", fm_frac=1.0)
+        )
+        policies.append(
+            PolicySpec(
+                kind=kind, label=f"{kind}_tuna", fm_frac=tuned_start,
+                tuner=tuner_spec(),
+            )
+        )
+    return run_experiment(
+        Experiment(
+            name=f"fault_resilience[{trace.name}@{level}]",
+            scenarios=[
+                Scenario(trace=trace, name=f"{trace.name}@{level}",
+                         faults=spec)
+            ],
+            fm_fracs=(1.0,),
+            policies=policies,
+        ),
+        db=db,
+        cache_dir=cache_dir,
+    )
+
+
+def run(report) -> None:
+    db = build_bench_db()
+    tr = get_trace("thrash")
+    kinds = policy_kinds(tunable=True)
+    for level, spec in fault_levels().items():
+        t0 = time.time()
+        rs = _level_experiment(tr, level, spec, kinds, db, cache_dir=CACHE)
+        per_row_us = (time.time() - t0) * 1e6 / len(kinds)
+        for kind in kinds:
+            base = rs.result(policy=f"{kind}_full")
+            res = rs.result(policy=f"{kind}_tuna")
+            rec = rs.record(policy=f"{kind}_tuna")
+            _, _, overall_loss = summarize(base, res, tr)
+            degr = _degraded_counts(rec.decisions)
+            degr_s = ",".join(f"{k}:{v}" for k, v in sorted(degr.items()))
+            report(
+                f"fault/{level}_{kind}",
+                per_row_us,
+                f"overall_loss={overall_loss*100:.2f}%"
+                f";target_miss={(overall_loss - TARGET_LOSS)*100:+.2f}pp"
+                f";migr={res.migrations}"
+                f";pgpromote_fail={res.stats['pgpromote_fail']}"
+                f";degraded=[{degr_s}]"
+                f";fault_events={_fault_event_count(rec)}",
+            )
+
+
+def _quick_smoke() -> None:
+    """CI lane: assert the resilience contract on a small run."""
+    import numpy as np
+
+    from repro.core.tuner import build_database
+    from repro.sim.workloads import xsbench_trace
+
+    tr = xsbench_trace(n_intervals=24, lookups=40_000)
+    probe = run_experiment(
+        Experiment(
+            name="fault_smoke_profile",
+            scenarios=[Scenario(trace=tr)],
+            fm_fracs=(0.9,),
+            collect_configs=True,
+        )
+    )
+    cvs = probe.record().result.configs
+    configs = [c for c in cvs[3:] if c.pacc_f + c.pacc_s >= 500][::3][:8]
+    db = build_database(
+        configs, fm_fracs=np.arange(1.0, 0.28, -0.09), n_intervals=6
+    )
+    # the harsh level with the promotion-failure channel turned up: a
+    # 24-interval smoke must see retry exhaustion, not just transients
+    import dataclasses
+
+    harsh_spec = dataclasses.replace(
+        fault_levels()["harsh"], promote_fail_rate=0.6, max_retries=1
+    )
+    rows: dict = {}
+    for level, spec in (("none", None), ("harsh", harsh_spec)):
+        rs = _level_experiment(
+            tr, level, spec, ("tpp",), db, tuned_start=0.5
+        )
+        rec = rs.record(policy="tpp_tuna")
+        rows[level] = rec
+        print(
+            f"fault-smoke {level}: total={rec.result.total_time * 1e3:.1f}ms"
+            f" pgpromote_fail={rec.result.stats['pgpromote_fail']}"
+            f" degraded={_degraded_counts(rec.decisions)}"
+            f" fault_events={_fault_event_count(rec)}"
+        )
+    harsh = rows["harsh"]
+    assert harsh.fault_events, "harsh level injected no events"
+    assert harsh.result.stats["pgpromote_fail"] > 0, (
+        "retry-exhausted promotions must surface in pgpromote_fail"
+    )
+    assert any(d.degraded is not None for d in harsh.decisions), (
+        "harsh telemetry/db faults must yield degraded tuner decisions"
+    )
+    assert rows["none"].fault_events is None
+    assert all(d.degraded is None for d in rows["none"].decisions)
+    # identical seed => identical fault-event log (determinism contract)
+    again = _level_experiment(
+        tr, "harsh", harsh_spec, ("tpp",), db, tuned_start=0.5
+    ).record(policy="tpp_tuna")
+    assert again.fault_events == harsh.fault_events
+    print("fault-smoke ok.")
+
+
+def main() -> None:
+    if "--quick" in sys.argv:
+        _quick_smoke()
+        return
+
+    def _report(name, us, derived):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    run(_report)
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,7 @@ def main() -> None:
         fig3_7_tuning,
         fig8_migrations,
         table3_target_sensitivity,
+        fig_fault_resilience,
         serving_tiered,
         bench_engine,
         kernels as kernel_bench,
@@ -35,6 +36,7 @@ def main() -> None:
         ("fig3_7", fig3_7_tuning),
         ("fig8", fig8_migrations),
         ("table3", table3_target_sensitivity),
+        ("fault", fig_fault_resilience),
         ("serving", serving_tiered),
         ("engine", bench_engine),
         ("kernels", kernel_bench),

@@ -21,7 +21,14 @@ onto the deprecated `simulate`/`sweep_*` entry points.
 import numpy as np
 
 from repro.core.tuner import build_database
-from repro.sim.api import Experiment, PolicySpec, Scenario, TunerSpec, run
+from repro.sim.api import (
+    Experiment,
+    FaultSpec,
+    PolicySpec,
+    Scenario,
+    TunerSpec,
+    run,
+)
 from repro.sim.workloads import xsbench_trace
 
 print("== generating XSBench trace (real MC lookup kernel, page-instrumented)")
@@ -73,4 +80,45 @@ print(f"   TPP+Tuna:  runtime {tuned.total_time*1e3:.1f} ms "
 print(f"   backends={list(rs.backends)}, "
       f"chunked_step_count={rs.chunked_step_count}, "
       f"runset_json={len(rs.to_json())} bytes")
+
+print("== the same tuned run under injected faults (resilience probe)")
+# Scenario(faults=...) turns on the seeded deterministic fault layer:
+# transient promotion failures with bounded retry + backoff, telemetry
+# dropouts, and PerfDB outages. The tuner degrades gracefully (holds /
+# freezes watermarks) instead of crashing; every injected event lands in
+# the RunSet provenance.
+rs_f = run(
+    Experiment(
+        name="quickstart_faults",
+        scenarios=[
+            Scenario(
+                trace=trace,
+                name=f"{trace.name}@faults",
+                faults=FaultSpec(
+                    seed=7,
+                    promote_fail_rate=0.2,
+                    max_retries=2,
+                    telemetry_drop_rate=0.15,
+                    db_outage_rate=0.2,
+                ),
+            )
+        ],
+        fm_fracs=(1.0,),
+        policies=[
+            PolicySpec(label="tpp+tuna",
+                       tuner=TunerSpec(target_loss=0.05, tune_every=5,
+                                       max_step_frac=0.05)),
+        ],
+    ),
+    db=db,
+)
+rec_f = rs_f.record(policy="tpp+tuna")
+faulted = rec_f.result
+degraded = [d.degraded for d in rec_f.decisions if d.degraded is not None]
+floss = (faulted.total_time - base.total_time) / base.total_time
+print(f"   under faults: runtime {faulted.total_time*1e3:.1f} ms "
+      f"(loss {floss*100:.2f}%), "
+      f"pgpromote_fail={faulted.stats['pgpromote_fail']}, "
+      f"{len(rec_f.fault_events)} injected events, "
+      f"{len(degraded)} degraded tuner decisions {sorted(set(degraded))}")
 print("done.")

@@ -16,12 +16,23 @@ from __future__ import annotations
 
 import heapq
 import json
+import warnings
 from dataclasses import dataclass, field
 from pathlib import Path
 
 import numpy as np
 
 from repro.core.telemetry import ConfigVector
+
+
+class PerfDBUnavailable(RuntimeError):
+    """The performance database cannot be reached right now.
+
+    Raised by real deployments when the (possibly remote) database is
+    down, and by the fault-injection layer to model query outages; the
+    tuner catches it and degrades gracefully (retry with backoff, then
+    frozen watermarks) instead of crashing the tuning loop.
+    """
 
 
 @dataclass
@@ -211,11 +222,29 @@ class PerfDB:
         return cv.normalized() * self._scale
 
     def query(self, cv: ConfigVector, k: int = 1) -> list:
-        """Nearest execution records for a runtime configuration vector."""
+        """Nearest execution records for a runtime configuration vector.
+
+        Records carrying non-finite execution times (a degraded/aborted
+        micro-benchmark run) are skipped with a warning rather than
+        returned — one NaN would otherwise silently poison the tuner's
+        k-NN loss average.
+        """
         if self._index is None:
             self.build()
         ids, _ = self._index.search(self._embed(cv), k=k)
-        return [self.records[int(i)] for i in ids]
+        out = []
+        for i in ids:
+            r = self.records[int(i)]
+            if not np.all(np.isfinite(r.times)):
+                warnings.warn(
+                    "PerfDB.query: skipping record with non-finite times "
+                    f"(rss_pages={r.config.rss_pages:g})",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+                continue
+            out.append(r)
+        return out
 
     def query_brute(self, cv: ConfigVector, k: int = 1) -> list:
         """Exact nearest neighbours (recall oracle for tests)."""

@@ -19,13 +19,14 @@ hardware in production) is injected as a callable.
 from __future__ import annotations
 
 import functools
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, Sequence
 
 import numpy as np
 
 from repro.core.microbench import generate_microbench
-from repro.core.perfdb import PerfDB, PerfRecord
+from repro.core.perfdb import PerfDB, PerfDBUnavailable, PerfRecord
 from repro.core.telemetry import ConfigVector
 from repro.core.trace import Trace
 from repro.core.watermark import WatermarkController
@@ -46,6 +47,19 @@ class TunerConfig:
     feedback: bool = True
     feedback_margin: float = 1.0  # grow when loss > margin × τ
     cooldown_windows: int = 3  # block DB shrink after a feedback grow
+    # Degradation modes (robustness extension): consecutive PerfDB
+    # failures tolerated (each retried at the next window, with
+    # exponential backoff between attempts) before the tuner stops
+    # querying every window and freezes the watermarks at the current
+    # size until a query succeeds again.
+    db_retry_limit: int = 3
+    # Hysteresis clamp: a shrink request deeper than one controller step
+    # below the current size must be confirmed by the *next* tuning
+    # window before it proceeds, so a single noisy telemetry interval
+    # cannot trigger a multi-step shrink. Off by default (bit-exact with
+    # the pre-fault-model tuner); the fault injector arms it when
+    # telemetry noise is configured.
+    shrink_confirm: bool = False
 
 
 @dataclass
@@ -55,6 +69,9 @@ class TunerDecision:
     fm_frac: float | None  # chosen fraction (None = keep current)
     fm_pages: int  # actuated size
     predicted_loss: float | None
+    # why this decision ran degraded, if it did: "telemetry_dropout",
+    # "db_outage", "db_backoff", "db_outage_frozen", "shrink_unconfirmed"
+    degraded: str | None = None
 
 
 @dataclass
@@ -64,9 +81,16 @@ class TunaTuner:
     cfg: TunerConfig = field(default_factory=TunerConfig)
     peak_rss_pages: int | None = None
     decisions: list = field(default_factory=list)
+    # a FaultInjector armed by repro.sim.faults (kept untyped: no cycle);
+    # None in production unless a run wires one in
+    fault_injector: object | None = None
     _ref_tpa: float | None = None  # time/access EMA at (near-)full fm
     _cooldown: int = 0
     _floor_frac: float = 0.0  # learned lower bound from feedback violations
+    _step_idx: int = -1  # tuning-step counter (keys db-outage windows)
+    _db_fail_streak: int = 0  # consecutive PerfDB failures
+    _db_backoff: int = 0  # windows left before the next query retry
+    _shrink_armed: bool = False  # deep-shrink request awaiting confirmation
 
     def bind_pool(self, pool, peak_rss_pages: int | None = None) -> "TunaTuner":
         """Attach the pool this tuner actuates (via its controller).
@@ -85,16 +109,37 @@ class TunaTuner:
         )
         return self
 
+    def _hold(self, cv, t, degraded=None, predicted_loss=None) -> TunerDecision:
+        """A keep-current-size decision (optionally marked degraded)."""
+        d = TunerDecision(
+            t=t, config=cv, fm_frac=None,
+            fm_pages=self.controller.pool.effective_fm_size,
+            predicted_loss=predicted_loss, degraded=degraded,
+        )
+        self.decisions.append(d)
+        return d
+
     def step(
-        self, cv: ConfigVector, t: float = 0.0, measured_tpa: float | None = None
+        self,
+        cv: ConfigVector,
+        t: float = 0.0,
+        measured_tpa: float | None = None,
+        telemetry_ok: bool = True,
     ) -> TunerDecision:
         """One tuning step: telemetry in, watermark actuation out.
 
         ``measured_tpa`` — measured time per memory access this tuning
         window; feeds the closed-loop guard when cfg.feedback is on.
+        ``telemetry_ok=False`` marks this window's telemetry as missing
+        or stale (profiler dropout): the tuner holds its last decision —
+        neither the feedback guard nor the database may act on counters
+        that never arrived.
         """
+        self._step_idx += 1
         peak = self.peak_rss_pages or self.controller.pool.hw_capacity
         cur_frac = self.controller.pool.effective_fm_size / peak
+        if not telemetry_ok or cv is None:
+            return self._hold(cv, t, degraded="telemetry_dropout")
         if self.cfg.feedback and measured_tpa is not None and measured_tpa > 0:
             if cur_frac >= 0.97:
                 # conservative reference: the best (minimum) time-per-access
@@ -130,14 +175,33 @@ class TunaTuner:
                     return d
         if self._cooldown > 0:
             self._cooldown -= 1
-            d = TunerDecision(
-                t=t, config=cv, fm_frac=None,
-                fm_pages=self.controller.pool.effective_fm_size,
-                predicted_loss=None,
+            return self._hold(cv, t)
+        # --- PerfDB degradation: retry with backoff, then freeze.
+        # Failed queries hold the current size (frozen watermarks); each
+        # consecutive failure doubles the number of tuning windows skipped
+        # before the next retry, and past cfg.db_retry_limit the decision
+        # is surfaced as "db_outage_frozen" — the loop never raises.
+        if self._db_backoff > 0:
+            self._db_backoff -= 1
+            return self._hold(cv, t, degraded="db_backoff")
+        fi = self.fault_injector
+        outage = fi is not None and fi.db_outage(
+            self.controller.pool, self._step_idx
+        )
+        records = None
+        if not outage:
+            try:
+                records = self.db.query(cv, k=self.cfg.k_neighbors)
+            except PerfDBUnavailable:
+                outage = True
+        if outage:
+            self._db_fail_streak += 1
+            self._db_backoff = min(2 ** (self._db_fail_streak - 1), 8)
+            frozen = self._db_fail_streak > self.cfg.db_retry_limit
+            return self._hold(
+                cv, t, degraded="db_outage_frozen" if frozen else "db_outage"
             )
-            self.decisions.append(d)
-            return d
-        records = self.db.query(cv, k=self.cfg.k_neighbors)
+        self._db_fail_streak = 0
         frac, loss = self._choose(records)
         if frac is None:
             decision = TunerDecision(
@@ -149,10 +213,23 @@ class TunaTuner:
             )
         else:
             frac = max(frac, self.cfg.min_fm_frac, self._floor_frac)
+            degraded = None
+            if self.cfg.shrink_confirm:
+                # hysteresis clamp: a multi-step shrink request must
+                # repeat on the next window before it proceeds
+                ms = self.controller.max_step_frac
+                if frac < cur_frac - ms - 1e-12:
+                    if not self._shrink_armed:
+                        self._shrink_armed = True
+                        frac = max(frac, cur_frac - ms)
+                        degraded = "shrink_unconfirmed"
+                else:
+                    self._shrink_armed = False
             new_fm = int(round(frac * peak))
             actual = self.controller.set_size(new_fm, t=t)
             decision = TunerDecision(
-                t=t, config=cv, fm_frac=frac, fm_pages=actual, predicted_loss=loss
+                t=t, config=cv, fm_frac=frac, fm_pages=actual,
+                predicted_loss=loss, degraded=degraded,
             )
         self.decisions.append(decision)
         return decision
@@ -161,18 +238,30 @@ class TunaTuner:
         """Min fm fraction whose k-NN-averaged predicted loss ≤ τ."""
         if not records:
             return None, None
-        # average loss curves over the k nearest records on a common grid
+        # average loss curves over the k nearest records on a common grid;
+        # drop records whose loss curve is non-finite (degraded microbench
+        # runs: NaN/inf times, or a zero baseline) — one would poison the
+        # whole average
         grid = records[0].fm_fracs
         losses = []
         for r in records:
+            pl = r.predicted_loss()
+            if not np.all(np.isfinite(pl)):
+                warnings.warn(
+                    "TunaTuner._choose: skipping record with non-finite "
+                    f"loss curve (rss_pages={r.config.rss_pages:g})",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+                continue
             if r.fm_fracs.shape == grid.shape and np.allclose(r.fm_fracs, grid):
-                losses.append(r.predicted_loss())
+                losses.append(pl)
             else:
                 losses.append(
-                    np.interp(grid[::-1], r.fm_fracs[::-1], r.predicted_loss()[::-1])[
-                        ::-1
-                    ]
+                    np.interp(grid[::-1], r.fm_fracs[::-1], pl[::-1])[::-1]
                 )
+        if not losses:
+            return None, None
         loss = np.mean(losses, axis=0)
         ok = loss <= self.cfg.target_loss + 1e-12
         if not np.any(ok):

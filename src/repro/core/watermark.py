@@ -44,6 +44,11 @@ class WatermarkController:
     # ignore changes smaller than this fraction (hysteresis)
     deadband_frac: float = 0.005
     log: list = field(default_factory=list)
+    # actuation lag (fault model): a set_size request only takes effect
+    # lag_steps calls later — the reclaimer acknowledges watermark moves
+    # late. 0 (default) is the ideal immediate actuator.
+    lag_steps: int = 0
+    _pending: list = field(default_factory=list)
 
     def bind(self, pool: TieredPagePool) -> "WatermarkController":
         """Attach the pool this controller actuates; returns self."""
@@ -59,6 +64,13 @@ class WatermarkController:
             )
         cap = self.pool.hw_capacity
         cur = self.pool.effective_fm_size
+        if self.lag_steps > 0:
+            # delayed actuation: enqueue this request, apply the one from
+            # lag_steps calls ago (if any has matured yet)
+            self._pending.append(int(new_fm_pages))
+            if len(self._pending) <= self.lag_steps:
+                return cur
+            new_fm_pages = self._pending.pop(0)
         target = int(max(1, min(cap, new_fm_pages)))
         # a reached target is a no-op even at deadband 0 — it must not
         # append zero-delta events to the audit log

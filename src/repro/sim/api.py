@@ -7,8 +7,9 @@ that pipeline as **data**:
 
 * :class:`Scenario` — what to run: a trace (object, workload name, or a
   picklable zero-arg factory), the hardware profile, the hardware fast-tier
-  capacity, the RNG seed, and pool overrides (``kswapd_batch``,
-  ``pool_factory``). A scenario can instead carry a custom ``runner``
+  capacity, the RNG seed, pool overrides (``kswapd_batch``,
+  ``pool_factory``), and an optional fault model (``faults``, see below).
+  A scenario can instead carry a custom ``runner``
   callable, which is how non-simulator engines (e.g. the tiered-KV serving
   benchmark) plug into the same experiment shape.
 * :class:`PolicySpec` — how to manage pages: a ``kind`` resolved through
@@ -49,21 +50,44 @@ unbatchable spec            per-size :func:`repro.sim.engine._simulate` — a
 Scenarios fan out across processes with ``concurrent.futures``
 (``parallelism=None`` keeps the database-build heuristic: serial below 12
 scenarios, else one worker per core), which is what absorbed the old
-``build_database`` fan-out helper. Every backend is bit-exact against the
-pre-redesign entry points (``simulate`` / ``sweep_fm_fracs`` /
-``sweep_tuned``), which ``tests/test_api.py`` pins — counters, interval
-times, config vectors, tuner decision lists, watermark event logs.
+``build_database`` fan-out helper. The fan-out is resilient: a scenario
+that raises inside a worker is re-raised in the parent as
+:class:`ScenarioExecutionError` naming the scenario and echoing its spec;
+``run(scenario_timeout=...)`` bounds each scenario's wall-clock (a hung
+worker raises instead of blocking forever); a broken executor (OOM-killed
+worker, fork ban) gets ONE fresh executor for the unfinished scenarios
+before the planner falls back to serial execution. Every backend is
+bit-exact against the pre-redesign entry points (``simulate`` /
+``sweep_fm_fracs`` / ``sweep_tuned``), which ``tests/test_api.py`` pins —
+counters, interval times, config vectors, tuner decision lists, watermark
+event logs.
+
+Fault model (``Scenario.faults``)
+---------------------------------
+A :class:`~repro.sim.faults.FaultSpec` turns on the seeded, deterministic
+fault-injection layer (:mod:`repro.sim.faults`): transient promotion
+failures with per-page bounded retry + exponential backoff (exhausted
+retries credit ``pgpromote_fail``), kswapd stall windows and demotion
+shedding, telemetry dropout/noise at tuning steps, PerfDB query outages
+(the tuner holds, retries with backoff, then freezes its watermarks —
+surfaced per decision via ``TunerDecision.degraded``), and
+watermark-actuation lag. Every decision is a pure hash of
+``(seed, interval, page)``, so the per-size engine, the batched sweeps,
+and fan-out workers reproduce identical fault schedules; every injected
+event is logged into the RunSet provenance (``runs[*].fault_events``).
+``faults=None`` (the default) keeps the exact fault-free hot path.
 
 RunSet JSON schema (``RunSet.to_json`` / ``RunSet.from_json``)
 --------------------------------------------------------------
 Lossless (floats round-trip via ``repr``), versioned by ``schema``.
-Current version ``tuna-runset-v2``: additive over v1 — policy entries
-gained the ``params`` echo (and config vectors the ``pm_admit_fail``
-extra); :meth:`RunSet.from_json` still loads v1 documents (missing keys
-take their defaults)::
+Current version ``tuna-runset-v3``: additive over v2 — scenario echoes
+gained the ``faults`` spec, run entries the ``fault_events`` log, and
+tuner decisions the ``degraded`` marker (v2 itself added the policy
+``params`` echo over v1); :meth:`RunSet.from_json` still loads v1 and v2
+documents (missing keys take their defaults)::
 
     {
-      "schema": "tuna-runset-v2",
+      "schema": "tuna-runset-v3",
       "name": str,                     # experiment name
       "spec": {                        # provenance: the experiment echo
         "name": str,
@@ -72,7 +96,8 @@ take their defaults)::
         "scenarios": [{"name", "trace", "seed", "hw",
                        "hw_capacity_pages", "kswapd_batch",
                        "pool_factory", "fast_only_at_full",
-                       "runner", "params"}, ...],
+                       "runner", "params",
+                       "faults": {FaultSpec fields} | null}, ...],
         "policies":  [{"label", "kind", "hot_thr", "fm_frac",
                        "params": {policy-constructor kwargs},
                        "tuner": {TunerSpec fields} | null}, ...],
@@ -93,8 +118,10 @@ take their defaults)::
           | {"kind": "custom", "payload": <runner dict>},
         "decisions":                   # tuned specs only, else null
           [{"t", "config": {ConfigVector fields}, "fm_frac", "fm_pages",
-            "predicted_loss"}, ...] | null,
-        "watermark_log": [{"t", "old_fm", "new_fm"}, ...] | null
+            "predicted_loss", "degraded": str | null}, ...] | null,
+        "watermark_log": [{"t", "old_fm", "new_fm"}, ...] | null,
+        "fault_events":                # fault-injected runs only
+          [{"i": int, "kind": str, ...}, ...] | null
       }, ...]
     }
 
@@ -144,24 +171,36 @@ from repro.core.tuner import TunaTuner, TunerConfig, TunerDecision
 from repro.core.watermark import WatermarkController, WatermarkEvent
 from repro.sim.costmodel import HardwareProfile, IntervalCosts, OPTANE_LIKE
 from repro.sim.engine import SimResult, _simulate
+from repro.sim.faults import FaultInjector, FaultSpec
 from repro.sim.sweep import TunedSlice, _sweep_fm_fracs, _sweep_tuned
 from repro.tiering.page_pool import TieredPagePool
 from repro.tiering.policy import register_policy, resolve_policy
 
-RUNSET_SCHEMA = "tuna-runset-v2"
+RUNSET_SCHEMA = "tuna-runset-v3"
 # older schema versions from_json still understands (additive evolution)
-RUNSET_SCHEMA_COMPAT = ("tuna-runset-v1", RUNSET_SCHEMA)
+RUNSET_SCHEMA_COMPAT = ("tuna-runset-v1", "tuna-runset-v2", RUNSET_SCHEMA)
 
 __all__ = [
     "Experiment",
+    "FaultSpec",
     "PolicySpec",
     "RunRecord",
     "RunSet",
     "RUNSET_SCHEMA",
     "Scenario",
+    "ScenarioExecutionError",
     "TunerSpec",
     "run",
 ]
+
+
+class ScenarioExecutionError(RuntimeError):
+    """A scenario failed (or timed out) during :func:`run` fan-out.
+
+    Wraps the worker-side exception with the failing scenario's name and
+    its spec echo, so a fan-out failure is diagnosable without re-running
+    serially; the original exception rides along as ``__cause__``.
+    """
 
 
 # ------------------------------------------------------------------- specs
@@ -186,6 +225,12 @@ class TunerSpec:
     # watermark-controller actuation limits
     max_step_frac: float = 0.10
     deadband_frac: float = 0.005
+    # resilience knobs (see repro.core.tuner.TunerConfig): db outage
+    # retries before the watermarks freeze, and the shrink-hysteresis
+    # clamp (auto-enabled by the fault layer when telemetry noise is
+    # injected; False keeps the legacy bit-exact behaviour)
+    db_retry_limit: int = 3
+    shrink_confirm: bool = False
 
     def build(self, db) -> TunaTuner:
         """Construct the live tuner (controller unbound; the execution
@@ -209,6 +254,8 @@ class TunerSpec:
                 feedback=self.feedback,
                 feedback_margin=self.feedback_margin,
                 cooldown_windows=self.cooldown_windows,
+                db_retry_limit=self.db_retry_limit,
+                shrink_confirm=self.shrink_confirm,
             ),
         )
 
@@ -312,7 +359,11 @@ class Scenario:
     variant (paper Section 3.2/3.3) the database build needs.
     ``runner(scenario, fm_frac, policy_spec, db) -> dict`` swaps the whole
     execution engine (``backend="custom"``); ``params`` carries its
-    JSON-serializable knobs.
+    JSON-serializable knobs. ``faults`` opts into the deterministic
+    fault-injection layer (module docstring, *Fault model*); each
+    simulator backend gets its own :class:`~repro.sim.faults.
+    FaultInjector` over the same spec — identical seeded schedules,
+    independent per-pool trajectories.
     """
 
     trace: Trace | str | Callable[[], Trace] | None = None
@@ -325,6 +376,7 @@ class Scenario:
     fast_only_at_full: bool = False
     runner: Callable | None = None
     params: dict = field(default_factory=dict)
+    faults: FaultSpec | None = None
 
     @property
     def resolved_name(self) -> str:
@@ -370,6 +422,7 @@ class RunRecord:
     result: SimResult | dict
     decisions: list | None = None  # TunerDecision list (tuned specs)
     watermark_log: list | None = None  # WatermarkEvent list (tuned specs)
+    fault_events: list | None = None  # injected-fault log (fault runs)
 
 
 @dataclass
@@ -460,6 +513,7 @@ class RunSet:
                             if r.watermark_log is None
                             else [asdict(e) for e in r.watermark_log]
                         ),
+                        "fault_events": r.fault_events,
                     }
                     for r in self.runs
                 ],
@@ -489,6 +543,7 @@ class RunSet:
                     if r["watermark_log"] is None
                     else [WatermarkEvent(**x) for x in r["watermark_log"]]
                 ),
+                fault_events=r.get("fault_events"),
             )
             for r in d["runs"]
         ]
@@ -533,20 +588,24 @@ def _result_from_dict(d: dict):
 def _decision_to_dict(d: TunerDecision) -> dict:
     return {
         "t": d.t,
-        "config": d.config.to_dict(),
+        "config": None if d.config is None else d.config.to_dict(),
         "fm_frac": d.fm_frac,
         "fm_pages": d.fm_pages,
         "predicted_loss": d.predicted_loss,
+        "degraded": d.degraded,
     }
 
 
 def _decision_from_dict(d: dict) -> TunerDecision:
     return TunerDecision(
         t=d["t"],
-        config=ConfigVector(**d["config"]),
+        config=(
+            None if d["config"] is None else ConfigVector(**d["config"])
+        ),
         fm_frac=d["fm_frac"],
         fm_pages=d["fm_pages"],
         predicted_loss=d["predicted_loss"],
+        degraded=d.get("degraded"),
     )
 
 
@@ -628,6 +687,13 @@ def _run_scenario(
     if trace is None:
         raise ValueError(f"scenario {sname!r} has neither trace nor runner")
     cap = int(scenario.hw_capacity_pages or trace.rss_pages)
+    faults = scenario.faults
+
+    def make_injector():
+        # one injector per constructed policy instance: identical seeded
+        # schedules (pure hashes of the spec seed), independent per-pool
+        # retry/event state
+        return FaultInjector(faults) if faults is not None else None
 
     def trace_for(frac: float) -> Trace:
         if scenario.fast_only_at_full and frac >= 1.0 - 1e-9:
@@ -662,6 +728,9 @@ def _run_scenario(
             # instance serves every pass (stateful policies scope their
             # state per slice pool).
             group_policy = group[0][1].build_policy()
+            inj = make_injector()
+            if inj is not None:
+                group_policy.fault_injector = inj
             by_variant: dict = {}
             for pi, spec in group:
                 for fi, f in enumerate(_spec_fracs(spec, fm_fracs)):
@@ -684,6 +753,7 @@ def _run_scenario(
                     slices.append(TunedSlice(float(f), tuner, te))
                     keys.append((pi, fi, float(f), spec, tuner))
             results, keys = [], []
+            flog: list | None = [] if inj is not None else None
             for use_fast_only, (slices, vkeys) in by_variant.items():
                 results.extend(
                     _sweep_tuned(
@@ -694,11 +764,15 @@ def _run_scenario(
                         seed=scenario.seed,
                         kswapd_batch=scenario.kswapd_batch,
                         policy=group_policy,
+                        faults=inj,
+                        fault_log=flog,
                     )
                 )
                 keys.extend(vkeys)
             chunked += group_policy.chunked_steps
-            for (pi, fi, f, spec, tuner), res in zip(keys, results):
+            for si, ((pi, fi, f, spec, tuner), res) in enumerate(
+                zip(keys, results)
+            ):
                 cells[(pi, fi)] = RunRecord(
                     sname,
                     spec.name,
@@ -713,12 +787,16 @@ def _run_scenario(
                         if tuner is not None
                         else None
                     ),
+                    fault_events=flog[si] if flog is not None else None,
                 )
         else:
             for pi, spec in group:
                 # one policy instance per spec, shared across its trace
                 # variants (state is per pool, so variants stay isolated)
                 spec_policy = spec.build_policy()
+                inj = make_injector()
+                if inj is not None:
+                    spec_policy.fault_injector = inj
                 fracs = _spec_fracs(spec, fm_fracs)
                 farr = np.asarray(fracs, dtype=np.float64)
                 full = (
@@ -732,6 +810,7 @@ def _run_scenario(
                 if bool((~full).any()):
                     parts.append((np.flatnonzero(~full), trace))
                 for idxs, tr in parts:
+                    flog = [] if inj is not None else None
                     res = _sweep_fm_fracs(
                         tr,
                         farr[idxs],
@@ -741,6 +820,8 @@ def _run_scenario(
                         collect_configs=collect_configs,
                         kswapd_batch=scenario.kswapd_batch,
                         policy=spec_policy,
+                        faults=inj,
+                        fault_log=flog,
                     )
                     for j, fi in enumerate(idxs):
                         f = float(farr[fi])
@@ -751,6 +832,9 @@ def _run_scenario(
                             "sweep",
                             _sim_result_from_slice(
                                 res, j, _effective_fm(cap, f)
+                            ),
+                            fault_events=(
+                                flog[j] if flog is not None else None
                             ),
                         )
                 chunked += spec_policy.chunked_steps
@@ -763,6 +847,7 @@ def _run_scenario(
                 pool_factory, kswapd_batch=scenario.kswapd_batch
             )
         tuner = spec.tuner.build(db) if spec.tuner is not None else None
+        inj = make_injector()
         res = _simulate(
             trace_for(f),
             fm_frac=f,
@@ -775,6 +860,7 @@ def _run_scenario(
             ),
             seed=scenario.seed,
             pool_factory=pool_factory,
+            faults=inj,
         )
         cells[(pi, fi)] = RunRecord(
             sname,
@@ -786,6 +872,7 @@ def _run_scenario(
             watermark_log=(
                 list(tuner.controller.log) if tuner is not None else None
             ),
+            fault_events=inj.all_events() if inj is not None else None,
         )
 
     return _ordered(cells, policies, fm_fracs), chunked
@@ -806,11 +893,18 @@ def _run_scenario_star(args):
 def _run_scenario_trapped(args):
     """Fan-out wrapper: job exceptions come back as values, so the parent
     can tell a failing *job* (re-raise it) from a failing *executor*
-    (fall back to serial) — pool.map folds both into raised exceptions."""
+    (fall back to serial) — pool.map folds both into raised exceptions.
+    The failing scenario's name and spec echo ride along, so the parent's
+    re-raise identifies the job without a serial re-run."""
+    sc = args[0]
     try:
         return "ok", _run_scenario(*args)
     except Exception as e:  # noqa: BLE001 - transported, re-raised in parent
-        return "err", e
+        try:
+            echo = json.dumps(_scenario_ref(sc), sort_keys=True)
+        except Exception:  # noqa: BLE001 - echo is best-effort diagnostics
+            echo = "<unserializable scenario spec>"
+        return "err", (sc.resolved_name, echo, e)
 
 
 # --------------------------------------------------------------------- run
@@ -880,6 +974,23 @@ def _trace_ref(trace) -> dict | str | None:
     return _callable_ref(trace)
 
 
+def _scenario_ref(sc: Scenario) -> dict:
+    """One scenario's spec echo (provenance, cache key, error reports)."""
+    return {
+        "name": sc.resolved_name,
+        "trace": _trace_ref(sc.trace),
+        "seed": int(sc.seed),
+        "hw": asdict(sc.hw),
+        "hw_capacity_pages": sc.hw_capacity_pages,
+        "kswapd_batch": sc.kswapd_batch,
+        "pool_factory": _callable_ref(sc.pool_factory),
+        "fast_only_at_full": bool(sc.fast_only_at_full),
+        "runner": _callable_ref(sc.runner),
+        "params": sc.params,
+        "faults": sc.faults.to_dict() if sc.faults is not None else None,
+    }
+
+
 def _experiment_spec(
     experiment: Experiment, fm_fracs: tuple, policies: tuple, db
 ) -> dict:
@@ -887,21 +998,7 @@ def _experiment_spec(
         "name": experiment.name,
         "fm_fracs": list(fm_fracs),
         "collect_configs": bool(experiment.collect_configs),
-        "scenarios": [
-            {
-                "name": sc.resolved_name,
-                "trace": _trace_ref(sc.trace),
-                "seed": int(sc.seed),
-                "hw": asdict(sc.hw),
-                "hw_capacity_pages": sc.hw_capacity_pages,
-                "kswapd_batch": sc.kswapd_batch,
-                "pool_factory": _callable_ref(sc.pool_factory),
-                "fast_only_at_full": bool(sc.fast_only_at_full),
-                "runner": _callable_ref(sc.runner),
-                "params": sc.params,
-            }
-            for sc in experiment.scenarios
-        ],
+        "scenarios": [_scenario_ref(sc) for sc in experiment.scenarios],
         "policies": [
             {
                 "label": p.name,
@@ -919,6 +1016,80 @@ def _experiment_spec(
     }
 
 
+def _fanout(jobs: list, parallelism: int, scenario_timeout: float | None):
+    """Submit-based process fan-out over scenario jobs.
+
+    Returns the jobs' trapped ``("ok" | "err", ...)`` values in job
+    order, or ``None`` when process execution is unavailable (sandboxed
+    environment, or the executor broke twice) — the caller then falls
+    back to serial. Resilience contract:
+
+    * ``scenario_timeout`` bounds each job's wall-clock; a hung worker
+      raises :class:`ScenarioExecutionError` (naming the scenario)
+      instead of blocking ``run()`` forever. The dead executor is
+      abandoned without joining the hung worker.
+    * A broken executor (OOM-killed worker, fork ban mid-run) gets ONE
+      fresh executor for the jobs that did not finish; already-completed
+      results are kept, not recomputed. A second break gives up on
+      process fan-out entirely.
+    * Job-level exceptions are *values* (``("err", ...)`` from
+      :func:`_run_scenario_trapped`) and never trigger a resubmit or the
+      serial fallback — a bad spec or unreadable trace must fail fast,
+      not run twice.
+    """
+    try:
+        # fork (where available) spares each worker the interpreter +
+        # numpy import; the workers run pure-numpy engine code only
+        method = "fork" if "fork" in mp.get_all_start_methods() else None
+        ctx = mp.get_context(method)
+    except ValueError:
+        return None
+    results: list = [None] * len(jobs)
+    pending = list(range(len(jobs)))
+    for _attempt in range(2):
+        try:
+            pool = cf.ProcessPoolExecutor(parallelism, mp_context=ctx)
+        except (OSError, ValueError):
+            return None  # sandboxed / restricted env: serial fallback
+        futs = {i: pool.submit(_run_scenario_trapped, jobs[i]) for i in pending}
+        broken = False
+        timed_out: int | None = None
+        for i, fut in futs.items():
+            try:
+                results[i] = fut.result(timeout=scenario_timeout)
+            except cf.TimeoutError:
+                # must precede OSError: since 3.11 cf.TimeoutError IS the
+                # builtin TimeoutError, an OSError subclass
+                timed_out = i
+                break
+            except (OSError, cf.process.BrokenProcessPool):
+                broken = True
+                break
+        # never shutdown(wait=True): a hung or dying worker would block
+        # the parent on join
+        pool.shutdown(wait=False, cancel_futures=True)
+        if timed_out is not None:
+            name = jobs[timed_out][0].resolved_name
+            raise ScenarioExecutionError(
+                f"scenario {name!r} did not finish within "
+                f"scenario_timeout={scenario_timeout:g}s in a fan-out worker"
+            )
+        if not broken:
+            return results
+        # salvage whatever completed before the executor died, then
+        # resubmit only the remainder on the fresh executor
+        for i, fut in futs.items():
+            if results[i] is None and fut.done() and not fut.cancelled():
+                try:
+                    results[i] = fut.result(timeout=0)
+                except Exception:  # noqa: BLE001 - died with the executor
+                    pass
+        pending = [i for i in pending if results[i] is None]
+        if not pending:
+            return results
+    return None
+
+
 def _cache_path(cache_dir, name: str, spec: dict) -> Path:
     """Cache key: stable hash of the experiment spec echo + the RunSet
     schema version, so spec changes and schema bumps miss cleanly."""
@@ -934,6 +1105,7 @@ def run(
     db=None,
     parallelism: int | None = None,
     cache_dir=None,
+    scenario_timeout: float | None = None,
 ) -> RunSet:
     """Execute ``experiment`` and return a :class:`RunSet`.
 
@@ -942,7 +1114,15 @@ def run(
     custom runners receive it verbatim). ``parallelism`` fans scenarios out
     across processes — ``None`` keeps the database-build heuristic (serial
     below 12 scenarios, else one worker per core); sandboxed environments
-    fall back to serial execution automatically. ``cache_dir`` opts into
+    fall back to serial execution automatically, and a fan-out executor
+    that dies mid-run (OOM-killed worker) gets one fresh executor for the
+    unfinished scenarios before that fallback. ``scenario_timeout`` bounds
+    each fanned-out scenario's wall-clock seconds: a hung worker raises
+    :class:`ScenarioExecutionError` instead of blocking forever (``None``
+    = no bound; serial runs are never timed out). A scenario that *fails*
+    in a worker is re-raised as :class:`ScenarioExecutionError` naming the
+    scenario and echoing its spec, with the worker exception as
+    ``__cause__``. ``cache_dir`` opts into
     the RunSet result cache (see the module docstring's *Result caching*
     section): a directory under which the whole RunSet is memoized as its
     JSON document, keyed on the experiment spec echo + schema version.
@@ -1024,34 +1204,17 @@ def run(
     parallelism = max(1, min(int(parallelism), len(jobs)))
     outs = None
     if parallelism > 1:
-        try:
-            # fork (where available) spares each worker the interpreter +
-            # numpy import; the workers run pure-numpy engine code only
-            method = "fork" if "fork" in mp.get_all_start_methods() else None
-            ctx = mp.get_context(method)
-            pool = cf.ProcessPoolExecutor(parallelism, mp_context=ctx)
-        except (OSError, ValueError):
-            pool = None  # sandboxed / restricted env: fall back to serial
-        if pool is not None:
-            try:
-                with pool:
-                    chunk = max(1, len(jobs) // (4 * parallelism))
-                    trapped = list(
-                        pool.map(_run_scenario_trapped, jobs, chunksize=chunk)
-                    )
-            except (OSError, cf.process.BrokenProcessPool):
-                # executor died (sandbox, fork bans, OOM-killed worker):
-                # fall back to serial. Errors raised *by a job* come back
-                # as ("err", e) values instead and are re-raised below — a
-                # bad spec or unreadable trace must not trigger a full
-                # serial re-execution.
-                trapped = None
-            if trapped is not None:
-                outs = []
-                for tag, val in trapped:
-                    if tag == "err":
-                        raise val
-                    outs.append(val)
+        trapped = _fanout(jobs, parallelism, scenario_timeout)
+        if trapped is not None:
+            outs = []
+            for tag, val in trapped:
+                if tag == "err":
+                    name, echo, e = val
+                    raise ScenarioExecutionError(
+                        f"scenario {name!r} failed in a fan-out worker: "
+                        f"{type(e).__name__}: {e}\n  scenario spec: {echo}"
+                    ) from e
+                outs.append(val)
     if outs is None:
         outs = [_run_scenario_star(job) for job in jobs]
 

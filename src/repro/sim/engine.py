@@ -27,6 +27,7 @@ import numpy as np
 from repro.core.telemetry import ConfigVector, IntervalProfiler
 from repro.core.trace import Trace
 from repro.core.tuner import TunaTuner
+from repro.sim.faults import FaultInjector, FaultSpec
 from repro.sim.costmodel import (
     HardwareProfile,
     IntervalCosts,
@@ -66,6 +67,7 @@ def _simulate(
     tune_every: int | None = None,
     seed: int = 0,
     pool_factory=TieredPagePool,
+    faults: FaultSpec | FaultInjector | None = None,
 ) -> SimResult:
     """Run ``trace`` with the fast tier sized at ``fm_frac`` of its RSS.
 
@@ -77,9 +79,16 @@ def _simulate(
     ``pool_factory`` swaps the pool implementation (the equivalence tests
     and the engine benchmark run the same trace through
     :class:`repro.tiering.reference_pool.ReferencePagePool`).
+    ``faults`` (a :class:`repro.sim.faults.FaultSpec` or a pre-built
+    injector) turns on the deterministic fault model; ``None`` keeps the
+    exact fault-free hot path.
     """
     if policy is None:
         policy = TPPPolicy()
+    inj: FaultInjector | None = None
+    if faults is not None:
+        inj = faults if isinstance(faults, FaultInjector) else FaultInjector(faults)
+        policy.fault_injector = inj
     cap = int(hw_capacity_pages or trace.rss_pages)
     pool = pool_factory(
         num_pages=trace.rss_pages,
@@ -92,6 +101,8 @@ def _simulate(
         pool.place(trace.slow_pages, Tier.SLOW)
     if tuner is not None:
         tuner.bind_pool(pool, cap)
+        if inj is not None:
+            inj.wire_tuner(tuner)
     profiler = IntervalProfiler(
         hot_thr=getattr(policy, "hot_thr", 4), num_threads=trace.num_threads
     )
@@ -116,7 +127,17 @@ def _simulate(
                                  cachelines=pacc_f + pacc_s,
                                  warm_pages=warm_pg, warm_touches=warm_tc)
         before_direct = pool.stats.pgdemote_direct
-        outcome = policy.step(pool, ia.pages)
+        if inj is not None:
+            inj.begin_interval(pool)
+            base_kb = pool.kswapd_batch
+            eff_kb = inj.kswapd_budget(pool, base_kb)
+            if eff_kb != base_kb:
+                pool.kswapd_batch = eff_kb
+            outcome = policy.step(pool, ia.pages)
+            if eff_kb != base_kb:
+                pool.kswapd_batch = base_kb
+        else:
+            outcome = policy.step(pool, ia.pages)
         profiler.record_policy(outcome)
         mlp_eff = effective_mlp(counts_mem, hw.mlp, trace.num_threads)
         cost = interval_time(
@@ -145,7 +166,11 @@ def _simulate(
                 c.pacc_f + c.pacc_s for c in configs[-tune_every:]
             )
             tpa = sum(c.total for c in window) / max(acc, 1)
-            tuner.step(cv, t=t_now, measured_tpa=tpa)
+            if inj is not None:
+                cv_t, tpa, ok = inj.telemetry(pool, cv, tpa)
+                tuner.step(cv_t, t=t_now, measured_tpa=tpa, telemetry_ok=ok)
+            else:
+                tuner.step(cv, t=t_now, measured_tpa=tpa)
     return SimResult(
         name=trace.name,
         total_time=float(np.sum(times)),
@@ -167,6 +192,7 @@ def simulate(
     tune_every: int | None = None,
     seed: int = 0,
     pool_factory=TieredPagePool,
+    faults: FaultSpec | FaultInjector | None = None,
 ) -> SimResult:
     """Deprecated entry point; see :func:`repro.sim.api.run`.
 
@@ -191,6 +217,7 @@ def simulate(
         tune_every=tune_every,
         seed=seed,
         pool_factory=pool_factory,
+        faults=faults,
     )
 
 

@@ -182,6 +182,7 @@ def _sweep_run(
     tuners: list | None = None,
     tune_everys: list | None = None,
     kswapd_batch: int | None = None,
+    faults=None,
 ):
     """Shared sweep driver: one trace pass across the whole size vector.
 
@@ -226,6 +227,8 @@ def _sweep_run(
         for pool, tuner in zip(pools, tuners):
             if tuner is not None:
                 tuner.bind_pool(pool, cap)
+                if faults is not None:
+                    faults.wire_tuner(tuner)
 
     n_intervals = len(trace)
     times = np.zeros((n_sizes, n_intervals), dtype=np.float64)
@@ -335,7 +338,20 @@ def _sweep_run(
         # --- one cross-size policy decision batch (identical outcomes to
         # per-size TPPPolicy.step_hot_sorted calls, in order)
         before_direct = [pool.stats.pgdemote_direct for pool in pools]
-        outcomes = policy.step_batch(pools, cands, assume_unique=hot_unique)
+        if faults is not None:
+            # each slice pool advances its own fault-schedule cursor and
+            # may see its background-reclaim budget stalled or shed
+            base_kb = [pool.kswapd_batch for pool in pools]
+            for pool in pools:
+                faults.begin_interval(pool)
+                eff_kb = faults.kswapd_budget(pool, pool.kswapd_batch)
+                if eff_kb != pool.kswapd_batch:
+                    pool.kswapd_batch = eff_kb
+            outcomes = policy.step_batch(pools, cands, assume_unique=hot_unique)
+            for pool, kb in zip(pools, base_kb):
+                pool.kswapd_batch = kb
+        else:
+            outcomes = policy.step_batch(pools, cands, assume_unique=hot_unique)
         # --- per-size telemetry + cost
         for s, pool in enumerate(pools):
             outcome = outcomes[s]
@@ -393,9 +409,18 @@ def _sweep_run(
                         c.pacc_f + c.pacc_s for c in configs_out[s][-te:]
                     )
                     tpa = sum(c.total for c in window) / max(acc, 1)
-                    tuner.step(
-                        configs_out[s][-1], t=t_now[s], measured_tpa=tpa
-                    )
+                    if faults is not None:
+                        cv_t, tpa, ok = faults.telemetry(
+                            pools[s], configs_out[s][-1], tpa
+                        )
+                        tuner.step(
+                            cv_t, t=t_now[s], measured_tpa=tpa,
+                            telemetry_ok=ok,
+                        )
+                    else:
+                        tuner.step(
+                            configs_out[s][-1], t=t_now[s], measured_tpa=tpa
+                        )
     return times, pools, configs_out, fm_sizes, costs
 
 
@@ -409,6 +434,8 @@ def _sweep_fm_fracs(
     collect_configs: bool = False,
     kswapd_batch: int | None = None,
     policy: MigrationPolicy | None = None,
+    faults=None,
+    fault_log: list | None = None,
 ) -> SweepResult:
     """Run ``trace`` once, concurrently at every fraction in ``fm_fracs``.
 
@@ -429,8 +456,11 @@ def _sweep_fm_fracs(
         policy = TPPPolicy(hot_thr=hot_thr)
     times, pools, configs_out, _, costs = _sweep_run(
         trace, fm_fracs, policy, hw, hw_capacity_pages, seed,
-        collect_configs, kswapd_batch=kswapd_batch,
+        collect_configs, kswapd_batch=kswapd_batch, faults=faults,
     )
+    if faults is not None and fault_log is not None:
+        for pool in pools:
+            fault_log.append(faults.events(pool))
     return SweepResult(
         name=trace.name,
         fm_fracs=fm_fracs,
@@ -450,6 +480,8 @@ def _sweep_tuned(
     seed: int = 0,
     kswapd_batch: int | None = None,
     policy: MigrationPolicy | None = None,
+    faults=None,
+    fault_log: list | None = None,
 ) -> list:
     """Run ``trace`` once across a vector of :class:`TunedSlice` settings.
 
@@ -479,8 +511,11 @@ def _sweep_tuned(
     times, pools, configs_out, fm_sizes, costs = _sweep_run(
         trace, fm_fracs, policy, hw, hw_capacity_pages, seed,
         collect_configs=True, tuners=tuners, tune_everys=tune_everys,
-        kswapd_batch=kswapd_batch,
+        kswapd_batch=kswapd_batch, faults=faults,
     )
+    if faults is not None and fault_log is not None:
+        for pool in pools:
+            fault_log.append(faults.events(pool))
     return [
         SimResult(
             name=trace.name,

@@ -202,6 +202,10 @@ class MigrationPolicy:
         # executions of the per-chunk Python fallback loop by THIS
         # instance (see the module docstring's telemetry section)
         self.chunked_steps = 0
+        # a repro.sim.faults.FaultInjector attached by the execution
+        # engine for fault-injected runs; None (the default) keeps every
+        # step on the exact pre-fault-model path
+        self.fault_injector = None
 
     def step(
         self,
@@ -300,6 +304,11 @@ class TPPPolicy(MigrationPolicy):
         hottest_first = np.argsort(-acc_now[cand_mask], kind="stable")
         cand = cand[hottest_first]
         cand, n_rej = self._admit(pool, cand)
+        n_inj_fail = 0
+        if self.fault_injector is not None:
+            # injected transient migration failures (after admission: a
+            # failed attempt is an admitted migration the pool lost)
+            cand, n_inj_fail = self.fault_injector.filter_promotions(pool, cand)
         assume_unique = bool(
             cand.size
             and hasattr(pool, "_try_bulk_step")
@@ -307,6 +316,7 @@ class TPPPolicy(MigrationPolicy):
         )
         out = self.step_hot_sorted(pool, cand, assume_unique=assume_unique)
         out.pm_admit_fail += n_rej
+        out.pm_fail += n_inj_fail
         self._note_step(pool, cand, out)
         return out
 
@@ -404,14 +414,22 @@ class TPPPolicy(MigrationPolicy):
         size drops to the chunked loop. Outcome-identical to calling
         :meth:`step` per size, in order.
         """
-        admitted, rejected = [], []
+        admitted, rejected, inj_failed = [], [], []
+        fi = self.fault_injector
         for pool, cand in zip(pools, cands):
             a, r = self._admit(pool, cand)
+            n_inj = 0
+            if fi is not None:
+                a, n_inj = fi.filter_promotions(pool, a)
             admitted.append(a)
             rejected.append(r)
+            inj_failed.append(n_inj)
         outs = self._schedule_batch(pools, admitted, assume_unique)
-        for pool, a, r, out in zip(pools, admitted, rejected, outs):
+        for pool, a, r, n_inj, out in zip(
+            pools, admitted, rejected, inj_failed, outs
+        ):
             out.pm_admit_fail += r
+            out.pm_fail += n_inj
             self._note_step(pool, a, out)
         return outs
 

@@ -739,19 +739,28 @@ class TestPolicyRegistry:
             class Nameless(TPPPolicy):
                 kind = ""
 
-    def test_schema_v2_with_v1_compat(self):
+    def test_schema_v3_with_v1_v2_compat(self):
         import json as json_mod
 
         from repro.sim.api import RUNSET_SCHEMA
 
-        assert RUNSET_SCHEMA == "tuna-runset-v2"
+        assert RUNSET_SCHEMA == "tuna-runset-v3"
         tr = random_trace(41, n_intervals=4)
         rs = run(
             Experiment(scenarios=[Scenario(trace=tr)], fm_fracs=(0.5,))
         )
         d = json_mod.loads(rs.to_json())
-        assert d["schema"] == "tuna-runset-v2"
-        # a v1 document (no params echo) still loads: missing keys default
+        assert d["schema"] == "tuna-runset-v3"
+        # a v2 document (no fault_events / faults echo) still loads:
+        # missing keys default
+        for r in d["runs"]:
+            r.pop("fault_events")
+        for sc in d["spec"]["scenarios"]:
+            sc.pop("faults")
+        d["schema"] = "tuna-runset-v2"
+        back2 = RunSet.from_json(json_mod.dumps(d))
+        assert back2.result().stats == rs.result().stats
+        # a v1 document (no params echo either) still loads
         for p in d["spec"]["policies"]:
             p.pop("params")
         d["schema"] = "tuna-runset-v1"

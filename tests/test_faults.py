@@ -1,0 +1,418 @@
+"""The fault-injection layer's acceptance contract.
+
+With a seeded :class:`~repro.sim.faults.FaultSpec`: identical seeds
+reproduce identical fault-event logs (pure-hash schedules, no sequential
+RNG state), and the RunSet JSON round-trips the logs and degraded tuner
+decisions losslessly (schema ``tuna-runset-v3``). A db-outage scenario
+completes with ``degraded`` decisions instead of raising; retry-exhausted
+migrations surface in the paper's ``pgpromote_fail`` counter; a zero-rate
+spec (and ``faults=None``) stays bit-exact with the fault-free lanes.
+Satellite regressions ride along: PerfDB / ``TunaTuner._choose``
+non-finite hardening, and the fan-out worker error transport naming the
+failing scenario.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.perfdb import PerfDB, PerfDBUnavailable, PerfRecord
+from repro.core.telemetry import ConfigVector
+from repro.core.trace import IntervalAccess, Trace
+from repro.core.tuner import TunaTuner, TunerConfig
+from repro.core.watermark import WatermarkController
+from repro.sim.api import (
+    Experiment,
+    PolicySpec,
+    RunSet,
+    Scenario,
+    ScenarioExecutionError,
+    TunerSpec,
+    run,
+)
+from repro.sim.api import _run_scenario_trapped
+from repro.sim.faults import FaultInjector, FaultSpec
+
+
+def random_trace(seed, rss=4_000, n_intervals=10):
+    rng = np.random.default_rng(seed)
+    tr = Trace(name=f"rand{seed}", rss_pages=rss)
+    for _ in range(n_intervals):
+        k = int(rng.integers(300, 1600))
+        pages = rng.choice(rss, size=k, replace=False)
+        tr.append(
+            IntervalAccess(
+                pages=pages, counts=rng.integers(1, 9, size=k), ops=1000.0
+            )
+        )
+    return tr
+
+
+def synthetic_db(rss=4_000, max_loss=0.4):
+    grid = np.round(np.arange(1.0, 0.19, -0.05), 3)
+    cv = ConfigVector(
+        pacc_f=10_000, pacc_s=500, pm_de=20, pm_pr=20, ai=6.0,
+        rss_pages=rss, hot_thr=4, num_threads=1,
+    )
+    db = PerfDB()
+    db.add(
+        PerfRecord(
+            config=cv, fm_fracs=grid,
+            times=1.0 + np.linspace(0.0, max_loss, grid.size),
+        )
+    )
+    db.build()
+    return db
+
+
+TUNED = TunerSpec(target_loss=0.05, tune_every=2, max_step_frac=0.08)
+
+
+class _StubStats:
+    def __init__(self):
+        self.pgpromote_fail = 0
+
+
+class _StubPool:
+    """Just enough pool surface for FaultInjector unit tests."""
+
+    def __init__(self, num_pages=64):
+        self.num_pages = num_pages
+        self.stats = _StubStats()
+
+
+# ------------------------------------------------------- injector unit tests
+
+
+def test_faultspec_validation_and_roundtrip():
+    with pytest.raises(ValueError):
+        FaultSpec(promote_fail_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultSpec(db_outage_rate=-0.1)
+    with pytest.raises(ValueError):
+        FaultSpec(max_retries=-1)
+    with pytest.raises(ValueError):
+        FaultSpec(telemetry_noise_scale=-0.5)
+    spec = FaultSpec(seed=9, promote_fail_rate=0.3, db_outage_rate=0.2)
+    d = json.loads(json.dumps(spec.to_dict()))
+    assert FaultSpec.from_dict(d) == spec
+
+
+def test_retry_backoff_then_exhaustion_unit():
+    # rate 1.0: every attempt fails. max_retries=1 => the second
+    # consecutive failed attempt abandons the migration.
+    inj = FaultInjector(
+        FaultSpec(seed=1, promote_fail_rate=1.0, max_retries=1,
+                  backoff_base=1)
+    )
+    pool = _StubPool()
+    cand = np.arange(10, dtype=np.int64)
+
+    inj.begin_interval(pool)  # t=0
+    kept, n_failed = inj.filter_promotions(pool, cand)
+    assert kept.size == 0 and n_failed == 10
+    assert pool.stats.pgpromote_fail == 0  # all transient so far
+
+    inj.begin_interval(pool)  # t=1: backoff (blocked_until=1) has expired
+    kept, n_failed = inj.filter_promotions(pool, cand)
+    assert kept.size == 0 and n_failed == 10
+    assert pool.stats.pgpromote_fail == 10  # second failure exhausts
+    kinds = [e["kind"] for e in inj.events(pool)]
+    assert kinds == ["promote_fail_transient", "promote_fail_exhausted"]
+
+
+def test_backoff_withholds_without_counting_attempts():
+    inj = FaultInjector(
+        FaultSpec(seed=1, promote_fail_rate=1.0, max_retries=3,
+                  backoff_base=2)
+    )
+    pool = _StubPool()
+    cand = np.arange(8, dtype=np.int64)
+    inj.begin_interval(pool)  # t=0: all fail, blocked_until=2
+    inj.filter_promotions(pool, cand)
+    inj.begin_interval(pool)  # t=1: still in backoff
+    kept, n_failed = inj.filter_promotions(pool, cand)
+    assert kept.size == 0 and n_failed == 0  # withheld, not attempted
+    assert inj.events(pool)[-1]["kind"] == "promote_backoff_withheld"
+    assert pool.stats.pgpromote_fail == 0
+
+
+def test_kswapd_stall_and_demote_shed_unit():
+    inj = FaultInjector(FaultSpec(seed=2, kswapd_stall_rate=1.0))
+    pool = _StubPool()
+    inj.begin_interval(pool)
+    assert inj.kswapd_budget(pool, 100) == 0
+    assert inj.events(pool)[-1]["kind"] == "kswapd_stall"
+
+    inj2 = FaultInjector(FaultSpec(seed=2, demote_fail_rate=0.5))
+    pool2 = _StubPool()
+    inj2.begin_interval(pool2)
+    eff = inj2.kswapd_budget(pool2, 100)
+    assert 0 <= eff <= 50  # at least base*rate slots shed
+    assert inj2.events(pool2)[-1]["kind"] == "demote_fail"
+
+
+def test_telemetry_drop_and_noise_unit():
+    cv = ConfigVector(
+        pacc_f=1000, pacc_s=100, pm_de=10, pm_pr=10, ai=4.0,
+        rss_pages=2_000, hot_thr=4, num_threads=1,
+    )
+    inj = FaultInjector(FaultSpec(seed=3, telemetry_drop_rate=1.0))
+    pool = _StubPool()
+    inj.begin_interval(pool)
+    _, _, ok = inj.telemetry(pool, cv, 1.0)
+    assert not ok
+
+    inj2 = FaultInjector(
+        FaultSpec(seed=3, telemetry_noise_rate=1.0, telemetry_noise_scale=0.5)
+    )
+    pool2 = _StubPool()
+    inj2.begin_interval(pool2)
+    cv2, tpa2, ok2 = inj2.telemetry(pool2, cv, 1.0)
+    assert ok2
+    f = inj2.events(pool2)[-1]["factor"]
+    assert 0.5 <= f <= 1.5 and f != 1.0
+    assert cv2.pacc_f == pytest.approx(cv.pacc_f * f)
+    assert tpa2 == pytest.approx(f)
+    # the schedule is a pure hash: a fresh injector reproduces the factor
+    inj3 = FaultInjector(inj2.spec)
+    pool3 = _StubPool()
+    inj3.begin_interval(pool3)
+    _, tpa3, _ = inj3.telemetry(pool3, cv, 1.0)
+    assert tpa3 == tpa2
+
+
+def test_per_pool_state_is_independent():
+    inj = FaultInjector(
+        FaultSpec(seed=4, promote_fail_rate=1.0, max_retries=0)
+    )
+    a, b = _StubPool(), _StubPool()
+    cand = np.arange(5, dtype=np.int64)
+    inj.begin_interval(a)
+    inj.filter_promotions(a, cand)
+    assert a.stats.pgpromote_fail == 5  # max_retries=0: first failure exhausts
+    assert b.stats.pgpromote_fail == 0
+    assert inj.events(b) == []
+    assert inj.all_events() == inj.events(a)
+
+
+# -------------------------------------------------------- end-to-end (api)
+
+
+def _fault_exp(tr, spec, tuner=None, fm=0.5, name="faulted"):
+    return Experiment(
+        name=name,
+        scenarios=[Scenario(trace=tr, name=f"{tr.name}@{name}", faults=spec)],
+        fm_fracs=(fm,),
+        policies=[PolicySpec(label="p", tuner=tuner)],
+    )
+
+
+def test_identical_seed_identical_event_log():
+    tr = random_trace(11, n_intervals=8)
+    spec = FaultSpec(
+        seed=5, promote_fail_rate=0.5, max_retries=1,
+        telemetry_drop_rate=0.3, db_outage_rate=0.4,
+    )
+    db = synthetic_db()
+    a = run(_fault_exp(tr, spec, tuner=TUNED), db=db).record()
+    b = run(_fault_exp(tr, spec, tuner=TUNED), db=db).record()
+    assert a.fault_events  # the harsh spec actually injected something
+    assert a.fault_events == b.fault_events
+    assert a.result.stats == b.result.stats
+    assert [d.degraded for d in a.decisions] == [
+        d.degraded for d in b.decisions
+    ]
+    # a different seed reshuffles the schedule
+    other = FaultSpec(**{**spec.to_dict(), "seed": 6})
+    c = run(_fault_exp(tr, other, tuner=TUNED), db=db).record()
+    assert c.fault_events != a.fault_events
+
+
+def test_retry_exhausted_surfaces_in_pgpromote_fail():
+    tr = random_trace(12, n_intervals=8)
+    spec = FaultSpec(seed=7, promote_fail_rate=0.9, max_retries=0)
+    rec = run(_fault_exp(tr, spec)).record()
+    assert rec.result.stats["pgpromote_fail"] > 0
+    kinds = {e["kind"] for e in rec.fault_events}
+    assert "promote_fail_exhausted" in kinds
+
+
+def test_db_outage_degrades_instead_of_raising():
+    tr = random_trace(13, n_intervals=12)
+    spec = FaultSpec(seed=8, db_outage_rate=0.9, db_outage_len=2)
+    tuner = TunerSpec(target_loss=0.05, tune_every=2, max_step_frac=0.08,
+                      db_retry_limit=1)
+    rec = run(_fault_exp(tr, spec, tuner=tuner, fm=1.0), db=synthetic_db()
+              ).record()
+    degraded = [d.degraded for d in rec.decisions if d.degraded is not None]
+    assert degraded, "a near-certain outage must degrade some decisions"
+    assert set(degraded) <= {"db_outage", "db_backoff", "db_outage_frozen"}
+    assert "db_outage_frozen" in degraded  # streak passed db_retry_limit=1
+
+
+def test_telemetry_dropout_holds_watermarks():
+    tr = random_trace(14, n_intervals=10)
+    spec = FaultSpec(seed=9, telemetry_drop_rate=1.0)
+    rec = run(_fault_exp(tr, spec, tuner=TUNED, fm=1.0), db=synthetic_db()
+              ).record()
+    assert rec.decisions
+    assert all(d.degraded == "telemetry_dropout" for d in rec.decisions)
+    # every decision held the current size: no watermark moves at all
+    assert not rec.watermark_log
+
+
+def test_zero_rate_spec_is_bit_exact_with_no_faults():
+    tr = random_trace(15, n_intervals=8)
+    db = synthetic_db()
+    base = run(_fault_exp(tr, None, tuner=TUNED), db=db).record()
+    zero = run(_fault_exp(tr, FaultSpec(seed=99), tuner=TUNED), db=db
+               ).record()
+    assert zero.result.stats == base.result.stats
+    assert np.array_equal(
+        zero.result.interval_times, base.result.interval_times
+    )
+    assert [d.fm_pages for d in zero.decisions] == [
+        d.fm_pages for d in base.decisions
+    ]
+    assert base.fault_events is None
+    assert not zero.fault_events  # injector exists but logged nothing
+
+
+def test_runset_v3_roundtrip_preserves_fault_provenance():
+    tr = random_trace(16, n_intervals=8)
+    spec = FaultSpec(
+        seed=10, promote_fail_rate=0.6, max_retries=1,
+        telemetry_drop_rate=0.4, db_outage_rate=0.5,
+    )
+    rs = run(_fault_exp(tr, spec, tuner=TUNED), db=synthetic_db())
+    rs2 = RunSet.from_json(rs.to_json())
+    assert rs2.spec["scenarios"][0]["faults"] == spec.to_dict()
+    a, b = rs.record(), rs2.record()
+    assert a.fault_events and b.fault_events == a.fault_events
+    assert [d.degraded for d in a.decisions] == [
+        d.degraded for d in b.decisions
+    ]
+    assert b.result.stats == a.result.stats
+
+
+# ------------------------------------------- degraded inputs (satellite 1)
+
+
+def _grid_record(cv, max_loss=0.4, times=None):
+    grid = np.round(np.arange(1.0, 0.19, -0.05), 3)
+    if times is None:
+        times = 1.0 + np.linspace(0.0, max_loss, grid.size)
+    return PerfRecord(config=cv, fm_fracs=grid, times=times)
+
+
+def test_perfdb_query_skips_nonfinite_records():
+    grid = np.round(np.arange(1.0, 0.19, -0.05), 3)
+    good_cv = ConfigVector(
+        pacc_f=10_000, pacc_s=500, pm_de=20, pm_pr=20, ai=6.0,
+        rss_pages=4_000, hot_thr=4, num_threads=1,
+    )
+    bad_cv = ConfigVector(
+        pacc_f=10_100, pacc_s=510, pm_de=21, pm_pr=21, ai=6.0,
+        rss_pages=4_100, hot_thr=4, num_threads=1,
+    )
+    bad_times = 1.0 + np.linspace(0.0, 0.4, grid.size)
+    bad_times[3] = np.nan
+    db = PerfDB()
+    db.add(_grid_record(good_cv))
+    db.add(PerfRecord(config=bad_cv, fm_fracs=grid, times=bad_times))
+    db.build()
+    with pytest.warns(RuntimeWarning, match="non-finite"):
+        out = db.query(good_cv, k=2)
+    assert len(out) == 1 and out[0].config is good_cv
+
+
+def test_tuner_choose_skips_nonfinite_loss_curves():
+    cv = ConfigVector(
+        pacc_f=10_000, pacc_s=500, pm_de=20, pm_pr=20, ai=6.0,
+        rss_pages=4_000, hot_thr=4, num_threads=1,
+    )
+    grid = np.round(np.arange(1.0, 0.19, -0.05), 3)
+    # a NaN in the curve (finite baseline) poisons the predicted loss
+    bad_times = np.ones(grid.size)
+    bad_times[5] = np.nan
+    bad = PerfRecord(config=cv, fm_fracs=grid, times=bad_times)
+    good = _grid_record(cv, max_loss=0.02)
+    tuner = TunaTuner(PerfDB(), WatermarkController(), TunerConfig())
+    with pytest.warns(RuntimeWarning, match="non-finite"):
+        frac, loss = tuner._choose([bad, good])
+    assert frac is not None and np.isfinite(loss)
+    with pytest.warns(RuntimeWarning, match="non-finite"):
+        assert tuner._choose([bad]) == (None, None)
+
+
+def test_tuner_survives_real_perfdb_unavailable():
+    class _DownDB(PerfDB):
+        def query(self, cv, k=1):
+            raise PerfDBUnavailable("db down")
+
+    tr = random_trace(17, n_intervals=10)
+    db = _DownDB()
+    db.add(_grid_record(ConfigVector(
+        pacc_f=10_000, pacc_s=500, pm_de=20, pm_pr=20, ai=6.0,
+        rss_pages=4_000, hot_thr=4, num_threads=1,
+    )))
+    db.build()
+    tuner = TunerSpec(target_loss=0.05, tune_every=2, db_retry_limit=1)
+    rec = run(
+        Experiment(
+            scenarios=[Scenario(trace=tr)],
+            fm_fracs=(1.0,),
+            policies=[PolicySpec(label="p", tuner=tuner)],
+        ),
+        db=db,
+    ).record()
+    degraded = [d.degraded for d in rec.decisions if d.degraded is not None]
+    assert degraded and set(degraded) <= {
+        "db_outage", "db_backoff", "db_outage_frozen"
+    }
+
+
+# ------------------------------------ worker error transport (satellite 2)
+
+
+def _boom_trace():
+    raise RuntimeError("kaboom: synthetic trace-factory failure")
+
+
+def test_worker_error_transport_names_scenario():
+    sc = Scenario(trace=_boom_trace, name="boom")
+    policies = (PolicySpec(),)
+    job = (sc, (1.0,), policies, None, False,
+           (policies[0].policy_cls,))
+    tag, val = _run_scenario_trapped(job)
+    assert tag == "err"
+    name, echo, e = val
+    assert name == "boom"
+    assert isinstance(e, RuntimeError) and "kaboom" in str(e)
+    spec_echo = json.loads(echo)
+    assert spec_echo["name"] == "boom"
+    assert spec_echo["faults"] is None
+
+
+@pytest.mark.filterwarnings("ignore:os.fork:RuntimeWarning")
+def test_failing_scenario_raises_with_context():
+    tr = random_trace(18, n_intervals=4)
+    exp = Experiment(
+        scenarios=[
+            Scenario(trace=tr, name="good"),
+            Scenario(trace=_boom_trace, name="boom"),
+        ],
+        fm_fracs=(0.5,),
+    )
+    # with a live process pool this is a ScenarioExecutionError naming the
+    # scenario; sandboxed serial fallback surfaces the raw worker error
+    with pytest.raises(RuntimeError) as ei:
+        run(exp, parallelism=2)
+    if isinstance(ei.value, ScenarioExecutionError):
+        msg = str(ei.value)
+        assert "boom" in msg and "scenario spec" in msg
+        assert isinstance(ei.value.__cause__, RuntimeError)
+    else:
+        assert "kaboom" in str(ei.value)

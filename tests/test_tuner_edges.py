@@ -1,0 +1,129 @@
+"""Feedback-guard edge cases of :class:`~repro.core.tuner.TunaTuner`.
+
+The closed-loop guard (DESIGN.md §8) compares measured time-per-access
+against a full-size reference. Its edges: a zero measured TPA (no
+accesses this window) must not divide or trip the guard; a violation
+before any reference was ever established must fall through to the
+database path instead of crashing; cooldown expiry must hand control
+back to the database with the learned ``_floor_frac`` still clamping
+shrinks; and the double-``set_size`` hard grow must clamp at peak
+without overshooting or double-logging.
+"""
+
+import numpy as np
+
+from repro.core.perfdb import PerfDB, PerfRecord
+from repro.core.telemetry import ConfigVector
+from repro.core.tuner import TunaTuner, TunerConfig
+from repro.core.watermark import WatermarkController
+from repro.tiering.page_pool import TieredPagePool
+
+CAP = 1_000
+
+
+def _cv():
+    return ConfigVector(
+        pacc_f=10_000, pacc_s=500, pm_de=20, pm_pr=20, ai=6.0,
+        rss_pages=CAP, hot_thr=4, num_threads=1,
+    )
+
+
+def _db(max_loss=0.02):
+    """Every size within target: the db path always proposes the min frac."""
+    grid = np.round(np.arange(1.0, 0.19, -0.05), 3)
+    db = PerfDB()
+    db.add(PerfRecord(
+        config=_cv(), fm_fracs=grid,
+        times=1.0 + np.linspace(0.0, max_loss, grid.size),
+    ))
+    db.build()
+    return db
+
+
+def _tuner(db=None, start_frac=1.0, max_step_frac=0.2, **cfg):
+    pool = TieredPagePool(CAP, CAP)
+    tuner = TunaTuner(
+        db if db is not None else _db(),
+        WatermarkController(max_step_frac=max_step_frac, deadband_frac=0.0),
+        TunerConfig(target_loss=0.05, cooldown_windows=3, **cfg),
+    ).bind_pool(pool, CAP)
+    if start_frac < 1.0:
+        pool.set_fm_size(int(start_frac * CAP))
+    return tuner, pool
+
+
+def test_zero_measured_tpa_skips_feedback_guard():
+    # a window with no sampled accesses reports tpa=0; the guard must not
+    # treat that as an infinite-speedup reference or a violation
+    tuner, pool = _tuner(start_frac=0.5)
+    tuner._ref_tpa = 1.0  # a violation would trigger if tpa were trusted
+    d = tuner.step(_cv(), measured_tpa=0.0)
+    assert tuner._cooldown == 0 and tuner._floor_frac == 0.0
+    assert d.fm_frac is not None  # fell through to the database path
+
+
+def test_violation_without_reference_falls_through():
+    # cur_frac < 0.97 from the first step: no reference is ever captured,
+    # so even a huge measured TPA cannot be judged — db path decides
+    tuner, pool = _tuner(start_frac=0.5)
+    d = tuner.step(_cv(), measured_tpa=1e9)
+    assert tuner._ref_tpa is None
+    assert tuner._cooldown == 0
+    assert d.fm_frac is not None and d.degraded is None
+
+
+def test_reference_is_min_over_full_size_windows():
+    # step loss curve: any shrink at all busts the target, so the db path
+    # holds the pool at peak and every window is a reference window
+    grid = np.round(np.arange(1.0, 0.19, -0.05), 3)
+    db = PerfDB()
+    db.add(PerfRecord(
+        config=_cv(), fm_fracs=grid,
+        times=np.where(grid >= 1.0 - 1e-9, 1.0, 1.4),
+    ))
+    db.build()
+    tuner, pool = _tuner(db=db, start_frac=1.0)
+    tuner.step(_cv(), measured_tpa=2.0)
+    tuner.step(_cv(), measured_tpa=1.5)
+    tuner.step(_cv(), measured_tpa=1.8)  # recovery window must not raise it
+    assert tuner._ref_tpa == 1.5
+
+
+def test_cooldown_expiry_keeps_floor_frac_clamp():
+    tuner, pool = _tuner(start_frac=0.9)
+    tuner._cooldown = 1
+    tuner._floor_frac = 0.8
+    held = tuner.step(_cv(), measured_tpa=None)
+    assert held.fm_frac is None and tuner._cooldown == 0
+    # next window: db proposes the grid minimum (0.2) but the learned
+    # floor must clamp it
+    d = tuner.step(_cv(), measured_tpa=None)
+    assert d.fm_frac == 0.8
+    # actuation respects the controller's per-call step limit
+    assert d.fm_pages >= int(0.9 * CAP) - int(0.2 * CAP)
+
+
+def test_feedback_grow_clamps_at_peak():
+    # violation near full size: the hard grow (two controller steps of
+    # 2*max_step_frac each) must saturate at peak, not overshoot
+    tuner, pool = _tuner(start_frac=0.9, max_step_frac=0.2)
+    tuner._ref_tpa = 1.0
+    d = tuner.step(_cv(), measured_tpa=1.2)  # 20% loss >> 5% target
+    assert d.fm_pages == CAP and d.fm_frac == 1.0
+    assert pool.effective_fm_size == CAP
+    assert tuner._cooldown == tuner.cfg.cooldown_windows
+    assert tuner._floor_frac == 1.0
+    # the second set_size was a no-op at peak: exactly one audit event
+    assert len(tuner.controller.log) == 1
+    assert tuner.controller.log[0].new_fm == CAP
+
+
+def test_grow_clamp_from_deep_start_takes_both_steps():
+    tuner, pool = _tuner(start_frac=0.5, max_step_frac=0.1)
+    tuner._ref_tpa = 1.0
+    d = tuner.step(_cv(), measured_tpa=2.0)
+    # each set_size is clamped to one controller step (0.1*CAP): the
+    # double-call grows exactly two steps, well short of peak
+    assert d.fm_pages == int(0.5 * CAP) + 2 * int(0.1 * CAP)
+    assert len(tuner.controller.log) == 2
+    assert tuner._floor_frac == d.fm_pages / CAP
