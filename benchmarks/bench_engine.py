@@ -32,6 +32,20 @@ to end, seed vs current engine:
    bit-identical, actually rejecting candidates (``pm_admit_fail`` > 0),
    and chunked-loop-free, so the pluggable backends' sweep path cannot
    silently regress onto the per-size chunked loop.
+6. **jax path** — the same churn scenario through the accelerator-native
+   sweep backend (``Scenario(engine="jax")``, :mod:`repro.sim.jax_engine`,
+   Pallas victim-partition kernel per ``REPRO_PALLAS``). Seed side: the
+   *numpy sweep* (the equivalence oracle), not the reference pool — the
+   lane gates the device step against the oracle it must match bit-for-bit
+   (stats, interval times, config vectors) before timing. On 2-core CI
+   runners under interpret mode the ratio is informational headroom; the
+   equivalence assertions are the contract.
+7. **stress section** — a fleet-sized experiment: 1000 tiny scenarios
+   (150 in quick mode) through the :func:`repro.sim.api.run` planner and
+   its process fan-out in one call. Correctness-gated (every scenario must
+   complete, with zero chunked steps); wall clock is reported as
+   ``stress_path_*`` keys, informational (there is no seed-side twin to
+   ratio against).
 
 Plus single-run engine throughput (intervals/sec) on the application
 trace. Every path is asserted to produce bit-identical outputs (config
@@ -53,7 +67,15 @@ run on the same machine in the same job, so the ratio cancels runner
 speed while still failing when the optimized path regresses relative to
 the frozen seed implementation. ``--update-baseline`` refreshes the
 committed baseline's ``quick_baseline`` section in place (run it on a
-CI-class 2-core box).
+CI-class 2-core box). Mixed-mode baseline updates are refused:
+``--update-baseline`` without ``--quick`` errors out (full runs rewrite
+the top level themselves), quick mode refuses ``--out BENCH_engine.json``
+(that would clobber the committed full baseline with quick medians), and
+the gate refuses to compare a quick run against a baseline that has no
+``quick_baseline`` section. Schema additions for the new lanes:
+``jax_path_{seed_s,new_s,speedup,ratio}``, ``jax_sweep_chunked_steps``,
+``jax_migrations``, ``jax_pallas_mode``, and ``stress_scenarios``,
+``stress_path_new_s``, ``stress_scenarios_per_s``.
 
 The application trace is a self-contained deterministic stand-in for the
 benchmark workloads (xsbench-scale RSS, skewed reuse, a migrating hot
@@ -62,6 +84,7 @@ front) — no multi-second workload generation inside the harness.
 
 from __future__ import annotations
 
+import functools
 import json
 import os
 import time
@@ -122,6 +145,8 @@ class BenchParams:
     thrash_intervals: int = 40
     thrash_fracs: tuple = (0.6, 0.45, 0.35, 0.25)
     thrash_repeats: int = 5
+    # fleet-sized planner stress: scenario count for the stress section
+    stress_scenarios: int = 1000
 
 
 FULL = BenchParams(quick=False)
@@ -137,6 +162,7 @@ QUICK = BenchParams(
     thrash_rss=8_000,
     thrash_intervals=16,
     thrash_repeats=4,
+    stress_scenarios=150,
 )
 
 
@@ -156,6 +182,24 @@ def _app_trace(rss: int, n_intervals: int, seed: int = 7) -> Trace:
         counts = rng.integers(1, 8, size=pages.size)
         tr.append(IntervalAccess(pages=pages, counts=counts,
                                  ops=float(counts.sum()) * 40.0))
+    return tr
+
+
+def _stress_trace(seed: int) -> Trace:
+    """One fleet-stress workload: a tiny deterministic churn trace.
+
+    Module-level (and invoked via ``functools.partial``) so the planner's
+    process fan-out can pickle the factory instead of shipping arrays.
+    """
+    rng = np.random.default_rng(seed)
+    rss = 400
+    tr = Trace(name=f"stress{seed}", rss_pages=rss)
+    hot_n = 260 + int(rng.integers(0, 80))
+    for i in range(4):
+        hot = (np.arange(hot_n) + i * 97) % rss
+        pages = np.unique(np.concatenate([hot, rng.choice(rss, 40, replace=False)]))
+        counts = rng.integers(4, 9, size=pages.size)
+        tr.append(IntervalAccess(pages=pages, counts=counts, ops=100.0))
     return tr
 
 
@@ -524,6 +568,105 @@ def run(report, params: BenchParams = FULL) -> dict:
             empty_msg="engine bench: admission policy rejected no candidates",
         )
 
+    # --- the jax path: the same churn scenario through the
+    #     accelerator-native sweep backend. Seed side is the *numpy sweep*
+    #     (the equivalence oracle the device step must match bit-for-bit),
+    #     not the reference pool — this lane gates the jitted JAX step +
+    #     Pallas victim-partition kernel against the oracle. Equivalence
+    #     (stats, interval times, config vectors) is asserted on the first
+    #     pair of runs, before any timing; the first new-side call also
+    #     warms the jit cache so compile time stays out of the record. On
+    #     2-core CI runners under interpret mode the speedup is
+    #     informational headroom — the equivalence assertions are the
+    #     contract the gate protects.
+    def _seed_jax():
+        return run_experiment(
+            Experiment(
+                name="bench_jax_oracle",
+                scenarios=[Scenario(trace=thrash_tr, engine="numpy")],
+                fm_fracs=tuple(float(f) for f in thrash_fracs),
+                collect_configs=True,
+            )
+        ).runs
+
+    def _new_jax():
+        return run_experiment(
+            Experiment(
+                name="bench_jax",
+                scenarios=[Scenario(trace=thrash_tr, engine="jax")],
+                fm_fracs=tuple(float(f) for f in thrash_fracs),
+                collect_configs=True,
+            )
+        )
+
+    def _check_jax(r_seed, rec):
+        if r_seed.backend != "sweep" or rec.backend != "jax_sweep":
+            raise AssertionError(
+                "engine bench: jax path routed to the wrong backends "
+                f"({r_seed.backend!r} vs {rec.backend!r})"
+            )
+        if (
+            r_seed.result.stats != rec.result.stats
+            or not np.array_equal(
+                r_seed.result.interval_times, rec.result.interval_times
+            )
+            or r_seed.result.configs != rec.result.configs
+        ):
+            raise AssertionError(
+                "engine bench: jax path outputs diverge from the numpy sweep"
+            )
+        return rec.result.migrations
+
+    jx_seed, jx_new, jax_speedup, jax_ratio, jax_chunked, \
+        jax_migrations = _churn_lane(
+            report, "jax", _seed_jax, _new_jax, _check_jax,
+            p.thrash_repeats,
+            # without churn the lane never exercises the device commit path
+            empty_msg="engine bench: jax path scenario did not migrate",
+        )
+
+    # --- fleet-sized stress: the run() planner and its process fan-out at
+    #     experiment scale — p.stress_scenarios tiny scenarios (1000 full,
+    #     scaled down in quick mode) in one call. Correctness-gated: every
+    #     scenario must come back, all on the bulk sweep path, with real
+    #     migration activity. Wall clock lands in the informational
+    #     ``stress_path_*`` keys — there is no seed-side twin to ratio
+    #     against, so the timing gate does not apply to this section.
+    stress_n = int(p.stress_scenarios)
+    stress_scenarios = [
+        Scenario(trace=functools.partial(_stress_trace, s), name=f"stress{s}")
+        for s in range(stress_n)
+    ]
+
+    def _stress_run():
+        return run_experiment(
+            Experiment(
+                name="bench_stress",
+                scenarios=stress_scenarios,
+                fm_fracs=(0.5,),
+            )
+        )
+
+    stress_box = []
+    stress_t = _timed(lambda: stress_box.append(_stress_run()))
+    stress_rs = stress_box[0]
+    if len(stress_rs.runs) != stress_n:
+        raise AssertionError(
+            f"engine bench: stress fan-out returned {len(stress_rs.runs)} "
+            f"of {stress_n} scenarios"
+        )
+    if stress_rs.chunked_step_count != 0:
+        raise AssertionError(
+            "engine bench: stress sweep fell off the bulk policy step"
+        )
+    stress_migrations = sum(r.result.migrations for r in stress_rs.runs)
+    if stress_migrations <= 0:
+        raise AssertionError("engine bench: stress scenarios did not migrate")
+    report(
+        "engine/stress_path_new", stress_t * 1e6,
+        f"{stress_n} scenarios in {stress_t:.2f}s",
+    )
+
     results = {
         "quick": p.quick,
         "n_configs": len(configs),
@@ -567,6 +710,16 @@ def run(report, params: BenchParams = FULL) -> dict:
         "admission_path_new_s": round(adm_new_t, 3),
         "admission_path_speedup": round(adm_speedup, 2),
         "admission_path_ratio": round(adm_ratio, 4),
+        "jax_pallas_mode": os.environ.get("REPRO_PALLAS", "auto"),
+        "jax_migrations": int(jax_migrations),
+        "jax_sweep_chunked_steps": int(jax_chunked),
+        "jax_path_seed_s": round(jx_seed, 3),
+        "jax_path_new_s": round(jx_new, 3),
+        "jax_path_speedup": round(jax_speedup, 2),
+        "jax_path_ratio": round(jax_ratio, 4),
+        "stress_scenarios": stress_n,
+        "stress_path_new_s": round(stress_t, 3),
+        "stress_scenarios_per_s": round(stress_n / stress_t, 2),
     }
     if not p.quick:
         # full runs own the committed baseline; they keep the CI quick
@@ -580,7 +733,9 @@ def run(report, params: BenchParams = FULL) -> dict:
     return results
 
 
-GATED_PATHS = ("bench_db_path", "tuned_path", "thrash_path", "admission_path")
+GATED_PATHS = (
+    "bench_db_path", "tuned_path", "thrash_path", "admission_path", "jax_path"
+)
 
 
 def check_gate(fresh: dict, baseline: dict, margin: float = 1.25) -> list[str]:
@@ -600,6 +755,14 @@ def check_gate(fresh: dict, baseline: dict, margin: float = 1.25) -> list[str]:
     slower *relative to the frozen seed implementation* than the
     committed baseline says it should be.
     """
+    if fresh.get("quick") and "quick_baseline" not in baseline:
+        # a quick run ratioed against full-mode medians gates CI on the
+        # wrong machine class and workload scale — refuse outright
+        return [
+            "baseline has no 'quick_baseline' section to compare this "
+            "quick run against; record one with `bench_engine --quick "
+            "--update-baseline` (mixed quick-vs-full comparison refused)"
+        ]
     base = baseline.get("quick_baseline") or baseline
     failures = []
     for key in GATED_PATHS:
@@ -638,6 +801,22 @@ def main(argv=None) -> int:
                          "'quick_baseline' section (full runs rewrite the "
                          "top level themselves)")
     args = ap.parse_args(argv)
+
+    if args.update_baseline and not args.quick:
+        ap.error(
+            "--update-baseline is quick-mode only: it rewrites the "
+            "committed baseline's quick_baseline section from this run's "
+            "medians. Full runs rewrite the top level themselves; mixing "
+            "the modes would gate CI against the wrong machine class. "
+            "Re-run with --quick."
+        )
+    if args.quick and args.out and Path(args.out).resolve() == OUT_PATH:
+        ap.error(
+            f"refusing to overwrite {OUT_PATH.name} with quick-mode "
+            "results: the committed file holds the full-mode baseline. "
+            "Use --update-baseline to refresh its quick_baseline section, "
+            "or pick a different --out path."
+        )
 
     params = QUICK if args.quick else FULL
     results = run(_csv_report, params)

@@ -1,0 +1,113 @@
+"""Per-size demotion-ranking re-partition (segment scan) for the sweep.
+
+The JAX sweep backend (:mod:`repro.sim.jax_engine`) ranks every page once
+per interval by the shared demotion key — ``argsort`` over
+``(effective heat, page id)``, identical at every fast-memory size — and
+then each size must take the first ``demand[s]`` pages of that ranking
+that sit in *its* fast tier. In rank-order coordinates that is a segment
+scan per size row: a running count of fast-tier entries compared against
+the size's reclaim demand.
+
+XLA fuses the sort well but materializes the ``[n_sizes, rss]``
+cumulative sum as its own pass; the Pallas kernel here keeps one size row
+resident and emits the selection mask in a single sweep over it. On
+non-TPU backends (CPU CI) the kernel runs in interpreter mode, and when
+Pallas is unavailable or disabled the pure-``jnp`` fallback computes the
+identical mask — both paths are integer-exact, so backend choice can
+never perturb victim identities.
+
+Mode selection follows the ``REPRO_PALLAS`` convention of
+:mod:`repro.kernels.ops` (``auto`` | ``interpret`` | ``off``) but reads
+the environment *per call*, so test suites can monkeypatch the mode
+without re-importing the module.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANE = 128  # pad rows to the TPU lane multiple; zero-padding is inert
+
+
+def _mode() -> str:
+    return os.environ.get("REPRO_PALLAS", "auto")
+
+
+def _use_pallas() -> bool:
+    mode = _mode()
+    if mode == "off":
+        return False
+    if mode == "interpret":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return _mode() == "interpret" or jax.default_backend() != "tpu"
+
+
+def _victim_partition_kernel(d_ref, f_ref, o_ref):
+    """One size row: select fast entries while the running count <= demand."""
+    f = f_ref[...]  # [1, r_pad] int32: fast-tier membership in rank order
+    cum = jnp.cumsum(f, axis=1)
+    sel = (f > 0) & (cum <= d_ref[0, 0])
+    o_ref[...] = sel.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _victim_partition_pallas(
+    fast01: jax.Array, demand: jax.Array, interpret: bool = False
+) -> jax.Array:
+    n_sizes, r = fast01.shape
+    r_pad = -(-r // _LANE) * _LANE
+    f = jnp.zeros((n_sizes, r_pad), dtype=jnp.int32)
+    f = f.at[:, :r].set(fast01.astype(jnp.int32))
+    d = demand.astype(jnp.int32).reshape(n_sizes, 1)
+    out = pl.pallas_call(
+        _victim_partition_kernel,
+        grid=(n_sizes,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda s: (s, 0)),
+            pl.BlockSpec((1, r_pad), lambda s: (s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, r_pad), lambda s: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_sizes, r_pad), jnp.int32),
+        interpret=interpret,
+    )(d, f)
+    return out[:, :r]
+
+
+def _victim_partition_jnp(fast01: jax.Array, demand: jax.Array) -> jax.Array:
+    """Pure lax/jnp fallback: bit-identical selection mask."""
+    f = fast01.astype(jnp.int32)
+    cum = jnp.cumsum(f, axis=1)
+    sel = (f > 0) & (cum <= demand.astype(jnp.int32)[:, None])
+    return sel.astype(jnp.int32)
+
+
+def victim_partition(fast01, demand):
+    """Victim selection mask per size row, in demotion-rank order.
+
+    ``fast01[s, i]`` is 1 when the page at rank position ``i`` is in size
+    ``s``'s fast tier; ``demand[s]`` is that size's reclaim demand. The
+    result marks, per row, the first ``demand[s]`` fast positions — the
+    pages :meth:`repro.tiering.page_pool.GlobalDemoteRank.walk` would
+    return. Dispatches to the Pallas kernel (interpret mode off-TPU) with
+    a jnp fallback; both are integer-exact so results never differ.
+    """
+    fast01 = jnp.asarray(fast01)
+    demand = jnp.asarray(demand)
+    if _use_pallas():
+        try:
+            return _victim_partition_pallas(
+                fast01, demand, interpret=_interpret()
+            )
+        except Exception:
+            if _mode() == "interpret":
+                raise
+    return _victim_partition_jnp(fast01, demand)

@@ -45,6 +45,16 @@ unbatchable spec            per-size :func:`repro.sim.engine._simulate` — a
                             whose class has ``batchable=False`` (e.g.
                             first-touch) (``backend="simulate"``)
 ``Scenario.runner`` set     the scenario's own callable (``backend="custom"``)
+``Scenario.engine="jax"``   the sweep passes above on the jitted JAX device
+                            step (:mod:`repro.sim.jax_engine`) instead of the
+                            numpy interval loop (``backend="jax_sweep"`` /
+                            ``"jax_tuned_sweep"``) — an explicit opt-in,
+                            validated up front: fault-free, no custom pool or
+                            runner, and every policy class ``jax_batchable``.
+                            ``engine="auto"`` (default) and ``"numpy"`` keep
+                            the numpy sweeps; results are bit-exact either
+                            way, so the choice is purely a speed/provenance
+                            knob.
 ==========================  ==================================================
 
 Scenarios fan out across processes with ``concurrent.futures``
@@ -363,7 +373,11 @@ class Scenario:
     fault-injection layer (module docstring, *Fault model*); each
     simulator backend gets its own :class:`~repro.sim.faults.
     FaultInjector` over the same spec — identical seeded schedules,
-    independent per-pool trajectories.
+    independent per-pool trajectories. ``engine`` selects the sweep
+    backend: ``"auto"`` (default, currently the numpy sweeps),
+    ``"numpy"`` (pin the oracle), or ``"jax"`` (the jitted device step —
+    see the planner table in the module docstring for the eligibility
+    rules :func:`run` enforces).
     """
 
     trace: Trace | str | Callable[[], Trace] | None = None
@@ -377,6 +391,7 @@ class Scenario:
     runner: Callable | None = None
     params: dict = field(default_factory=dict)
     faults: FaultSpec | None = None
+    engine: str = "auto"  # "auto" | "numpy" | "jax" (sweep backend)
 
     @property
     def resolved_name(self) -> str:
@@ -418,7 +433,8 @@ class RunRecord:
     scenario: str
     policy: str
     fm_frac: float
-    backend: str  # "sweep" | "tuned_sweep" | "simulate" | "custom"
+    backend: str  # "sweep" | "tuned_sweep" | "jax_sweep" |
+    # "jax_tuned_sweep" | "simulate" | "custom"
     result: SimResult | dict
     decisions: list | None = None  # TunerDecision list (tuned specs)
     watermark_log: list | None = None  # WatermarkEvent list (tuned specs)
@@ -688,6 +704,10 @@ def _run_scenario(
         raise ValueError(f"scenario {sname!r} has neither trace nor runner")
     cap = int(scenario.hw_capacity_pages or trace.rss_pages)
     faults = scenario.faults
+    # sweep backend routing (validated by run(); "auto" stays on numpy)
+    sweep_engine = "jax" if getattr(scenario, "engine", "auto") == "jax" else "numpy"
+    sweep_backend = "jax_sweep" if sweep_engine == "jax" else "sweep"
+    tuned_backend = "jax_tuned_sweep" if sweep_engine == "jax" else "tuned_sweep"
 
     def make_injector():
         # one injector per constructed policy instance: identical seeded
@@ -766,6 +786,7 @@ def _run_scenario(
                         policy=group_policy,
                         faults=inj,
                         fault_log=flog,
+                        engine=sweep_engine,
                     )
                 )
                 keys.extend(vkeys)
@@ -777,7 +798,7 @@ def _run_scenario(
                     sname,
                     spec.name,
                     f,
-                    "tuned_sweep",
+                    tuned_backend,
                     res,
                     decisions=(
                         list(tuner.decisions) if tuner is not None else None
@@ -822,6 +843,7 @@ def _run_scenario(
                         policy=spec_policy,
                         faults=inj,
                         fault_log=flog,
+                        engine=sweep_engine,
                     )
                     for j, fi in enumerate(idxs):
                         f = float(farr[fi])
@@ -829,7 +851,7 @@ def _run_scenario(
                             sname,
                             spec.name,
                             f,
-                            "sweep",
+                            sweep_backend,
                             _sim_result_from_slice(
                                 res, j, _effective_fm(cap, f)
                             ),
@@ -988,6 +1010,9 @@ def _scenario_ref(sc: Scenario) -> dict:
         "runner": _callable_ref(sc.runner),
         "params": sc.params,
         "faults": sc.faults.to_dict() if sc.faults is not None else None,
+        # echoed only when set: pre-engine cache entries stay addressable,
+        # and engine choice never perturbs "auto" cache keys
+        **({"engine": sc.engine} if sc.engine != "auto" else {}),
     }
 
 
@@ -1168,6 +1193,44 @@ def run(
             "experiment has tuned policy specs but no performance database "
             "was passed to run(db=...)"
         )
+    for sc in scenarios:
+        eng = getattr(sc, "engine", "auto")
+        if eng not in ("auto", "numpy", "jax"):
+            raise ValueError(
+                f"scenario {sc.resolved_name!r} has unknown engine {eng!r} "
+                "(use 'auto', 'numpy' or 'jax')"
+            )
+        if eng != "jax":
+            continue
+        # the JAX backend only replicates the batched sweep passes; refuse
+        # anything that would route off them instead of silently degrading
+        if sc.runner is not None:
+            raise ValueError(
+                f"scenario {sc.resolved_name!r}: engine='jax' cannot wrap a "
+                "custom runner"
+            )
+        if sc.pool_factory is not None:
+            raise ValueError(
+                f"scenario {sc.resolved_name!r}: engine='jax' requires the "
+                "batched sweep backends; a custom pool_factory forces the "
+                "per-size simulate fallback"
+            )
+        if sc.faults is not None:
+            raise ValueError(
+                f"scenario {sc.resolved_name!r}: engine='jax' does not "
+                "support fault injection; use engine='numpy'"
+            )
+        bad = [
+            p.name
+            for p in policies
+            if not getattr(p.policy_cls, "jax_batchable", False)
+        ]
+        if bad:
+            raise ValueError(
+                f"scenario {sc.resolved_name!r}: engine='jax' requires "
+                f"jax_batchable policy classes, got {bad} (see "
+                "repro.tiering.policy capability flags)"
+            )
 
     spec = _experiment_spec(experiment, fm_fracs, policies, db)
     cache_file = None

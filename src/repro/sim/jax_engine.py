@@ -1,0 +1,616 @@
+"""Accelerator-native sweep backend: the interval inner loop on JAX.
+
+The numpy sweep (:func:`repro.sim.sweep._sweep_run`) is the equivalence
+oracle; this module executes the *same* per-interval sequence — first-touch
+allocation, batched tier classification, heat decay, hot-set ranking, the
+vectorized TPP decision batch (:func:`repro.tiering.page_pool.
+_bulk_schedule_batch` as a :func:`jax.lax.while_loop`), per-size victim
+selection over the shared demotion ranking (a Pallas segment-scan kernel,
+:mod:`repro.kernels.demote_rank`, with a jnp fallback), and the
+promote/demote commit — as **one jitted device step per interval** over the
+stacked ``[n_sizes, rss]`` tier array, with the host keeping only what the
+paper's control plane actually needs per interval: integer counters for the
+cost model, watermarks, pool stats, profilers and tuners.
+
+Exactness contract (pinned by ``tests/test_engine_equivalence.py``):
+
+* integer counters, victim identities, ``ConfigVector``s, interval times
+  and tuner decisions are **bit-exact** against the numpy sweep and the
+  frozen ``ReferencePagePool`` lanes in every regime, including thrash;
+* the run is chunked-loop-free (``policy.chunked_steps`` stays zero);
+* ``float64`` everywhere (``jax.experimental.enable_x64``): the heat
+  recurrence ``heat*decay + touch`` is the same multiply sequence
+  :class:`~repro.tiering.page_pool.LazyHeat` performs, classification
+  GEMMs stay integer-valued below 2**53, and ``jnp.argsort(stable=True)``
+  matches ``np.argsort(kind="stable")`` tie order.
+
+Thrash-regime victim resolution stays host-side by design: the device step
+detects interference (reclaim demand reaching into same-step promotions)
+per size and commits a provisional fast-path state; interfering sizes are
+then corrected through the *same* host resolver the numpy sweep uses
+(:func:`repro.tiering.page_pool._resolve_step_victims` over the schedule's
+replayed availability horizons) and a tiny fix-up scatter. Counters are
+schedule-determined and identical either way, so only tier identity is
+patched.
+
+Eligibility (enforced here, routed by :mod:`repro.sim.api`): the policy
+must advertise ``jax_batchable`` (TPP and the trace-pure admission
+backend; thrash-guard's stateful host hooks are excluded), the run must be
+fault-free, and every interval's page ids must be unique — duplicate ids
+raise loudly instead of silently degrading to the chunked path.
+
+Pallas mode follows ``REPRO_PALLAS`` (``auto`` | ``interpret`` | ``off``),
+resolved per run: interpreter mode on CPU CI, compiled kernel on TPU, jnp
+fallback when disabled.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import enable_x64
+
+from repro.kernels.demote_rank import (
+    _interpret,
+    _use_pallas,
+    _victim_partition_jnp,
+    _victim_partition_pallas,
+)
+from repro.sim.costmodel import absorb_cache, effective_mlp, interval_time
+from repro.tiering.page_pool import (
+    LazyHeat,
+    Tier,
+    TieredPagePool,
+    _resolve_step_victims,
+)
+from repro.tiering.policy import PolicyOutcome
+
+_FAST = int(Tier.FAST)
+_SLOW = int(Tier.SLOW)
+_BIG = 2**62  # hot-sort key for non-candidates: sorts after every -touch
+
+
+def _bucket(n: int, floor: int = 128) -> int:
+    """Pad length to a power of two (bounds jit recompiles per trace)."""
+    return max(floor, 1 << max(0, int(n - 1).bit_length()))
+
+
+def _pad_i64(arr: np.ndarray, size: int, fill: int) -> np.ndarray:
+    out = np.full(size, fill, dtype=np.int64)
+    out[: arr.size] = arr
+    return out
+
+
+def _pad_f64(arr: np.ndarray, size: int) -> np.ndarray:
+    out = np.zeros(size, dtype=np.float64)
+    out[: arr.size] = arr
+    return out
+
+
+@jax.jit
+def _decay_heat(heat, decay):
+    """``heat * decay`` as its own executable, deliberately.
+
+    Inside the interval step XLA's CPU emitter contracts
+    ``heat * decay + touch`` into an FMA (1-ULP difference from numpy's
+    separate multiply-then-add; ``optimization_barrier`` and excess-
+    precision flags do not stop it — fusions clone the multiply). Keeping
+    the multiply in a separate executable leaves the step with a pure
+    add, which cannot contract, restoring bit-exact heat.
+    """
+    return heat * decay
+
+
+def _schedule_loop(free, fastc, minf, lowf, highf, kswapd, n_cand):
+    """:func:`repro.tiering.page_pool._bulk_schedule_batch` on device.
+
+    The same integer vector recurrence, with the Python ``while`` replaced
+    by :func:`jax.lax.while_loop`; arithmetic is int64 throughout, so the
+    six outputs are bit-identical to the numpy batch schedule.
+    """
+    zeros = jnp.zeros_like(free)
+
+    def cond(st):
+        return jnp.any(st[8] > 0)
+
+    def body(st):
+        free, fastc, done, pm_de, pm_fail, direct_total, events, d_demand, active = st
+        active_b = active > 0
+        headroom = free - minf
+        reclaim = active_b & (headroom <= 0)
+        # run_reclaim(allow_direct=True): direct to min, kswapd to high
+        dm = reclaim & (free < minf)
+        n = jnp.maximum(jnp.where(dm, jnp.minimum(minf - free, fastc), 0), 0)
+        d_demand = d_demand + n
+        fastc = fastc - n
+        free = free + n
+        pm_de = pm_de + n
+        direct_total = direct_total + n
+        events = events + dm.astype(free.dtype)  # one event even when n == 0
+        km = reclaim & (free < lowf)
+        n = jnp.maximum(
+            jnp.where(
+                km, jnp.minimum(jnp.minimum(highf - free, kswapd), fastc), 0
+            ),
+            0,
+        )
+        d_demand = d_demand + n
+        fastc = fastc - n
+        free = free + n
+        pm_de = pm_de + n
+        headroom = free - minf
+        fail = reclaim & (headroom <= 0)
+        pm_fail = jnp.where(fail, n_cand - done, pm_fail)
+        active_b = active_b & ~fail
+        chunk = jnp.where(active_b, jnp.minimum(headroom, n_cand - done), 0)
+        done = done + chunk
+        free = free - chunk
+        fastc = fastc + chunk
+        active_b = active_b & (done < n_cand)
+        return (
+            free, fastc, done, pm_de, pm_fail, direct_total, events,
+            d_demand, active_b.astype(free.dtype),
+        )
+
+    st = (
+        free, fastc, zeros, zeros, zeros, zeros, zeros, zeros,
+        (zeros < n_cand).astype(free.dtype),
+    )
+    free, fastc, done, pm_de, pm_fail, direct_total, events, d_demand, _ = (
+        lax.while_loop(cond, body, st)
+    )
+    # final run_reclaim() — kswapd only
+    km = free < lowf
+    n = jnp.maximum(
+        jnp.where(
+            km, jnp.minimum(jnp.minimum(highf - free, kswapd), fastc), 0
+        ),
+        0,
+    )
+    d_demand = d_demand + n
+    pm_de = pm_de + n
+    return done, pm_de, pm_fail, direct_total, events, d_demand
+
+
+@functools.lru_cache(maxsize=None)
+def _build_step(
+    n_sizes: int,
+    num_pages: int,
+    p_pad: int,
+    hot_thr: int,
+    admit_margin,  # None for plain TPP, float for the admission backend
+    promote_batch,  # None = unbounded
+    use_pallas: bool,
+    interpret: bool,
+):
+    """Compile one interval step for a (shape, policy-mode) combination.
+
+    Cached per combination: traces repeat their padded-interval buckets,
+    so a run compiles a handful of variants and reuses them.
+    """
+
+    def step(
+        tier, decayed, pages_p, counts_f, rep_f, touches_p, valid, is_new,
+        n_fast, free, fastc, minf, lowf, highf, kswapd,
+    ):
+        rows = jnp.arange(n_sizes)[:, None]
+        # --- first-touch allocation: per size a prefix of the new pages
+        # (access order) goes fast, the rest slow — n_fast is the host's
+        # watermark-budget prefix length
+        new_rank = jnp.cumsum(is_new.astype(jnp.int64)) - 1
+        alloc_ids = jnp.where(is_new, pages_p, num_pages)
+        alloc_vals = jnp.where(
+            new_rank[None, :] < n_fast[:, None], _FAST, _SLOW
+        ).astype(tier.dtype)
+        tier = tier.at[rows, alloc_ids[None, :]].set(alloc_vals, mode="drop")
+        # --- the interval's dense touch counters (page ids are unique per
+        # interval — validated by the caller — so add == set)
+        touch_dense = (
+            jnp.zeros(num_pages, jnp.int64)
+            .at[pages_p]
+            .add(touches_p, mode="drop")
+        )
+        # --- batched tier classification; float64 GEMM over integer
+        # values < 2**53 is exact regardless of summation order
+        gath = tier[:, pages_p]  # pad ids clamp; masked via `valid`
+        fast_m = (gath == _FAST) & valid[None, :]
+        warm_f = (rep_f < float(hot_thr)).astype(jnp.float64)
+        cols = jnp.stack([counts_f, rep_f, warm_f, rep_f * warm_f], axis=1)
+        sums = (fast_m.astype(jnp.float64) @ cols).astype(jnp.int64)
+        # --- effective heat: the interval-frozen demotion key, which is
+        # also the post-fold heat (heat*decay + touches) — computed once;
+        # ``decayed`` arrives pre-multiplied (see _decay_heat) so this is
+        # a pure, contraction-free add
+        eff_all = decayed + touch_dense
+        # --- hot candidates, hottest-first stable order: sorting
+        # (-touches | BIG) reproduces the numpy counting-sort/argsort tie
+        # order (descending touches, position-stable)
+        hot = valid & (touches_p >= hot_thr)
+        key = jnp.where(hot, -touches_p, _BIG)
+        perm = jnp.argsort(key, stable=True)
+        hot_pos = key[perm] < _BIG  # prefix mask over sorted positions
+        hot_ids = jnp.where(hot_pos, pages_p[perm], num_pages)
+        eff_h = eff_all[jnp.clip(hot_ids, 0, num_pages - 1)]
+        gh = tier[:, hot_ids]  # pad ids clamp; masked via hot_pos
+        slow_cand = (gh == _SLOW) & hot_pos[None, :]
+        if admit_margin is None:
+            admitted = slow_cand
+        else:
+            # AdmissionTPPPolicy._admit: trace-pure, size-independent
+            admitted = slow_cand & (eff_h >= admit_margin * hot_thr)[None, :]
+        rejected = (
+            slow_cand.sum(axis=1).astype(jnp.int64)
+            - admitted.sum(axis=1).astype(jnp.int64)
+        )
+        if promote_batch is not None:
+            arank = jnp.cumsum(admitted.astype(jnp.int64), axis=1)
+            admitted = admitted & (arank <= promote_batch)
+        n_cand = admitted.sum(axis=1).astype(jnp.int64)
+        # --- the promote/reclaim schedule for every size at once
+        pm_pr, pm_de, pm_fail, direct_total, events, d_demand = (
+            _schedule_loop(free, fastc, minf, lowf, highf, kswapd, n_cand)
+        )
+        # --- winners: the first pm_pr admitted candidates per size
+        wrank = jnp.cumsum(admitted.astype(jnp.int64), axis=1)
+        win_mask = admitted & (wrank <= pm_pr[:, None])
+        win_eff_min = jnp.min(
+            jnp.where(win_mask, eff_h[None, :], jnp.inf), axis=1
+        )
+        # --- victims: first d_demand fast pages per size in the shared
+        # (effective heat, page id) ranking — the segment-scan kernel
+        order = jnp.argsort(eff_all, stable=True)
+        ranked = tier[:, order]
+        fast01 = (ranked == _FAST).astype(jnp.int32)
+        if use_pallas:
+            vic_sel = _victim_partition_pallas(
+                fast01, d_demand, interpret=interpret
+            )
+        else:
+            vic_sel = _victim_partition_jnp(fast01, d_demand)
+        vcount = vic_sel.sum(axis=1).astype(jnp.int64)
+        posr = jnp.arange(num_pages)
+        last_pos = jnp.max(
+            jnp.where(vic_sel > 0, posr[None, :], -1), axis=1
+        )
+        eff_ranked = eff_all[order]
+        last_eff = jnp.where(
+            last_pos >= 0, eff_ranked[jnp.clip(last_pos, 0)], -jnp.inf
+        )
+        # interference: demand reaching into same-step promotions — the
+        # exact _try_bulk_step precondition (ties count as interference)
+        interf = (d_demand > 0) & (
+            (vcount < d_demand)
+            | ((pm_pr > 0) & (win_eff_min <= last_eff))
+        )
+        # --- provisional commit (exact for non-interfering sizes; the
+        # host patches interfering rows' tier identity afterwards)
+        rank_inv = jnp.zeros(num_pages, jnp.int64).at[order].set(posr)
+        ranked_new = jnp.where(
+            vic_sel > 0, jnp.full((), _SLOW, tier.dtype), ranked
+        )
+        tier = jnp.take(ranked_new, rank_inv, axis=1)
+        win_ids = jnp.where(win_mask, hot_ids[None, :], num_pages)
+        tier = tier.at[rows, win_ids].set(
+            jnp.full((), _FAST, tier.dtype), mode="drop"
+        )
+        counters = jnp.stack(
+            [pm_pr, pm_de, pm_fail, direct_total, events, d_demand,
+             rejected, n_cand]
+        )
+        return (
+            tier, eff_all, sums, counters, interf, vic_sel, order, hot_ids,
+            win_mask,
+        )
+
+    return jax.jit(step)
+
+
+@jax.jit
+def _fix_row(tier, row, to_fast, to_slow):
+    """Patch one interfering size's tier identity after host resolution.
+
+    ``to_fast`` are walked victims the resolver did *not* demote,
+    ``to_slow`` are same-step promotions it did; both are padded with the
+    out-of-range id ``num_pages`` (dropped by the scatter)."""
+    tier = tier.at[row, to_fast].set(
+        jnp.full((), _FAST, tier.dtype), mode="drop"
+    )
+    tier = tier.at[row, to_slow].set(
+        jnp.full((), _SLOW, tier.dtype), mode="drop"
+    )
+    return tier
+
+
+def _require_jax_runnable(trace, policy, faults) -> None:
+    """The eligibility contract (mirrored by the api.py planner checks)."""
+    if faults is not None or policy.fault_injector is not None:
+        raise ValueError(
+            "engine='jax' does not support fault injection; run fault "
+            "scenarios on the numpy sweep"
+        )
+    if not getattr(policy, "jax_batchable", False):
+        raise ValueError(
+            f"policy kind '{policy.kind}' is not jax_batchable; the JAX "
+            "sweep backend only replicates TPP-contract policies whose "
+            "decision semantics are device-portable (see "
+            "repro.tiering.policy capability flags)"
+        )
+    for i, ia in enumerate(trace):
+        if ia.pages.size and np.unique(ia.pages).size != ia.pages.size:
+            raise ValueError(
+                f"engine='jax' requires unique page ids per interval; "
+                f"interval {i} of trace '{trace.name}' repeats ids"
+            )
+
+
+def _sweep_run_jax(
+    trace,
+    fm_fracs: np.ndarray,
+    policy,
+    hw,
+    hw_capacity_pages: int | None,
+    seed: int,
+    collect_configs: bool,
+    tuners: list | None = None,
+    tune_everys: list | None = None,
+    kswapd_batch: int | None = None,
+    faults=None,
+):
+    """Drop-in device-backed replacement for ``sweep._sweep_run``.
+
+    Same signature, same ``(times, pools, configs_out, fm_sizes, costs)``
+    return, bit-exact results; see the module docstring for the contract.
+    """
+    _require_jax_runnable(trace, policy, faults)
+    n_sizes = int(np.asarray(fm_fracs).size)
+    num_pages = int(trace.rss_pages)
+    cap = int(hw_capacity_pages or trace.rss_pages)
+    hot_thr = policy.hot_thr
+    admit_margin = getattr(policy, "admit_margin", None)
+    admit_margin = None if admit_margin is None else float(admit_margin)
+    promote_batch = policy.promote_batch
+    use_pallas = _use_pallas()
+    interpret = _interpret()
+
+    with enable_x64():
+        # host-side slice pools: watermarks, stats, rss — the control
+        # plane the profilers/tuners read. Tier rows live on device for
+        # the run and are imported back at the end.
+        tier_b = np.full((n_sizes, num_pages), int(Tier.UNALLOCATED), np.int8)
+        halflife_decay = 0.5 ** (1.0 / 2.0)
+        heat = LazyHeat(num_pages, halflife_decay)
+        interval_acc = np.zeros(num_pages, dtype=np.int64)
+        interval_touch = np.zeros(num_pages, dtype=np.int64)
+        pools = []
+        for s in range(n_sizes):
+            pool = TieredPagePool._shared_slice(
+                tier_row=tier_b[s],
+                heat=heat,
+                interval_acc=interval_acc,
+                interval_touch=interval_touch,
+                hw_capacity=cap,
+                page_bytes=hw.page_bytes,
+                kswapd_batch=kswapd_batch,
+                seed=seed,
+            )
+            pool.set_fm_size(int(round(float(fm_fracs[s]) * cap)))
+            if trace.slow_pages is not None:
+                pool.place(trace.slow_pages, Tier.SLOW)
+            pools.append(pool)
+        tuned = tuners is not None
+        if tuned:
+            for pool, tuner in zip(pools, tuners):
+                if tuner is not None:
+                    tuner.bind_pool(pool, cap)
+
+        dev_tier = jnp.asarray(TieredPagePool._export_tier_stack(pools))
+        dev_heat = jnp.zeros(num_pages, dtype=jnp.float64)
+        allocated = tier_b[0] != int(Tier.UNALLOCATED)
+
+        n_intervals = len(trace)
+        times = np.zeros((n_sizes, n_intervals), dtype=np.float64)
+        profilers = configs_out = None
+        if collect_configs:
+            from repro.core.telemetry import IntervalProfiler
+
+            profilers = [
+                IntervalProfiler(hot_thr=hot_thr, num_threads=trace.num_threads)
+                for _ in range(n_sizes)
+            ]
+            configs_out = [[] for _ in range(n_sizes)]
+        costs = [[] for _ in range(n_sizes)]
+        fm_sizes = t_now = None
+        if tuned:
+            fm_sizes = np.zeros((n_sizes, n_intervals), dtype=np.int64)
+            t_now = [0.0] * n_sizes
+
+        for i, ia in enumerate(trace):
+            pages = np.asarray(ia.pages, dtype=np.int64)
+            counts_mem = absorb_cache(ia.counts, hw.llc_pages)
+            mlp_eff = effective_mlp(counts_mem, hw.mlp, trace.num_threads)
+            touches = np.asarray(ia.touches, dtype=np.int64)
+            rep = np.minimum(touches, hot_thr)
+            # --- host allocation bookkeeping (pre-step, per size): the
+            # new-page set and rss delta are size-independent, the
+            # fast-prefix length is each size's watermark budget
+            new_mask = ~allocated[pages] if pages.size else np.zeros(0, bool)
+            n_new = int(np.count_nonzero(new_mask))
+            n_fast_arr = np.zeros(n_sizes, dtype=np.int64)
+            if n_new:
+                for s, pool in enumerate(pools):
+                    budget = max(0, pool.fast_free - pool.watermarks.low_free)
+                    nf = min(budget, n_new)
+                    n_fast_arr[s] = nf
+                    pool.stats.alloc_fast += int(nf)
+                    pool.stats.alloc_slow += int(n_new - nf)
+                    pool._rss_pages += n_new
+                    pool._fast_used += int(nf)
+                allocated[pages[new_mask]] = True
+            # --- schedule inputs: post-allocation free/fast state
+            free_a = np.empty(n_sizes, dtype=np.int64)
+            fastc_a = np.empty(n_sizes, dtype=np.int64)
+            minf_a = np.empty(n_sizes, dtype=np.int64)
+            lowf_a = np.empty(n_sizes, dtype=np.int64)
+            highf_a = np.empty(n_sizes, dtype=np.int64)
+            kswapd_a = np.empty(n_sizes, dtype=np.int64)
+            for s, pool in enumerate(pools):
+                wm = pool.watermarks
+                free_a[s] = pool.fast_free
+                fastc_a[s] = pool.fast_used
+                minf_a[s] = wm.min_free
+                lowf_a[s] = wm.low_free
+                highf_a[s] = wm.high_free
+                kswapd_a[s] = pool.kswapd_batch
+            # --- one jitted device step for the whole size vector
+            p_pad = _bucket(pages.size)
+            step = _build_step(
+                n_sizes, num_pages, p_pad, hot_thr, admit_margin,
+                promote_batch, use_pallas, interpret,
+            )
+            valid = np.zeros(p_pad, dtype=bool)
+            valid[: pages.size] = True
+            is_new = np.zeros(p_pad, dtype=bool)
+            is_new[: pages.size] = new_mask
+            (
+                dev_tier, dev_heat, sums_d, counters_d, interf_d, vic_sel_d,
+                order_d, hot_ids_d, win_mask_d,
+            ) = step(
+                dev_tier,
+                _decay_heat(dev_heat, halflife_decay),
+                _pad_i64(pages, p_pad, num_pages),
+                _pad_f64(counts_mem.astype(np.float64), p_pad),
+                _pad_f64(rep.astype(np.float64), p_pad),
+                _pad_i64(touches, p_pad, 0),
+                valid,
+                is_new,
+                n_fast_arr,
+                free_a, fastc_a, minf_a, lowf_a, highf_a, kswapd_a,
+            )
+            counters = np.asarray(counters_d)
+            (pm_pr, pm_de, pm_fail, direct_total, events, d_demand,
+             rejected, n_cand) = counters
+            interf = np.asarray(interf_d)
+            # --- thrash regime: resolve interfering sizes' victim
+            # identities with the numpy sweep's own host resolver and
+            # patch the device tier (counters are schedule-determined
+            # and already exact)
+            if interf.any():
+                eff_np = np.asarray(dev_heat)  # == eff_all this interval
+                order_np = np.asarray(order_d)
+                vic_sel_np = np.asarray(vic_sel_d)
+                hot_ids_np = np.asarray(hot_ids_d)
+                win_mask_np = np.asarray(win_mask_d)
+                for s in np.flatnonzero(interf):
+                    victims = order_np[vic_sel_np[s] > 0]  # walk order
+                    winners = hot_ids_np[win_mask_np[s]]  # promotion order
+                    if victims.size + winners.size < d_demand[s]:
+                        raise RuntimeError(
+                            "jax sweep: victim supply mismatch (corrupted "
+                            "tier state)"
+                        )
+                    base_n, cand_taken = _resolve_step_victims(
+                        eff_np[victims],
+                        victims,
+                        eff_np[winners],
+                        winners,
+                        pools[s]._schedule_events(int(n_cand[s])),
+                    )
+                    to_fast = victims[base_n:]
+                    to_slow = winners[cand_taken]
+                    k_pad = _bucket(max(to_fast.size, to_slow.size, 1), 8)
+                    dev_tier = _fix_row(
+                        dev_tier,
+                        int(s),
+                        _pad_i64(to_fast, k_pad, num_pages),
+                        _pad_i64(to_slow, k_pad, num_pages),
+                    )
+            # --- commit counters to the host pools (the _try_bulk_step
+            # bookkeeping, fed from the pulled schedule)
+            for s, pool in enumerate(pools):
+                pool._fast_used += int(pm_pr[s]) - int(d_demand[s])
+                st = pool.stats
+                st.pgdemote_direct += int(direct_total[s])
+                st.pgdemote_kswapd += int(pm_de[s]) - int(direct_total[s])
+                st.direct_reclaim_events += int(events[s])
+                st.pgpromote_success += int(pm_pr[s])
+            # --- per-size telemetry + cost (host, identical arithmetic)
+            sums = np.asarray(sums_d)
+            pacc_f_all = sums[:, 0]
+            pacc_s_all = int(counts_mem.sum()) - pacc_f_all
+            ptouch_f_all = sums[:, 1]
+            ptouch_s_all = int(rep.sum()) - ptouch_f_all
+            warm_pages_all = sums[:, 2]
+            warm_touch_all = sums[:, 3]
+            for s, pool in enumerate(pools):
+                outcome = PolicyOutcome(
+                    pm_pr=int(pm_pr[s]),
+                    pm_de=int(pm_de[s]),
+                    pm_fail=int(pm_fail[s]),
+                    direct_reclaim=int(direct_total[s]),
+                    pm_admit_fail=int(rejected[s]),
+                )
+                if profilers is not None:
+                    profilers[s].record_accesses(
+                        int(ptouch_f_all[s]),
+                        int(ptouch_s_all[s]),
+                        ia.ops,
+                        cachelines=int(pacc_f_all[s]) + int(pacc_s_all[s]),
+                        warm_pages=int(warm_pages_all[s]),
+                        warm_touches=int(warm_touch_all[s]),
+                    )
+                    profilers[s].record_policy(outcome)
+                    configs_out[s].append(profilers[s].finish(pool))
+                cost = interval_time(
+                    hw,
+                    pacc_f=int(pacc_f_all[s]),
+                    pacc_s=int(pacc_s_all[s]),
+                    ops=ia.ops,
+                    pm_pr=outcome.pm_pr,
+                    pm_de=outcome.pm_de,
+                    pm_fail=outcome.pm_fail,
+                    direct_reclaimed=int(direct_total[s]),
+                    mlp_eff=mlp_eff,
+                    num_threads=trace.num_threads,
+                    rand_frac=ia.rand_frac,
+                )
+                times[s, i] = cost.total
+                costs[s].append(cost)
+                if tuned:
+                    fm_sizes[s, i] = pool.effective_fm_size
+                    t_now[s] += cost.total
+            # --- per-slice tuner steps (simulate() order: post-fold; the
+            # device heat already folded inside the step)
+            if tuned:
+                for s, tuner in enumerate(tuners):
+                    te = tune_everys[s]
+                    if tuner is not None and te and (i + 1) % te == 0:
+                        window = costs[s][-te:]
+                        acc = sum(
+                            c.pacc_f + c.pacc_s for c in configs_out[s][-te:]
+                        )
+                        tpa = sum(c.total for c in window) / max(acc, 1)
+                        tuner.step(
+                            configs_out[s][-1], t=t_now[s], measured_tpa=tpa
+                        )
+        # --- import the final device state back into the host pools so
+        # they are indistinguishable from a numpy-sweep run's
+        final_fast = [pool._fast_used for pool in pools]
+        final_rss = [pool._rss_pages for pool in pools]
+        TieredPagePool._import_tier_stack(pools, np.asarray(dev_tier))
+        for s, pool in enumerate(pools):
+            if pool._fast_used != final_fast[s] or pool._rss_pages != final_rss[s]:
+                raise RuntimeError(
+                    "jax sweep: host/device tier accounting diverged "
+                    f"(size {s}: fast_used {final_fast[s]} vs "
+                    f"{pool._fast_used}, rss {final_rss[s]} vs "
+                    f"{pool._rss_pages})"
+                )
+        heat.value[:] = np.asarray(dev_heat)
+        heat.stamp[:] = n_intervals
+        heat.t = n_intervals
+    return times, pools, configs_out, fm_sizes, costs

@@ -436,6 +436,7 @@ def _sweep_fm_fracs(
     policy: MigrationPolicy | None = None,
     faults=None,
     fault_log: list | None = None,
+    engine: str = "numpy",
 ) -> SweepResult:
     """Run ``trace`` once, concurrently at every fraction in ``fm_fracs``.
 
@@ -448,13 +449,22 @@ def _sweep_fm_fracs(
     ``policy`` swaps in any batchable policy instance (its ``hot_thr``
     wins over the ``hot_thr`` argument); its per-instance
     ``chunked_steps`` counter records any fallback executions of the run.
+
+    **Backend selection** (``engine``): ``"numpy"`` — this module's
+    stacked-array interval loop, the equivalence oracle; ``"jax"`` — the
+    jitted device step of :mod:`repro.sim.jax_engine` (bit-exact by
+    contract, Pallas victim-partition kernel per ``REPRO_PALLAS``).
+    The JAX backend refuses fault injection, non-``jax_batchable``
+    policies, and traces with duplicate page ids per interval; callers
+    opt in explicitly (the :mod:`repro.sim.api` planner routes
+    ``Scenario(engine="jax")`` here and validates eligibility up front).
     """
     fm_fracs = np.asarray(fm_fracs, dtype=np.float64)
     if fm_fracs.size == 0:
         raise ValueError("sweep_fm_fracs needs at least one fm fraction")
     if policy is None:
         policy = TPPPolicy(hot_thr=hot_thr)
-    times, pools, configs_out, _, costs = _sweep_run(
+    times, pools, configs_out, _, costs = _resolve_engine(engine)(
         trace, fm_fracs, policy, hw, hw_capacity_pages, seed,
         collect_configs, kswapd_batch=kswapd_batch, faults=faults,
     )
@@ -482,6 +492,7 @@ def _sweep_tuned(
     policy: MigrationPolicy | None = None,
     faults=None,
     fault_log: list | None = None,
+    engine: str = "numpy",
 ) -> list:
     """Run ``trace`` once across a vector of :class:`TunedSlice` settings.
 
@@ -495,6 +506,9 @@ def _sweep_tuned(
     ``policy`` swaps in any batchable policy instance (stateful policies
     keep fully independent per-slice trajectories: their state is scoped
     per pool); its ``hot_thr`` wins over the ``hot_thr`` argument.
+    ``engine`` selects the sweep backend exactly as in
+    :func:`_sweep_fm_fracs` (``"numpy"`` oracle / ``"jax"`` device step);
+    tuner decision sequences are part of the bit-exactness contract.
     """
     from repro.sim.engine import SimResult
 
@@ -508,7 +522,7 @@ def _sweep_tuned(
     fm_fracs = np.asarray([sl.fm_frac for sl in slices], dtype=np.float64)
     tuners = [sl.tuner for sl in slices]
     tune_everys = [sl.tune_every for sl in slices]
-    times, pools, configs_out, fm_sizes, costs = _sweep_run(
+    times, pools, configs_out, fm_sizes, costs = _resolve_engine(engine)(
         trace, fm_fracs, policy, hw, hw_capacity_pages, seed,
         collect_configs=True, tuners=tuners, tune_everys=tune_everys,
         kswapd_batch=kswapd_batch, faults=faults,
@@ -528,6 +542,22 @@ def _sweep_tuned(
         )
         for s in range(len(slices))
     ]
+
+
+def _resolve_engine(engine: str):
+    """Map an ``engine`` name to its sweep-run driver.
+
+    ``"numpy"`` is the frozen oracle; ``"jax"`` lazily imports
+    :mod:`repro.sim.jax_engine` so environments without a working JAX
+    install can still run every numpy path.
+    """
+    if engine == "numpy":
+        return _sweep_run
+    if engine == "jax":
+        from repro.sim.jax_engine import _sweep_run_jax
+
+        return _sweep_run_jax
+    raise ValueError(f"unknown sweep engine {engine!r} (use 'numpy' or 'jax')")
 
 
 def _deprecated(name: str) -> None:

@@ -1319,3 +1319,44 @@ class TieredPagePool:
         pool._gptr = 0
         pool._owns_interval_state = False
         return pool
+
+    @staticmethod
+    def _export_tier_stack(pools) -> np.ndarray:
+        """Snapshot the pools' tier rows as one stacked ``[n_sizes, rss]``
+        int8 array (a copy — device transfer source for the JAX sweep
+        backend, :mod:`repro.sim.jax_engine`)."""
+        if not pools:
+            raise ValueError("_export_tier_stack needs at least one pool")
+        num_pages = pools[0].num_pages
+        if any(p.num_pages != num_pages for p in pools):
+            raise ValueError("pools must share num_pages to stack tiers")
+        return np.stack([np.asarray(p.tier, dtype=np.int8) for p in pools])
+
+    @staticmethod
+    def _import_tier_stack(pools, tier_stack: np.ndarray) -> None:
+        """Write a stacked ``[n_sizes, rss]`` tier array back into the
+        pools' rows and resynchronize each pool's fast-tier counter.
+
+        The inverse of :meth:`_export_tier_stack`: the JAX sweep backend
+        runs the interval loop on device copies of the tier stack and
+        imports the final state here, so the slice pools stay fully
+        consistent (tier view + ``fast_used``) after a device-side run.
+        Only slice pools (``_fast is None``) are supported — the shared
+        ranking replaces the incremental fast index there, so a plain
+        counter resync is exact.
+        """
+        tier_stack = np.asarray(tier_stack, dtype=np.int8)
+        if tier_stack.shape != (len(pools), pools[0].num_pages if pools else 0):
+            raise ValueError(
+                f"tier stack shape {tier_stack.shape} does not match "
+                f"{len(pools)} pools x {pools[0].num_pages if pools else 0} pages"
+            )
+        for pool, row in zip(pools, tier_stack):
+            if pool._fast is not None:
+                raise ValueError(
+                    "_import_tier_stack only supports sweep slice pools "
+                    "(the incremental fast index cannot be bulk-imported)"
+                )
+            pool._tier[:] = row
+            pool._fast_used = int(np.count_nonzero(row == _FAST))
+            pool._rss_pages = int(np.count_nonzero(row != _UNALLOC))

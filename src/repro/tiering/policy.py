@@ -55,9 +55,22 @@ Capability flags (class attributes)
 ``tunable``
     Whether a Tuna tuner may run in the loop with this policy
     (``PolicySpec(tuner=...)`` is validated against this flag).
+``jax_batchable``
+    Whether the accelerator sweep backend (:mod:`repro.sim.jax_engine`)
+    replicates this policy's decision semantics on device. The JAX
+    interval step reimplements the TPP candidate contract plus the
+    trace-pure admission criterion of :class:`AdmissionTPPPolicy`
+    inside one jitted kernel — it does *not* call :meth:`_admit` /
+    :meth:`_note_step` per interval — so a subclass overriding either
+    hook with new behaviour MUST set ``jax_batchable = False`` unless
+    the device path is taught its semantics
+    (:class:`ThrashGuardPolicy` does exactly that: its per-pool guard
+    state is host-side and stateful, so it pins the flag off and runs
+    on the numpy sweep). Only consulted when a scenario opts into
+    ``engine="jax"``.
 
-``batchable`` and ``tunable`` are what the planner and spec validation
-consult. ``migrates`` (does the policy move pages at all) is descriptive
+``batchable``, ``jax_batchable`` and ``tunable`` are what the planner
+and spec validation consult. ``migrates`` (does the policy move pages at all) is descriptive
 metadata the planner never routes on; the benchmark drivers derive their
 backend-comparison sets from it (``benchmarks.common.policy_kinds``).
 
@@ -195,6 +208,10 @@ class MigrationPolicy:
     kind: str = ""
     migrates: bool = True
     batchable: bool = False
+    # device-side sweep support (see the module docstring): only policies
+    # whose per-interval decision semantics the jitted JAX interval step
+    # replicates exactly may opt in
+    jax_batchable: bool = False
     tunable: bool = False
 
     def __init__(self, hot_thr: int = 4) -> None:
@@ -258,6 +275,7 @@ class TPPPolicy(MigrationPolicy):
     kind = "tpp"
     migrates = True
     batchable = True
+    jax_batchable = True
     tunable = True
 
     def __init__(self, hot_thr: int = 4, promote_batch: int | None = None) -> None:
@@ -571,6 +589,9 @@ class ThrashGuardPolicy(TPPPolicy):
     """
 
     kind = "thrash_guard"
+    # per-pool guard state (stamps, cooldown) lives host-side and mutates
+    # every step — the jitted interval step does not replicate it
+    jax_batchable = False
 
     def __init__(
         self,

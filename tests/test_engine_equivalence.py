@@ -679,3 +679,264 @@ class TestIncrementalPrimitives:
         )
         assert pool.fast_used == ref.fast_used
         assert np.array_equal(pool.tier, ref.tier)
+
+
+class TestJaxSweepEquivalence:
+    """Three lanes for the accelerator-native backend: the jitted JAX
+    sweep (:mod:`repro.sim.jax_engine`, Pallas victim-partition kernel in
+    interpreter mode) == the numpy sweep == the frozen
+    ``ReferencePagePool``, bit for bit — counters, interval times, config
+    vectors — across the thrash, starved-kswapd, near-capacity and
+    tuned-shrink regimes, with the sweep policies chunked-loop-free."""
+
+    @pytest.fixture(autouse=True)
+    def _interpret_mode(self, monkeypatch):
+        # force the Pallas kernel through interpreter mode so these tests
+        # cover the kernel code path on CPU, not just the jnp fallback
+        monkeypatch.setenv("REPRO_PALLAS", "interpret")
+
+    def _assert_three_lanes(self, tr, fracs, cap=None, kswapd=None,
+                            make_policy=None):
+        pytest.importorskip("jax")
+        from repro.sim.sweep import _sweep_fm_fracs
+
+        if make_policy is None:
+            def make_policy():
+                return policy_mod.TPPPolicy(hot_thr=4)
+        fracs = np.asarray(fracs, dtype=np.float64)
+        jax_policy = make_policy()
+        jx = _sweep_fm_fracs(
+            tr, fracs, hw_capacity_pages=cap, kswapd_batch=kswapd,
+            collect_configs=True, policy=jax_policy, engine="jax",
+        )
+        assert jax_policy.chunked_steps == 0
+        np_policy = make_policy()
+        base = _sweep_fm_fracs(
+            tr, fracs, hw_capacity_pages=cap, kswapd_batch=kswapd,
+            collect_configs=True, policy=np_policy, engine="numpy",
+        )
+        for i, f in enumerate(fracs):
+            assert jx.stats[i] == base.stats[i], f
+            assert np.array_equal(
+                jx.interval_times[i], base.interval_times[i]
+            ), f
+            assert jx.configs[i] == base.configs[i], f
+            ref = simulate(
+                tr, fm_frac=float(f), hw_capacity_pages=cap,
+                policy=make_policy(),
+                pool_factory=functools.partial(
+                    ReferencePagePool, kswapd_batch=kswapd
+                ),
+            )
+            assert jx.stats[i] == ref.stats, f
+            assert np.array_equal(jx.interval_times[i], ref.interval_times), f
+            assert jx.configs[i] == ref.configs, f
+
+    @pytest.mark.parametrize("seed", [0, 2])
+    def test_thrash_pressure(self, seed):
+        self._assert_three_lanes(
+            pressure_trace(seed, rss=3_000, n_intervals=8),
+            [0.8, 0.45, 0.25, 0.1],
+        )
+
+    @pytest.mark.parametrize("kswapd", [1, 96])
+    def test_kswapd_starved(self, kswapd):
+        self._assert_three_lanes(
+            pressure_trace(7, rss=3_000, n_intervals=6),
+            [0.6, 0.3, 0.12],
+            kswapd=kswapd,
+        )
+
+    def test_watermarks_near_capacity(self):
+        self._assert_three_lanes(
+            pressure_trace(11, rss=4_000, n_intervals=8),
+            [1.0, 0.97, 0.55, 0.2],
+            cap=2_000,
+            kswapd=32,
+        )
+
+    def test_admission_backend(self):
+        self._assert_three_lanes(
+            pressure_trace(3, rss=3_000, n_intervals=6),
+            [0.6, 0.25],
+            make_policy=lambda: policy_mod.AdmissionTPPPolicy(
+                hot_thr=4, admit_margin=0.5
+            ),
+        )
+
+    def test_tuned_shrink_three_lanes(self):
+        pytest.importorskip("jax")
+        from repro.sim.sweep import _sweep_tuned
+
+        tr = pressure_trace(5, rss=4_000, n_intervals=12)
+        db = synthetic_db(rss=4_000)
+        specs = [(0.25, 2), (None, None)]
+
+        def mk():
+            return [
+                make_tuner(db, tau, max_step_frac=0.3) if tau else None
+                for tau, _ in specs
+            ]
+
+        lanes, tuners = {}, {}
+        for engine in ("numpy", "jax"):
+            tn = mk()
+            pol = policy_mod.TPPPolicy(hot_thr=4)
+            lanes[engine] = _sweep_tuned(
+                tr,
+                [TunedSlice(0.9, t, te) for t, (_, te) in zip(tn, specs)],
+                policy=pol, engine=engine,
+            )
+            assert pol.chunked_steps == 0
+            tuners[engine] = tn
+        ref_tuners = mk()
+        refs = [
+            simulate(tr, fm_frac=0.9, tuner=t, tune_every=te,
+                     pool_factory=ReferencePagePool)
+            for t, (_, te) in zip(ref_tuners, specs)
+        ]
+        moved = 0
+        for i in range(len(specs)):
+            assert_tuned_equal(lanes["numpy"][i], lanes["jax"][i],
+                               tuners["numpy"][i], tuners["jax"][i])
+            assert_tuned_equal(refs[i], lanes["jax"][i],
+                               ref_tuners[i], tuners["jax"][i])
+            if tuners["jax"][i] is not None:
+                moved += len(tuners["jax"][i].controller.log)
+        assert moved > 0  # the tuner must actually shrink the fast tier
+
+
+class TestJaxEngineRouting:
+    """``Scenario.engine`` planner routing and its fail-fast eligibility
+    validation in :func:`repro.sim.api.run`."""
+
+    def _tiny(self):
+        return pressure_trace(0, rss=1_000, n_intervals=3)
+
+    def test_jax_backend_labels_and_equality(self):
+        pytest.importorskip("jax")
+        from repro.sim.api import Experiment, Scenario
+        from repro.sim.api import run as run_experiment
+
+        tr = self._tiny()
+
+        def _exp(engine):
+            return run_experiment(
+                Experiment(
+                    name=f"route_{engine}",
+                    scenarios=[Scenario(trace=tr, engine=engine)],
+                    fm_fracs=(0.5, 0.25),
+                    collect_configs=True,
+                )
+            )
+
+        jx, base = _exp("jax"), _exp("numpy")
+        assert [r.backend for r in jx.runs] == ["jax_sweep", "jax_sweep"]
+        assert [r.backend for r in base.runs] == ["sweep", "sweep"]
+        assert jx.chunked_step_count == 0
+        for rj, rn in zip(jx.runs, base.runs):
+            assert rj.result.stats == rn.result.stats
+            assert np.array_equal(
+                rj.result.interval_times, rn.result.interval_times
+            )
+            assert rj.result.configs == rn.result.configs
+
+    def test_engine_validation_fails_fast(self):
+        from repro.sim.api import Experiment, PolicySpec, Scenario
+        from repro.sim.api import run as run_experiment
+
+        tr = self._tiny()
+        with pytest.raises(ValueError, match="engine"):
+            run_experiment(
+                Experiment(
+                    name="bad_engine",
+                    scenarios=[Scenario(trace=tr, engine="torch")],
+                )
+            )
+        with pytest.raises(ValueError, match="pool_factory"):
+            run_experiment(
+                Experiment(
+                    name="bad_pool",
+                    scenarios=[
+                        Scenario(
+                            trace=tr, engine="jax",
+                            pool_factory=ReferencePagePool,
+                        )
+                    ],
+                )
+            )
+        with pytest.raises(ValueError, match="thrash_guard"):
+            run_experiment(
+                Experiment(
+                    name="bad_policy",
+                    scenarios=[Scenario(trace=tr, engine="jax")],
+                    policies=[
+                        PolicySpec(
+                            kind="thrash_guard",
+                            params={"reuse_window": 2},
+                        )
+                    ],
+                )
+            )
+
+
+class TestVictimPartitionKernel:
+    """The Pallas segment-scan re-partition == a per-row heap replay of
+    the demotion walk, property-tested over random fast-tier layouts and
+    demands (and always equal to the jnp fallback, so mode selection can
+    never perturb victim identities)."""
+
+    @pytest.fixture(autouse=True)
+    def _hyp(self):
+        pytest.importorskip("hypothesis")
+        pytest.importorskip("jax")
+
+    @pytest.mark.parametrize("shape", [(1, 64), (3, 64), (2, 200)])
+    def test_pallas_matches_heap_replay(self, shape):
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+        import jax.numpy as jnp
+
+        from repro.kernels.demote_rank import (
+            _victim_partition_jnp,
+            _victim_partition_pallas,
+        )
+
+        s, r = shape  # fixed shapes bound the per-example jit compiles
+
+        @settings(max_examples=15, deadline=None)
+        @given(
+            seed=st.integers(0, 2**32 - 1),
+            density=st.floats(0.0, 1.0),
+            tight=st.booleans(),
+        )
+        def _property(seed, density, tight):
+            rng = np.random.default_rng(seed)
+            fast = (rng.random((s, r)) < density).astype(np.int32)
+            # "tight" draws demand near the actual fast supply, where the
+            # <=-boundary of the running count lives; loose draws roam
+            # past it (over-demand must saturate, never over-select)
+            hi = fast.sum(axis=1) + 1 if tight else np.full(s, r + 2)
+            demand = rng.integers(0, hi + 1).astype(np.int64)
+            got = np.asarray(
+                _victim_partition_pallas(
+                    jnp.asarray(fast), jnp.asarray(demand), interpret=True
+                )
+            )
+            for row in range(s):
+                # heap replay of GlobalDemoteRank.walk: pop the lowest
+                # rank positions among fast entries, demand[row] times
+                heap = list(np.flatnonzero(fast[row]))
+                heapq.heapify(heap)
+                want = set()
+                for _ in range(int(demand[row])):
+                    if not heap:
+                        break
+                    want.add(heapq.heappop(heap))
+                assert set(np.flatnonzero(got[row])) == want, (row, demand)
+            fallback = np.asarray(
+                _victim_partition_jnp(jnp.asarray(fast), jnp.asarray(demand))
+            )
+            assert np.array_equal(got, fallback)
+
+        _property()
