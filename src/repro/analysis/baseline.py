@@ -1,0 +1,132 @@
+"""The committed baseline file: grandfathered findings + rule pins.
+
+``analysis-baseline.json`` (repo root) holds three sections:
+
+* ``findings`` — grandfathered findings, each ``{rule, path,
+  fingerprint, snippet, reason}``. ``reason`` is mandatory and
+  human-written: the baseline is documentation of debt, not a mute
+  button. Entries whose finding disappears go *stale* and fail
+  ``--gate`` until deleted — the list only ever shrinks deliberately.
+* ``pins`` — per-rule pinned state keyed by rule code: the TUNA003
+  frozen-module digests, the TUNA006 serialized-schema fingerprint.
+* ``version`` — baseline format version (this module's
+  :data:`BASELINE_VERSION`).
+
+``--update-baseline`` rewrites the file from the current tree through
+:func:`build_updated`: reasons are carried over for findings that still
+match, new findings get :data:`PLACEHOLDER_REASON` (edit it before
+committing), fixed findings are dropped, pins are refreshed.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.analysis.core import Finding, Project
+
+BASELINE_VERSION = 1
+PLACEHOLDER_REASON = "TODO: document why this finding is grandfathered"
+
+
+class BaselineError(ValueError):
+    """Malformed baseline file (a usage error: exit code 2)."""
+
+
+class Baseline:
+    def __init__(self, findings: list[dict], pins: dict):
+        self.findings = findings
+        self.pins = pins
+        self._index = {
+            (e["rule"], e["path"], e["fingerprint"]) for e in findings
+        }
+
+    @classmethod
+    def empty(cls) -> "Baseline":
+        return cls([], {})
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        try:
+            d = json.loads(path.read_text())
+        except json.JSONDecodeError as e:
+            raise BaselineError(f"baseline {path} is not valid JSON: {e}")
+        if d.get("version") != BASELINE_VERSION:
+            raise BaselineError(
+                f"baseline {path} has version {d.get('version')!r}, "
+                f"this analyzer reads version {BASELINE_VERSION}"
+            )
+        findings = d.get("findings", [])
+        for e in findings:
+            missing = {"rule", "path", "fingerprint"} - set(e)
+            if missing:
+                raise BaselineError(
+                    f"baseline entry {e!r} is missing {sorted(missing)}"
+                )
+            if not str(e.get("reason", "")).strip():
+                raise BaselineError(
+                    f"baseline entry for {e['rule']} at {e['path']} has no "
+                    "reason; every grandfathered finding must document why"
+                )
+        return cls(findings, d.get("pins", {}))
+
+    def covers(self, f: Finding) -> bool:
+        return (f.rule, f.path, f.fingerprint) in self._index
+
+    def pin_for(self, code: str) -> dict | None:
+        return self.pins.get(code)
+
+    # ------------------------------------------------------------- write
+    def to_dict(self) -> dict:
+        return {
+            "version": BASELINE_VERSION,
+            "pins": {k: self.pins[k] for k in sorted(self.pins)},
+            "findings": sorted(
+                self.findings,
+                key=lambda e: (e["rule"], e["path"], e["fingerprint"]),
+            ),
+        }
+
+    def save(self, path: Path) -> None:
+        path.write_text(json.dumps(self.to_dict(), indent=2) + "\n")
+
+
+def build_updated(
+    rules, project: Project, current_findings: list[Finding],
+    old: Baseline | None,
+) -> Baseline:
+    """The ``--update-baseline`` document: refreshed pins + the current
+    un-suppressed findings (active *and* previously-baselined — the
+    caller passes both, so entries still covering live findings are kept
+    while fixed ones drop out) as grandfathered entries. Pin-backed
+    findings are resolved by the pin refresh itself, never listed."""
+    pins = {}
+    for r in rules:
+        p = r.pin(project)
+        if p is not None:
+            pins[r.code] = p
+    old_reasons = {}
+    if old is not None:
+        old_reasons = {
+            (e["rule"], e["path"], e["fingerprint"]): e.get("reason", "")
+            for e in old.findings
+        }
+    entries = []
+    seen = set()
+    for f in current_findings:
+        if not f.baselinable:
+            continue
+        key = (f.rule, f.path, f.fingerprint)
+        if key in seen:
+            continue  # identical lines share one entry
+        seen.add(key)
+        entries.append(
+            {
+                "rule": f.rule,
+                "path": f.path,
+                "fingerprint": f.fingerprint,
+                "snippet": f.snippet,
+                "reason": old_reasons.get(key) or PLACEHOLDER_REASON,
+            }
+        )
+    return Baseline(entries, pins)

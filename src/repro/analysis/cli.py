@@ -1,0 +1,223 @@
+"""``python -m repro.analysis`` / ``repro-analysis`` command line.
+
+Exit-code contract (pinned by tests/test_analysis.py, gated by CI):
+
+* ``0`` — clean: no active findings (suppressed/baselined don't count),
+  and under ``--gate`` no stale baseline entries either;
+* ``1`` — active findings, or (``--gate``) stale baseline entries;
+* ``2`` — usage/configuration error: unknown rule code in ``--select``,
+  malformed baseline file, nonexistent path argument.
+
+``--out report.json`` writes the machine-readable report regardless of
+``--format`` — the CI ``static-analysis`` job uploads it as an
+artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.core import RULES, instantiate_rules, collect_files, run_analysis
+
+DEFAULT_PATHS = ["src", "tests", "benchmarks"]
+DEFAULT_BASELINE = "analysis-baseline.json"
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="repro-analysis",
+        description=(
+            "AST-based invariant analyzer: determinism, bit-exactness and "
+            "provenance contracts (rule catalog: repro.analysis docstring, "
+            "or --list-rules)"
+        ),
+    )
+    p.add_argument(
+        "paths",
+        nargs="*",
+        default=None,
+        help=f"files/directories to scan (default: {' '.join(DEFAULT_PATHS)})",
+    )
+    p.add_argument(
+        "--root",
+        default=".",
+        help="project root (baseline default location; findings are "
+        "reported root-relative)",
+    )
+    p.add_argument(
+        "--baseline",
+        default=None,
+        help=f"baseline file (default: <root>/{DEFAULT_BASELINE}; a "
+        "missing file is an empty baseline)",
+    )
+    p.add_argument(
+        "--select",
+        default=None,
+        help="comma-separated rule codes to run (default: all registered)",
+    )
+    p.add_argument("--format", choices=("text", "json"), default="text")
+    p.add_argument(
+        "--out", default=None, help="write the JSON report to this file"
+    )
+    p.add_argument(
+        "--gate",
+        action="store_true",
+        help="strict CI mode: stale baseline entries fail too",
+    )
+    p.add_argument(
+        "--update-baseline",
+        action="store_true",
+        help="rewrite the baseline from the current tree (refreshes "
+        "frozen digests + schema fingerprint, grandfathers current "
+        "findings; edit placeholder reasons before committing)",
+    )
+    p.add_argument(
+        "--list-rules", action="store_true", help="print the rule catalog"
+    )
+    return p
+
+
+def _list_rules() -> str:
+    import repro.analysis.rules  # noqa: F401  (registers on import)
+
+    lines = []
+    for code in sorted(RULES):
+        r = RULES[code]
+        lines.append(f"{code}  {r.name:<20} {r.description}")
+    return "\n".join(lines)
+
+
+def _report(res, root: Path, gate: bool, exit_code: int) -> dict:
+    return {
+        "tool": "repro-analysis",
+        "root": str(root),
+        "files_scanned": res.files_scanned,
+        "rules_run": res.rules_run,
+        "gate": gate,
+        "exit_code": exit_code,
+        "findings": [
+            {
+                "rule": f.rule,
+                "path": f.path,
+                "line": f.line,
+                "message": f.message,
+                "snippet": f.snippet,
+                "fingerprint": f.fingerprint,
+            }
+            for f in res.findings
+        ],
+        "suppressed": len(res.suppressed),
+        "baselined": len(res.baselined),
+        "stale_baseline": res.stale_baseline,
+    }
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = _build_parser().parse_args(argv)
+    if args.list_rules:
+        print(_list_rules())
+        return 0
+
+    root = Path(args.root).resolve()
+    if not root.is_dir():
+        print(f"repro-analysis: root {args.root!r} is not a directory",
+              file=sys.stderr)
+        return 2
+    paths = args.paths or DEFAULT_PATHS
+    for p in paths:
+        full = Path(p) if Path(p).is_absolute() else root / p
+        if not full.exists():
+            print(f"repro-analysis: path {p!r} does not exist under {root}",
+                  file=sys.stderr)
+            return 2
+
+    bl_path = (
+        Path(args.baseline)
+        if args.baseline is not None
+        else root / DEFAULT_BASELINE
+    )
+    if not bl_path.is_absolute():
+        bl_path = root / bl_path
+    try:
+        bl = (
+            baseline_mod.Baseline.load(bl_path)
+            if bl_path.exists()
+            else baseline_mod.Baseline.empty()
+        )
+    except baseline_mod.BaselineError as e:
+        print(f"repro-analysis: {e}", file=sys.stderr)
+        return 2
+
+    select = (
+        [c.strip() for c in args.select.split(",") if c.strip()]
+        if args.select
+        else None
+    )
+    try:
+        relpaths = collect_files(root, paths)
+        res, project = run_analysis(root, relpaths, baseline=bl, select=select)
+    except ValueError as e:  # unknown --select code
+        print(f"repro-analysis: {e}", file=sys.stderr)
+        return 2
+
+    if args.update_baseline:
+        rules = instantiate_rules(select)
+        new_bl = baseline_mod.build_updated(
+            rules, project, res.findings + res.baselined, bl
+        )
+        new_bl.save(bl_path)
+        n_placeholder = sum(
+            1
+            for e in new_bl.findings
+            if e["reason"] == baseline_mod.PLACEHOLDER_REASON
+        )
+        print(
+            f"baseline written to {bl_path}: {len(new_bl.findings)} "
+            f"grandfathered finding(s), {len(new_bl.pins)} pin(s)"
+            + (
+                f"; edit the {n_placeholder} placeholder reason(s) before "
+                "committing"
+                if n_placeholder
+                else ""
+            )
+        )
+        return 0
+
+    failed = bool(res.findings) or (args.gate and bool(res.stale_baseline))
+    exit_code = 1 if failed else 0
+    report = _report(res, root, args.gate, exit_code)
+
+    if args.out:
+        out_path = Path(args.out)
+        if not out_path.is_absolute():
+            out_path = root / out_path
+        out_path.write_text(json.dumps(report, indent=2) + "\n")
+
+    if args.format == "json":
+        print(json.dumps(report, indent=2))
+    else:
+        for f in res.findings:
+            print(f"{f.path}:{f.line}: {f.rule} {f.message}")
+        for e in res.stale_baseline:
+            tag = "error" if args.gate else "warning"
+            print(
+                f"{e['path']}: {tag}: stale baseline entry for "
+                f"{e['rule']} ({e['fingerprint']}): the finding no longer "
+                "exists — delete the entry (or --update-baseline)"
+            )
+        print(
+            f"repro-analysis: {res.files_scanned} files, "
+            f"{len(res.rules_run)} rules, {len(res.findings)} finding(s), "
+            f"{len(res.suppressed)} suppressed, {len(res.baselined)} "
+            f"baselined, {len(res.stale_baseline)} stale baseline "
+            f"entr{'y' if len(res.stale_baseline) == 1 else 'ies'}"
+        )
+    return exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

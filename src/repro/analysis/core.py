@@ -1,0 +1,358 @@
+"""Analyzer core: the rule registry, source model, and the run driver.
+
+The registry mirrors :data:`repro.tiering.policy.POLICIES`: a rule is a
+class with a unique ``code``, registered with :func:`register_rule`, one
+per module under :mod:`repro.analysis.rules`. Everything in this
+package is stdlib only — the analyzer adds no dependency.
+"""
+
+from __future__ import annotations
+
+import ast
+import hashlib
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+
+# comment marker: "# tuna: ignore[TUNA001]" / "# tuna: ignore[TUNA001,TUNA007] why"
+_SUPPRESS_RE = re.compile(r"#\s*tuna:\s*ignore\[([A-Za-z0-9_\s,]+)\]")
+
+# directories never scanned (generated/cache/VCS trees)
+_SKIP_DIRS = {"__pycache__", ".git", "_cache", ".pytest_cache", ".ruff_cache"}
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str  # "TUNA004"
+    path: str  # root-relative posix path
+    line: int  # 1-based first line of the offending node
+    message: str
+    snippet: str = ""  # stripped source of the first line (fingerprint input)
+    end_line: int = 0  # last line of the node (suppression range); 0 = line
+    # pin-backed findings (frozen digest, schema fingerprint) cannot be
+    # grandfathered in the baseline findings list — --update-baseline
+    # resolves them by refreshing the pin instead
+    baselinable: bool = True
+
+    @property
+    def fingerprint(self) -> str:
+        """Line-number-independent identity: rule + path + normalized
+        source text. Identical lines in one file share a fingerprint (one
+        baseline entry covers all of them); unrelated edits that move the
+        line do not invalidate the entry."""
+        norm = re.sub(r"\s+", " ", self.snippet).strip()
+        return hashlib.sha1(
+            f"{self.rule}:{self.path}:{norm}".encode()
+        ).hexdigest()[:16]
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}"
+
+
+class ModuleSource:
+    """One parsed source file: text, lines, lazy AST, suppression map."""
+
+    def __init__(self, root: Path, relpath: str, text: str):
+        self.root = root
+        self.relpath = relpath
+        self.text = text
+        self.lines = text.splitlines()
+        self._tree: ast.Module | None = None
+        self.parse_error: SyntaxError | None = None
+        self._suppress: dict[int, set[str]] | None = None
+
+    @property
+    def tree(self) -> ast.Module | None:
+        if self._tree is None and self.parse_error is None:
+            try:
+                self._tree = ast.parse(self.text, filename=self.relpath)
+            except SyntaxError as e:
+                self.parse_error = e
+        return self._tree
+
+    def line_at(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    # ------------------------------------------------------- suppressions
+    @property
+    def suppressions(self) -> dict[int, set[str]]:
+        """1-based line -> set of rule codes suppressed on that line.
+
+        A marker on a code line suppresses that line; a marker on a
+        comment-only line suppresses the first following non-comment line
+        (intervening comment-only lines may continue the justification).
+        """
+        if self._suppress is None:
+            sup: dict[int, set[str]] = {}
+            for i, raw in enumerate(self.lines, start=1):
+                m = _SUPPRESS_RE.search(raw)
+                if not m:
+                    continue
+                codes = {c.strip() for c in m.group(1).split(",") if c.strip()}
+                sup.setdefault(i, set()).update(codes)
+                if raw.strip().startswith("#"):
+                    j = i + 1
+                    while j <= len(self.lines) and (
+                        not self.lines[j - 1].strip()
+                        or self.lines[j - 1].strip().startswith("#")
+                    ):
+                        j += 1
+                    if j <= len(self.lines):
+                        sup.setdefault(j, set()).update(codes)
+            self._suppress = sup
+        return self._suppress
+
+    def is_suppressed(self, f: Finding) -> bool:
+        last = max(f.end_line, f.line)
+        return any(
+            f.rule in self.suppressions.get(ln, ())
+            for ln in range(f.line, last + 1)
+        )
+
+
+class Project:
+    """The scanned tree: root, modules, and the loaded baseline (pins)."""
+
+    def __init__(self, root: Path, modules: list[ModuleSource], baseline=None):
+        self.root = Path(root)
+        self.modules = modules
+        self.baseline = baseline  # repro.analysis.baseline.Baseline | None
+        self._by_path = {m.relpath: m for m in modules}
+
+    def module(self, relpath: str) -> ModuleSource | None:
+        return self._by_path.get(relpath)
+
+    def read_bytes(self, relpath: str) -> bytes | None:
+        """Raw bytes of a root-relative file (digest pinning), scanned or
+        not; None when absent."""
+        p = self.root / relpath
+        try:
+            return p.read_bytes()
+        except OSError:
+            return None
+
+
+# --------------------------------------------------------------- registry
+
+# code -> Rule subclass; populated by @register_rule (one rule per module
+# under repro.analysis.rules, mirroring the POLICIES pattern)
+RULES: dict[str, type] = {}
+
+_CODE_RE = re.compile(r"^[A-Z]+[0-9]{3}$")
+
+
+def register_rule(cls):
+    """Class decorator: add ``cls`` to :data:`RULES` under its ``code``.
+    Re-registering the same class is a no-op; a different class under a
+    taken code is an error (no silent shadowing)."""
+    code = getattr(cls, "code", None)
+    if not isinstance(code, str) or not _CODE_RE.match(code):
+        raise ValueError(
+            f"rule class {cls.__name__} needs a code like 'TUNA001', "
+            f"got {code!r}"
+        )
+    prev = RULES.get(code)
+    if prev is not None and prev is not cls:
+        raise ValueError(
+            f"rule code {code!r} is already registered to "
+            f"{prev.__name__}; refusing to shadow it with {cls.__name__}"
+        )
+    RULES[code] = cls
+    return cls
+
+
+class Rule:
+    """Base class for one invariant contract.
+
+    ``scope`` path fragments select the files the rule sees (posix
+    relpath substring match, ``()`` = every scanned file); ``exempt``
+    fragments carve out exceptions. ``project_level`` rules run once per
+    analysis over the whole :class:`Project` (digest pinning, schema
+    fingerprints) instead of per file.
+    """
+
+    code = ""
+    name = ""
+    description = ""
+    scope: tuple[str, ...] = ()
+    exempt: tuple[str, ...] = ()
+    project_level = False
+
+    def applies(self, relpath: str) -> bool:
+        p = relpath.replace("\\", "/")
+        if any(x in p for x in self.exempt):
+            return False
+        return not self.scope or any(s in p for s in self.scope)
+
+    def check(self, mod: ModuleSource) -> list[Finding]:
+        return []
+
+    def check_project(self, project: Project) -> list[Finding]:
+        return []
+
+    def pin(self, project: Project) -> dict | None:
+        """Data ``--update-baseline`` stores under the rule's code in the
+        baseline ``pins`` section (digests, schema fingerprints); None
+        for rules with no pinned state."""
+        return None
+
+    # ---------------------------------------------------------- helpers
+    def finding(
+        self, mod: ModuleSource, node: ast.AST, message: str, **kw
+    ) -> Finding:
+        line = getattr(node, "lineno", 1)
+        return Finding(
+            rule=self.code,
+            path=mod.relpath,
+            line=line,
+            message=message,
+            snippet=mod.line_at(line),
+            end_line=getattr(node, "end_lineno", line) or line,
+            **kw,
+        )
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, None for anything dynamic."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+# ------------------------------------------------------------ file walking
+
+
+def collect_files(root: Path, paths: list[str]) -> list[str]:
+    """Resolve CLI path arguments into a sorted, deduplicated list of
+    root-relative posix ``*.py`` paths."""
+    out: set[str] = set()
+    for p in paths:
+        full = (root / p) if not Path(p).is_absolute() else Path(p)
+        if full.is_file() and full.suffix == ".py":
+            out.add(full.resolve().relative_to(root.resolve()).as_posix())
+        elif full.is_dir():
+            for f in sorted(full.rglob("*.py")):
+                if any(part in _SKIP_DIRS for part in f.parts):
+                    continue
+                out.add(f.resolve().relative_to(root.resolve()).as_posix())
+    return sorted(out)
+
+
+def load_project(
+    root: Path, relpaths: list[str], baseline=None
+) -> Project:
+    mods = []
+    for rp in relpaths:
+        try:
+            text = (root / rp).read_text(encoding="utf-8")
+        except (OSError, UnicodeDecodeError):
+            continue
+        mods.append(ModuleSource(root, rp, text))
+    return Project(root, mods, baseline=baseline)
+
+
+# ------------------------------------------------------------- run driver
+
+
+@dataclass
+class AnalysisResult:
+    """Outcome of one analyzer run, pre-split for reporting."""
+
+    findings: list[Finding] = field(default_factory=list)  # active (gate)
+    suppressed: list[Finding] = field(default_factory=list)
+    baselined: list[Finding] = field(default_factory=list)
+    stale_baseline: list[dict] = field(default_factory=list)
+    files_scanned: int = 0
+    rules_run: list[str] = field(default_factory=list)
+
+
+def instantiate_rules(select: list[str] | None = None) -> list[Rule]:
+    """Construct the selected rules in code order; unknown codes raise
+    ValueError listing what is registered (mirrors resolve_policy)."""
+    import repro.analysis.rules  # noqa: F401  (registers on import)
+
+    if select:
+        unknown = sorted(set(select) - set(RULES))
+        if unknown:
+            raise ValueError(
+                f"unknown rule code(s) {unknown}; registered: "
+                f"{sorted(RULES)}"
+            )
+        codes = sorted(set(select))
+    else:
+        codes = sorted(RULES)
+    return [RULES[c]() for c in codes]
+
+
+def run_analysis(
+    root: Path,
+    relpaths: list[str],
+    baseline=None,
+    select: list[str] | None = None,
+) -> tuple[AnalysisResult, Project]:
+    """Run the selected rules over ``relpaths`` and classify every raw
+    finding as active, suppressed (``# tuna: ignore``), or baselined."""
+    rules = instantiate_rules(select)
+    project = load_project(root, relpaths, baseline=baseline)
+    res = AnalysisResult(
+        files_scanned=len(project.modules),
+        rules_run=[r.code for r in rules],
+    )
+
+    raw: list[Finding] = []
+    for mod in project.modules:
+        applicable = [
+            r for r in rules if not r.project_level and r.applies(mod.relpath)
+        ]
+        if applicable and mod.tree is None and mod.parse_error is not None:
+            e = mod.parse_error
+            raw.append(
+                Finding(
+                    rule="PARSE",
+                    path=mod.relpath,
+                    line=e.lineno or 1,
+                    message=f"syntax error: {e.msg}",
+                    snippet=mod.line_at(e.lineno or 1),
+                    baselinable=False,
+                )
+            )
+            continue
+        for r in applicable:
+            raw.extend(r.check(mod))
+    for r in rules:
+        if r.project_level:
+            raw.extend(r.check_project(project))
+
+    matched_keys: set[tuple[str, str, str]] = set()
+    for f in sorted(raw, key=lambda f: (f.path, f.line, f.rule)):
+        mod = project.module(f.path)
+        if mod is not None and mod.is_suppressed(f):
+            res.suppressed.append(f)
+            continue
+        if baseline is not None and f.baselinable and baseline.covers(f):
+            res.baselined.append(f)
+            matched_keys.add((f.rule, f.path, f.fingerprint))
+            continue
+        res.findings.append(f)
+
+    if baseline is not None:
+        scanned = set(relpaths)
+        ran = set(res.rules_run)
+        for entry in baseline.findings:
+            key = (entry["rule"], entry["path"], entry["fingerprint"])
+            if (
+                entry["path"] in scanned
+                and entry["rule"] in ran
+                and key not in matched_keys
+            ):
+                res.stale_baseline.append(entry)
+    return res, project

@@ -1,0 +1,103 @@
+"""TUNA001: no unseeded or module-level RNG in simulator code.
+
+Fault schedules and workload traces must be reproducible from
+``Scenario.seed`` alone — the fault layer's splitmix64 schedules and
+every workload generator take an explicit seed, and the equivalence
+tests depend on re-running a scenario bit-exactly. Three patterns break
+that silently:
+
+* legacy ``np.random.<fn>`` calls (``np.random.rand``, ``.shuffle``,
+  ``.seed`` ...) share hidden module-level state across callers and
+  fan-out workers;
+* ``np.random.default_rng()`` with *no* seed argument draws OS entropy;
+* stdlib ``random`` module-level functions (``random.random``,
+  ``random.randint`` ...) share the interpreter-global generator.
+
+The fix is always the same: thread a ``np.random.Generator`` built from
+``np.random.default_rng(seed)`` through the call.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, ModuleSource, Rule, dotted_name, register_rule
+
+# np.random attributes that are fine: seeded-generator construction and
+# the type names used in annotations/isinstance checks
+_NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "BitGenerator", "PCG64"}
+
+# stdlib random attributes that carry no generator state
+_STDLIB_OK = {"Random", "SystemRandom", "getstate", "setstate"}
+
+
+@register_rule
+class SeededRngRule(Rule):
+    code = "TUNA001"
+    name = "seeded-rng"
+    description = (
+        "unseeded/module-level RNG (np.random.<fn>, bare default_rng(), "
+        "random.*) in sim/, tiering/, workloads/"
+    )
+    scope = ("sim/", "tiering/", "workloads/")
+
+    def check(self, mod: ModuleSource) -> list[Finding]:
+        out: list[Finding] = []
+        for node in ast.walk(mod.tree):
+            name = None
+            if isinstance(node, (ast.Attribute, ast.Call)):
+                target = node.func if isinstance(node, ast.Call) else node
+                name = dotted_name(target)
+            if name is None:
+                continue
+            if (
+                name == "default_rng"
+                and isinstance(node, ast.Call)
+                and not (node.args or node.keywords)
+            ):
+                # from numpy.random import default_rng; default_rng()
+                out.append(
+                    self.finding(
+                        mod,
+                        node,
+                        "default_rng() with no seed draws OS entropy; pass "
+                        "the scenario/workload seed",
+                    )
+                )
+            elif name.startswith(("np.random.", "numpy.random.")):
+                attr = name.split(".")[2]
+                if attr == "default_rng":
+                    if isinstance(node, ast.Call) and not (
+                        node.args or node.keywords
+                    ):
+                        out.append(
+                            self.finding(
+                                mod,
+                                node,
+                                "np.random.default_rng() with no seed draws "
+                                "OS entropy; pass the scenario/workload seed",
+                            )
+                        )
+                elif attr not in _NP_RANDOM_OK:
+                    out.append(
+                        self.finding(
+                            mod,
+                            node,
+                            f"legacy module-level RNG {name} shares hidden "
+                            "global state; use a seeded "
+                            "np.random.default_rng(seed) Generator",
+                        )
+                    )
+            elif name.startswith("random.") and name.count(".") == 1:
+                attr = name.split(".")[1]
+                if attr not in _STDLIB_OK:
+                    out.append(
+                        self.finding(
+                            mod,
+                            node,
+                            f"stdlib {name} uses the interpreter-global "
+                            "generator; use a seeded "
+                            "np.random.default_rng(seed) Generator",
+                        )
+                    )
+        return out

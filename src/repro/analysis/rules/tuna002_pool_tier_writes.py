@@ -1,0 +1,69 @@
+"""TUNA002: the pool owns the tier array — nobody writes it directly.
+
+``TieredPagePool`` keeps O(1) occupancy counters, a fast-tier index and
+per-interval victim queues *derived from* ``pool.tier``; a direct
+``pool.tier[pages] = ...`` write anywhere else desynchronizes them
+silently (the PR-2 ``serving/kv_cache.py`` bug: pages pinned into the
+fast tier behind the pool's back, occupancy counters drifting until the
+watermark math was wrong). All placement goes through ``place()`` or the
+bulk scheduling APIs, which maintain the invariants together.
+
+Only the two pool classes themselves (``tiering/page_pool.py`` and the
+frozen ``tiering/reference_pool.py``) may store into a ``.tier[...]``
+subscript. Reads compare freely everywhere.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, ModuleSource, Rule, register_rule
+
+
+def _tier_subscript_stores(node: ast.AST):
+    """Yield ``X.tier[...]`` subscripts in store context under ``node``."""
+    targets: list[ast.expr] = []
+    if isinstance(node, ast.Assign):
+        targets = list(node.targets)
+    elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+        targets = [node.target]
+    for t in targets:
+        # unpack tuple/list targets: (a, pool.tier[x]) = ...
+        stack = [t]
+        while stack:
+            cur = stack.pop()
+            if isinstance(cur, (ast.Tuple, ast.List)):
+                stack.extend(cur.elts)
+            elif (
+                isinstance(cur, ast.Subscript)
+                and isinstance(cur.value, ast.Attribute)
+                and cur.value.attr == "tier"
+            ):
+                yield cur
+
+
+@register_rule
+class PoolTierWriteRule(Rule):
+    code = "TUNA002"
+    name = "pool-tier-writes"
+    description = (
+        "direct <obj>.tier[...] writes outside the two pool classes; "
+        "use place() or the bulk scheduling APIs"
+    )
+    exempt = ("tiering/page_pool.py", "tiering/reference_pool.py")
+
+    def check(self, mod: ModuleSource) -> list[Finding]:
+        out: list[Finding] = []
+        for node in ast.walk(mod.tree):
+            for sub in _tier_subscript_stores(node):
+                out.append(
+                    self.finding(
+                        mod,
+                        sub,
+                        "direct .tier[...] write outside the pool classes "
+                        "desynchronizes occupancy counters and the fast-tier "
+                        "index (the PR-2 kv_cache bug); use place() or the "
+                        "bulk APIs",
+                    )
+                )
+        return out

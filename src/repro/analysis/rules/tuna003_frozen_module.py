@@ -1,0 +1,90 @@
+"""TUNA003: the frozen seed golden model stays frozen.
+
+``tiering/reference_pool.py`` is the seed pool implementation preserved
+verbatim: every engine/backend since PR 2 is pinned bit-exact against
+it, so an "optimization" or drive-by cleanup there would re-anchor the
+whole equivalence suite to a moved target. The rule pins the file's
+source digest in the baseline ``pins`` section and flags any drift.
+
+A deliberate re-freeze (there should essentially never be one) is:
+edit the file, run ``repro-analysis --update-baseline``, and commit
+both together so the diff review sees the digest move next to the code
+change. A missing pin is itself a finding — the contract must start
+pinned, not silently unenforced.
+"""
+
+from __future__ import annotations
+
+import hashlib
+
+from repro.analysis.core import Finding, Project, Rule, register_rule
+
+FROZEN_FILES = ("src/repro/tiering/reference_pool.py",)
+
+
+def _digest(data: bytes) -> str:
+    return "sha256:" + hashlib.sha256(data).hexdigest()
+
+
+@register_rule
+class FrozenModuleRule(Rule):
+    code = "TUNA003"
+    name = "frozen-module"
+    description = (
+        "frozen-module guard: reference_pool.py source digest pinned in "
+        "the baseline; any edit is flagged"
+    )
+    project_level = True
+
+    def check_project(self, project: Project) -> list[Finding]:
+        pinned = (
+            project.baseline.pin_for(self.code)
+            if project.baseline is not None
+            else None
+        ) or {}
+        out: list[Finding] = []
+        for rel in FROZEN_FILES:
+            data = project.read_bytes(rel)
+            if data is None:
+                continue  # tree without the frozen module (fixture runs)
+            actual = _digest(data)
+            want = pinned.get(rel)
+            if want is None:
+                out.append(
+                    Finding(
+                        rule=self.code,
+                        path=rel,
+                        line=1,
+                        message=(
+                            "frozen module has no pinned digest in the "
+                            "baseline; run --update-baseline to pin it"
+                        ),
+                        snippet=f"<digest {actual}>",
+                        baselinable=False,
+                    )
+                )
+            elif want != actual:
+                out.append(
+                    Finding(
+                        rule=self.code,
+                        path=rel,
+                        line=1,
+                        message=(
+                            "frozen seed golden model was edited (digest "
+                            f"{actual} != pinned {want}); revert, or "
+                            "--update-baseline in the same reviewed commit "
+                            "if the re-freeze is deliberate"
+                        ),
+                        snippet=f"<digest {actual}>",
+                        baselinable=False,
+                    )
+                )
+        return out
+
+    def pin(self, project: Project) -> dict | None:
+        pins = {}
+        for rel in FROZEN_FILES:
+            data = project.read_bytes(rel)
+            if data is not None:
+                pins[rel] = _digest(data)
+        return pins or None

@@ -1,0 +1,196 @@
+"""TUNA004: jit-reachable code is FMA-safe and host-effect-free.
+
+The PR-7 bit-exactness fight: XLA's CPU emitter contracts a fused
+``a*b + c`` float expression into an FMA — one ULP off numpy's separate
+multiply-then-add, and neither ``optimization_barrier`` nor the
+excess-precision flags stop it (fusions clone the multiply). The fix
+that landed is structural (``_decay_heat`` keeps the multiply in its
+own jitted executable so the interval step performs a pure add); this
+rule keeps every *new* fused multiply-add out of jit-reachable code in
+``sim/jax_engine.py`` and ``kernels/`` unless it is explicitly
+suppressed (integer arithmetic, or code with no numpy-equivalence
+contract) or baselined.
+
+The same reachability set must also be free of host side effects that
+silently freeze into the traced executable: ``print`` (fires at trace
+time, not run time), ``time.*`` reads (traced once, constant forever),
+and ``global`` writes (invisible to retraces).
+
+Reachability is the module-local call graph: roots are functions
+decorated with ``jit``/``jax.jit``/``partial(jax.jit, ...)``, functions
+passed to a ``jax.jit(...)`` or ``pl.pallas_call(...)`` call, and
+``jax.lax`` control-flow callbacks reached from those (any reference to
+a module function *by name* inside a reachable body adds an edge, which
+covers ``lax.while_loop(cond, body, ...)``-style indirect calls).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, ModuleSource, Rule, dotted_name, register_rule
+
+_JIT_NAMES = {"jit", "jax.jit"}
+_WRAP_CALLS = {"jax.jit", "jit", "pl.pallas_call", "pallas_call"}
+
+
+def _is_jit_decorator(dec: ast.expr) -> bool:
+    name = dotted_name(dec)
+    if name in _JIT_NAMES:
+        return True
+    if isinstance(dec, ast.Call):
+        fname = dotted_name(dec.func)
+        if fname in _JIT_NAMES:
+            return True  # @jax.jit(static_argnums=...)
+        if fname in ("partial", "functools.partial") and dec.args:
+            return dotted_name(dec.args[0]) in _JIT_NAMES
+    return False
+
+
+class _FuncInfo:
+    def __init__(self, node: ast.AST):
+        self.node = node
+        self.refs: set[str] = set()  # function names referenced in body
+        self.is_root = False
+
+
+def _body_walk_skip_nested(fn: ast.AST):
+    """Walk a function body without descending into nested defs (they
+    are tracked as their own graph nodes)."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+        ):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+@register_rule
+class JitPurityRule(Rule):
+    code = "TUNA004"
+    name = "jit-purity"
+    description = (
+        "fused a*b + c float expressions (FMA contraction, 1-ULP drift) "
+        "and host side effects (print/time.*/global writes) in "
+        "@jax.jit-reachable functions"
+    )
+    scope = ("jax_engine.py", "kernels/")
+
+    def check(self, mod: ModuleSource) -> list[Finding]:
+        funcs: dict[int, _FuncInfo] = {}
+        by_name: dict[str, list[_FuncInfo]] = {}
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                info = _FuncInfo(node)
+                funcs[id(node)] = info
+                by_name.setdefault(node.name, []).append(info)
+                info.is_root = any(
+                    _is_jit_decorator(d) for d in node.decorator_list
+                )
+
+        # functions handed to jax.jit(...) / pl.pallas_call(...) by name
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) and dotted_name(node.func) in _WRAP_CALLS:
+                for arg in node.args[:1]:
+                    name = dotted_name(arg)
+                    for info in by_name.get(name or "", []):
+                        info.is_root = True
+
+        # edges: any by-name reference inside a body (covers direct calls
+        # and lax.while_loop/scan/cond callback arguments)
+        for info in funcs.values():
+            for node in _body_walk_skip_nested(info.node):
+                if isinstance(node, ast.Name) and node.id in by_name:
+                    info.refs.add(node.id)
+
+        # BFS from roots
+        reachable: set[int] = set()
+        work = [i for i in funcs.values() if i.is_root]
+        while work:
+            info = work.pop()
+            if id(info.node) in reachable:
+                continue
+            reachable.add(id(info.node))
+            for name in info.refs:
+                work.extend(by_name.get(name, []))
+
+        out: list[Finding] = []
+        for info in funcs.values():
+            if id(info.node) not in reachable:
+                continue
+            fname = info.node.name
+            for node in _body_walk_skip_nested(info.node):
+                out.extend(self._check_node(mod, fname, node))
+        return out
+
+    # ------------------------------------------------------- node checks
+    def _check_node(self, mod, fname: str, node: ast.AST) -> list[Finding]:
+        out = []
+        mult = None
+        if isinstance(node, ast.BinOp) and isinstance(
+            node.op, (ast.Add, ast.Sub)
+        ):
+            for side in (node.left, node.right):
+                if isinstance(side, ast.BinOp) and isinstance(
+                    side.op, ast.Mult
+                ):
+                    mult = side
+                    break
+        elif isinstance(node, ast.AugAssign) and isinstance(
+            node.op, (ast.Add, ast.Sub)
+        ):
+            if isinstance(node.value, ast.BinOp) and isinstance(
+                node.value.op, ast.Mult
+            ):
+                mult = node.value
+        if mult is not None and not _all_int_literals(mult):
+            out.append(
+                self.finding(
+                    mod,
+                    node,
+                    f"fused multiply-add in jit-reachable {fname}(): XLA "
+                    "contracts a*b + c into an FMA (1 ULP off numpy); keep "
+                    "the multiply in its own jitted executable (the "
+                    "_decay_heat pattern), or suppress if integer/no "
+                    "bit-exact contract",
+                )
+            )
+        if isinstance(node, ast.Call):
+            cname = dotted_name(node.func)
+            if cname == "print":
+                out.append(
+                    self.finding(
+                        mod,
+                        node,
+                        f"print() under jit in {fname}() fires at trace "
+                        "time only; use jax.debug.print or hoist to host",
+                    )
+                )
+            elif cname is not None and cname.startswith("time."):
+                out.append(
+                    self.finding(
+                        mod,
+                        node,
+                        f"{cname}() under jit in {fname}() is traced once "
+                        "and frozen into the executable; time on host",
+                    )
+                )
+        if isinstance(node, ast.Global):
+            out.append(
+                self.finding(
+                    mod,
+                    node,
+                    f"global write in jit-reachable {fname}() is invisible "
+                    "to retraces; thread state through the carry",
+                )
+            )
+        return out
+
+
+def _all_int_literals(mult: ast.BinOp) -> bool:
+    return all(
+        isinstance(x, ast.Constant) and isinstance(x.value, int)
+        for x in (mult.left, mult.right)
+    )

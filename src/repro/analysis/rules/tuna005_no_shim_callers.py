@@ -1,0 +1,57 @@
+"""TUNA005: production code never calls the deprecated shims.
+
+``simulate`` / ``sweep_fm_fracs`` / ``sweep_tuned`` / ``sweep_times``
+are ``DeprecationWarning`` shims kept for external callers and as
+oracles in the equivalence tests; everything internal goes through
+:func:`repro.sim.api.run` so the planner, fan-out, fault layer and
+provenance stay on one path. Until now the only tripwire was the CI
+quickstart smoke under ``-W error`` — which catches a regression only
+on the code paths the quickstart happens to execute. This rule flags
+every call site statically, ``src/`` wide.
+
+Scope is ``src/`` only: tests deliberately drive the shims as oracles,
+and the defining modules (``sim/engine.py``, ``sim/sweep.py``) contain
+the shims themselves.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, ModuleSource, Rule, dotted_name, register_rule
+
+SHIM_NAMES = ("simulate", "sweep_fm_fracs", "sweep_tuned", "sweep_times")
+
+
+@register_rule
+class NoShimCallersRule(Rule):
+    code = "TUNA005"
+    name = "no-shim-callers"
+    description = (
+        "internal (src/) callers of the DeprecationWarning shims "
+        "simulate/sweep_fm_fracs/sweep_tuned/sweep_times; use "
+        "repro.sim.api.run"
+    )
+    scope = ("src/",)
+    exempt = ("sim/engine.py", "sim/sweep.py")
+
+    def check(self, mod: ModuleSource) -> list[Finding]:
+        out: list[Finding] = []
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name is None:
+                continue
+            base = name.rsplit(".", 1)[-1]
+            if base in SHIM_NAMES:
+                out.append(
+                    self.finding(
+                        mod,
+                        node,
+                        f"internal call to deprecated shim {base}(); "
+                        "describe the run with repro.sim.api "
+                        "Scenario/Experiment and execute it with run()",
+                    )
+                )
+        return out

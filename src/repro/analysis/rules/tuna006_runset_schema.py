@@ -1,0 +1,179 @@
+"""TUNA006: RunSet schema evolution is additive and deliberate.
+
+``RunSet.to_json`` is the provenance record every figure/table driver,
+the result cache, and downstream consumers parse; its schema version
+(``tuna-runset-v*``) has evolved additively with ``from_json`` keeping
+read-compat for every prior version. That contract lived in review
+memory only. This rule fingerprints the serialized surface of
+``sim/api.py`` — the ``RUNSET_SCHEMA`` constant, the
+``RUNSET_SCHEMA_COMPAT`` tuple, and the set of field names written by
+``RunSet.to_json`` / ``_result_to_dict`` / ``_decision_to_dict`` — and
+pins it in the baseline. It flags:
+
+* serialized field names changed while ``RUNSET_SCHEMA`` stayed the
+  same (silent schema drift: cached RunSets written yesterday claim the
+  same version but carry different fields);
+* a version bump that drops the previous version from
+  ``RUNSET_SCHEMA_COMPAT`` (``from_json`` would refuse yesterday's
+  documents — evolution must stay additive);
+* a compat tuple that does not accept the *current* version (writes
+  ``from_json`` itself would reject);
+* any legitimate change without the pin refreshed — a schema bump is
+  finished by ``--update-baseline`` in the same commit, so the diff
+  review sees the fingerprint move next to the code change.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, Project, Rule, register_rule
+
+API_PATH = "src/repro/sim/api.py"
+_SERIALIZER_FUNCS = ("_result_to_dict", "_decision_to_dict")
+
+
+def extract_schema(tree: ast.Module) -> dict | None:
+    """``{"schema": str, "compat": [...], "keys": [...]}`` from api.py's
+    AST; None when the module has no RUNSET_SCHEMA constant."""
+    schema = None
+    compat_node = None
+    keys: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            t = node.targets[0]
+            if isinstance(t, ast.Name) and t.id == "RUNSET_SCHEMA":
+                if isinstance(node.value, ast.Constant):
+                    schema = node.value.value
+            elif isinstance(t, ast.Name) and t.id == "RUNSET_SCHEMA_COMPAT":
+                compat_node = node.value
+    if schema is None:
+        return None
+    compat = []
+    if isinstance(compat_node, (ast.Tuple, ast.List)):
+        for el in compat_node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                compat.append(el.value)
+            elif isinstance(el, ast.Name) and el.id == "RUNSET_SCHEMA":
+                compat.append(schema)
+
+    def collect_keys(fn: ast.AST) -> None:
+        for n in ast.walk(fn):
+            if isinstance(n, ast.Dict):
+                for k in n.keys:
+                    if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                        keys.add(k.value)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == "RunSet":
+            for item in node.body:
+                if (
+                    isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and item.name == "to_json"
+                ):
+                    collect_keys(item)
+        elif (
+            isinstance(node, ast.FunctionDef)
+            and node.name in _SERIALIZER_FUNCS
+        ):
+            collect_keys(node)
+    return {"schema": schema, "compat": compat, "keys": sorted(keys)}
+
+
+@register_rule
+class RunSetSchemaRule(Rule):
+    code = "TUNA006"
+    name = "runset-schema"
+    description = (
+        "RunSet schema drift: serialized fields in sim/api.py changed "
+        "without a tuna-runset-v* bump, or a bump broke from_json "
+        "read-compat"
+    )
+    project_level = True
+
+    def _api_module(self, project: Project):
+        for mod in project.modules:
+            if mod.relpath.endswith("sim/api.py") and mod.tree is not None:
+                return mod
+        return None
+
+    def check_project(self, project: Project) -> list[Finding]:
+        mod = self._api_module(project)
+        if mod is None:
+            return []
+        cur = extract_schema(mod.tree)
+        if cur is None:
+            return []
+
+        def f(msg: str) -> Finding:
+            return Finding(
+                rule=self.code,
+                path=mod.relpath,
+                line=1,
+                message=msg,
+                snippet=f"<runset schema {cur['schema']}>",
+                baselinable=False,
+            )
+
+        out: list[Finding] = []
+        if cur["schema"] not in cur["compat"]:
+            out.append(
+                f(
+                    f"RUNSET_SCHEMA_COMPAT {cur['compat']} does not accept "
+                    f"the current RUNSET_SCHEMA {cur['schema']!r}; from_json "
+                    "would reject this build's own writes"
+                )
+            )
+        pinned = (
+            project.baseline.pin_for(self.code)
+            if project.baseline is not None
+            else None
+        )
+        if pinned is None:
+            out.append(
+                f(
+                    "RunSet serialized schema has no pinned fingerprint in "
+                    "the baseline; run --update-baseline to pin it"
+                )
+            )
+            return out
+        if cur["schema"] == pinned["schema"]:
+            added = sorted(set(cur["keys"]) - set(pinned["keys"]))
+            removed = sorted(set(pinned["keys"]) - set(cur["keys"]))
+            if added or removed:
+                out.append(
+                    f(
+                        "serialized RunSet fields changed "
+                        f"(added {added}, removed {removed}) without bumping "
+                        f"RUNSET_SCHEMA from {pinned['schema']!r}: bump the "
+                        "version, keep the old one in RUNSET_SCHEMA_COMPAT "
+                        "with a from_json compat branch, then "
+                        "--update-baseline"
+                    )
+                )
+        else:
+            if pinned["schema"] not in cur["compat"]:
+                out.append(
+                    f(
+                        f"RUNSET_SCHEMA bumped {pinned['schema']!r} -> "
+                        f"{cur['schema']!r} but the previous version left "
+                        "RUNSET_SCHEMA_COMPAT; evolution must stay additive "
+                        "(keep a from_json compat branch)"
+                    )
+                )
+            else:
+                out.append(
+                    f(
+                        f"RUNSET_SCHEMA bumped {pinned['schema']!r} -> "
+                        f"{cur['schema']!r} (compat kept); finish the bump "
+                        "by refreshing the pinned fingerprint with "
+                        "--update-baseline in this commit"
+                    )
+                )
+        return out
+
+    def pin(self, project: Project) -> dict | None:
+        mod = self._api_module(project)
+        if mod is None:
+            return None
+        return extract_schema(mod.tree)

@@ -1,0 +1,68 @@
+"""TUNA007: simulator results are a pure function of trace and seed.
+
+Simulated "time" in this repo is model output (interval costs from
+``sim/costmodel.py``), never the host's clock: two runs of the same
+scenario must produce bit-identical RunSets on any machine at any
+wall-clock speed, and checkpoints of the same tree must be
+byte-identical (the ``checkpoint/store.py`` ``COMMIT`` file used to
+embed ``time.time()``, defeating exactly that). This rule flags
+wall-clock reads — ``time.time``/``perf_counter``/``monotonic``/
+``process_time`` (and ``_ns`` variants), ``datetime.now``/``utcnow`` —
+in ``sim/``, ``tiering/`` and ``checkpoint/``.
+
+Benchmarks and ``launch/`` measure real execution and are exempt by
+scope; a deliberate wall-clock read inside scope (none exist today)
+takes a ``# tuna: ignore[TUNA007]`` with its justification.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, ModuleSource, Rule, dotted_name, register_rule
+
+_WALL_CLOCK = {
+    "time.time",
+    "time.time_ns",
+    "time.perf_counter",
+    "time.perf_counter_ns",
+    "time.monotonic",
+    "time.monotonic_ns",
+    "time.process_time",
+    "time.process_time_ns",
+    "time.clock_gettime",
+    "datetime.now",
+    "datetime.utcnow",
+    "datetime.datetime.now",
+    "datetime.datetime.utcnow",
+}
+
+
+@register_rule
+class TraceDeterminismRule(Rule):
+    code = "TUNA007"
+    name = "trace-determinism"
+    description = (
+        "wall-clock reads (time.time/perf_counter/...) in sim/, tiering/, "
+        "checkpoint/, where results must be trace-deterministic"
+    )
+    scope = ("sim/", "tiering/", "checkpoint/")
+    exempt = ("benchmarks/", "launch/")
+
+    def check(self, mod: ModuleSource) -> list[Finding]:
+        out: list[Finding] = []
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name in _WALL_CLOCK:
+                out.append(
+                    self.finding(
+                        mod,
+                        node,
+                        f"wall-clock read {name}() in trace-deterministic "
+                        "code: results must be a pure function of trace + "
+                        "seed (model time comes from sim/costmodel.py)",
+                    )
+                )
+        return out

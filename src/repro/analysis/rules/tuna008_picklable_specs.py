@@ -1,0 +1,59 @@
+"""TUNA008: Scenario factory arguments must survive the process fan-out.
+
+``Scenario.trace`` / ``pool_factory`` / ``runner`` accept callables so
+traces are built *inside* fan-out workers (the spec ships, the arrays
+do not). A ``lambda`` there pickles on the submit path and dies inside
+the worker pool with an opaque ``PicklingError`` — and only when the
+planner's parallelism heuristic actually fans out, so the bug hides on
+small experiments and surfaces on the 12-scenario one. The runtime
+complement is :func:`repro.sim.api.run`'s upfront ``pickle.dumps``
+validation (which names the offending field); this lint catches the
+pattern at review time regardless of experiment size. Use a
+module-level function or ``functools.partial`` over one instead.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, ModuleSource, Rule, dotted_name, register_rule
+
+_FACTORY_KWARGS = ("trace", "pool_factory", "runner")
+
+
+@register_rule
+class PicklableSpecsRule(Rule):
+    code = "TUNA008"
+    name = "picklable-specs"
+    description = (
+        "lambda passed as a Scenario(trace=/pool_factory=/runner=) "
+        "factory argument cannot cross the run() process fan-out"
+    )
+
+    def check(self, mod: ModuleSource) -> list[Finding]:
+        out: list[Finding] = []
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            cname = dotted_name(node.func)
+            if cname is None or cname.rsplit(".", 1)[-1] != "Scenario":
+                continue
+            suspects: list[tuple[str, ast.expr]] = []
+            if node.args and isinstance(node.args[0], ast.Lambda):
+                suspects.append(("trace", node.args[0]))
+            for kw in node.keywords:
+                if kw.arg in _FACTORY_KWARGS and isinstance(
+                    kw.value, ast.Lambda
+                ):
+                    suspects.append((kw.arg, kw.value))
+            for field, lam in suspects:
+                out.append(
+                    self.finding(
+                        mod,
+                        lam,
+                        f"Scenario({field}=lambda ...) cannot be pickled "
+                        "into a fan-out worker; use a module-level function "
+                        "or functools.partial",
+                    )
+                )
+        return out

@@ -21,7 +21,6 @@ import hashlib
 import json
 import shutil
 import threading
-import time
 from pathlib import Path
 
 import jax
@@ -68,8 +67,21 @@ def save_checkpoint(ckpt_dir, step: int, tree, extra: dict | None = None) -> Pat
             "dtype": logical_dtype,
             "digest": hashlib.sha1(arr.tobytes()).hexdigest()[:16],
         }
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
-    (tmp / "COMMIT").write_text(str(time.time()))
+    manifest_text = json.dumps(manifest)
+    (tmp / "manifest.json").write_text(manifest_text)
+    # deterministic commit payload: the same tree at the same step yields
+    # a byte-identical checkpoint directory (a wall-clock payload here
+    # would make otherwise-identical checkpoints differ)
+    (tmp / "COMMIT").write_text(
+        json.dumps(
+            {
+                "step": step,
+                "manifest_sha256": hashlib.sha256(
+                    manifest_text.encode()
+                ).hexdigest(),
+            }
+        )
+    )
     if tgt.exists():
         shutil.rmtree(tgt)
     tmp.rename(tgt)

@@ -45,9 +45,11 @@ def _flash_kernel(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     ) * sm_scale  # (bq, bk)
 
+    # tuna: ignore[TUNA004] int32 position arithmetic; FMA contraction is
+    # a float-only hazard
     q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) \
         + (seq_k - seq_q)
-    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)  # tuna: ignore[TUNA004] int32
     if causal:
         s = jnp.where(k_pos <= q_pos, s, NEG_INF)
     # out-of-range kv positions (padded tail)
@@ -58,8 +60,10 @@ def _flash_kernel(
     m_new = jnp.maximum(m_prev, m_cur)
     alpha = jnp.exp(m_prev - m_new)
     p = jnp.exp(s - m_new)
+    # tuna: ignore[TUNA004] online-softmax rescale: model kernel with
+    # float-tolerance tests, no bit-exact-vs-numpy contract; FMA welcome
     l_new = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
-    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(  # tuna: ignore[TUNA004] same rescale
         p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )
     m_scr[...] = m_new

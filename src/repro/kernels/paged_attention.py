@@ -51,7 +51,7 @@ def _paged_kernel(
         preferred_element_type=jnp.float32,
     ) * sm_scale
     # mask: token position within the sequence = j*page_size + i
-    pos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+    pos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)  # tuna: ignore[TUNA004] int32
     valid = (pos < len_ref[b]) & (tbl_ref[b, j] >= 0)
     s = jnp.where(valid, s, NEG_INF)
     s = s.reshape(H, psize)
@@ -60,13 +60,15 @@ def _paged_kernel(
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
     alpha = jnp.exp(m_prev - m_new)
     p = jnp.exp(s - m_new)  # (H, psize)
+    # tuna: ignore[TUNA004] online-softmax rescale: model kernel with
+    # float-tolerance tests, no bit-exact-vs-numpy contract; FMA welcome
     l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
     pg = p.reshape(KV, rep, psize)
     pv = jax.lax.dot_general(
         pg, jnp.moveaxis(v, 1, 0), (((2,), (1,)), ((0,), (0,))),
         preferred_element_type=jnp.float32,
     )  # (KV, rep, hd)
-    acc_scr[...] = acc_scr[...] * alpha + pv.reshape(H, hd)
+    acc_scr[...] = acc_scr[...] * alpha + pv.reshape(H, hd)  # tuna: ignore[TUNA004] same rescale
     m_scr[...] = m_new
 
     @pl.when(j == pl.num_programs(1) - 1)

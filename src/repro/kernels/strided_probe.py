@@ -31,6 +31,8 @@ def _probe_kernel(fast_idx_ref, slow_idx_ref, fast_ref, slow_ref, out_ref,
     x = jnp.where(i < n_fast, fast_ref[...], slow_ref[...]).astype(jnp.float32)
 
     def body(_, acc):
+        # tuna: ignore[TUNA004] deliberately FMA-shaped: the probe wants
+        # peak-rate arithmetic per element, not a numeric contract
         return acc * 1.000001 + x
 
     acc = jax.lax.fori_loop(0, ai_iters, body, jnp.zeros_like(x))

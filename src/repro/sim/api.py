@@ -167,9 +167,11 @@ import inspect
 import json
 import multiprocessing as mp
 import os
+import pickle
 import re
 import uuid
 from dataclasses import asdict, dataclass, field
+from dataclasses import fields as dataclass_fields
 from pathlib import Path
 from typing import Callable, Sequence
 
@@ -1041,6 +1043,47 @@ def _experiment_spec(
     }
 
 
+def _unpicklable_fields(spec_obj) -> list[str]:
+    bad = []
+    for f in dataclass_fields(spec_obj):
+        try:
+            pickle.dumps(getattr(spec_obj, f.name))
+        except Exception:  # noqa: BLE001 - any pickle failure disqualifies
+            bad.append(f.name)
+    return bad
+
+
+def _validate_picklable(scenarios, policies) -> None:
+    """Fail fast on specs that cannot cross the process fan-out.
+
+    Fan-out jobs are pickled into worker processes; a lambda or closure
+    in a ``Scenario(trace=...)``/``pool_factory``/``runner`` (or a
+    policy-spec param) would otherwise die inside the executor's feeder
+    thread with an opaque ``PicklingError`` long after ``run()``
+    accepted the experiment — and only when the parallelism heuristic
+    actually fans out. The static complement is the TUNA008 lint
+    (:mod:`repro.analysis`); this is the runtime guard that names the
+    offending field.
+    """
+    for kind, objs, name_of in (
+        ("scenario", scenarios, lambda o: o.resolved_name),
+        ("policy spec", policies, lambda o: o.name),
+    ):
+        for obj in objs:
+            try:
+                pickle.dumps(obj)
+            except Exception as e:  # noqa: BLE001 - report any failure
+                bad = _unpicklable_fields(obj) or ["<whole object>"]
+                raise ScenarioExecutionError(
+                    f"{kind} {name_of(obj)!r} cannot be pickled into a "
+                    f"fan-out worker: offending field(s) {bad} "
+                    f"({type(e).__name__}: {e}). Use a module-level "
+                    "function or functools.partial instead of a lambda/"
+                    "closure, or force serial execution with "
+                    "parallelism=1"
+                ) from e
+
+
 def _fanout(jobs: list, parallelism: int, scenario_timeout: float | None):
     """Submit-based process fan-out over scenario jobs.
 
@@ -1147,7 +1190,12 @@ def run(
     = no bound; serial runs are never timed out). A scenario that *fails*
     in a worker is re-raised as :class:`ScenarioExecutionError` naming the
     scenario and echoing its spec, with the worker exception as
-    ``__cause__``. ``cache_dir`` opts into
+    ``__cause__``; before anything is submitted, every scenario and
+    policy spec is checked picklable upfront, and a lambda/closure in a
+    factory field raises :class:`ScenarioExecutionError` naming the
+    field instead of dying opaquely inside the pool (the static
+    complement is the TUNA008 lint in :mod:`repro.analysis`).
+    ``cache_dir`` opts into
     the RunSet result cache (see the module docstring's *Result caching*
     section): a directory under which the whole RunSet is memoized as its
     JSON document, keyed on the experiment spec echo + schema version.
@@ -1267,6 +1315,7 @@ def run(
     parallelism = max(1, min(int(parallelism), len(jobs)))
     outs = None
     if parallelism > 1:
+        _validate_picklable(scenarios, policies)
         trapped = _fanout(jobs, parallelism, scenario_timeout)
         if trapped is not None:
             outs = []

@@ -27,6 +27,7 @@ from repro.sim.api import (
     PolicySpec,
     RunSet,
     Scenario,
+    ScenarioExecutionError,
     TunerSpec,
     run,
 )
@@ -111,6 +112,12 @@ def live_tuner(db, spec=TUNER_SPEC) -> TunaTuner:
             cooldown_windows=spec.cooldown_windows,
         ),
     )
+
+
+def _const_payload_runner(sc, f, spec, db):
+    # module-level (not a lambda) so the scenario stays picklable across
+    # the run() process fan-out — TUNA008
+    return {"p99": 1.25, "n": 3}
 
 
 def assert_result_equal(got, want, configs=True, fm_sizes=True):
@@ -318,6 +325,24 @@ class TestPlannerEquivalence:
             assert (a.policy, a.fm_frac) == (b.policy, b.fm_frac)
             assert_result_equal(a.result, b.result)
 
+    def test_fanout_rejects_unpicklable_spec_upfront(self):
+        # a lambda trace dies inside the worker pool with an opaque
+        # PicklingError; run() must fail fast and name the field instead
+        exp = Experiment(
+            scenarios=[
+                # tuna: ignore[TUNA008] the lint's target, used here to
+                # prove the runtime guard catches what slips past it
+                Scenario(name="s0", trace=lambda: random_trace(1)),
+                Scenario(trace=random_trace(2, n_intervals=3)),
+            ],
+            fm_fracs=(0.5,),
+        )
+        with pytest.raises(ScenarioExecutionError, match=r"'s0'.*trace"):
+            run(exp, parallelism=2)
+        # serial execution never pickles, so the same spec is allowed
+        rs = run(exp, parallelism=1)
+        assert len(rs.runs) == 2
+
     def test_workload_name_and_callable_scenarios(self):
         tr = random_trace(11, n_intervals=4)
 
@@ -493,12 +518,7 @@ class TestRunSetSerialization:
     def test_custom_payload_round_trip(self):
         rs = run(
             Experiment(
-                scenarios=[
-                    Scenario(
-                        name="svc",
-                        runner=lambda sc, f, spec, db: {"p99": 1.25, "n": 3},
-                    )
-                ],
+                scenarios=[Scenario(name="svc", runner=_const_payload_runner)],
             )
         )
         back = RunSet.from_json(rs.to_json())

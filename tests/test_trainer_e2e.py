@@ -3,6 +3,7 @@
 import numpy as np
 import pytest
 
+from repro.checkpoint.store import save_checkpoint
 from repro.configs import get_config
 from repro.launch.mesh import make_host_mesh
 from repro.launch.trainer import train
@@ -45,3 +46,16 @@ def test_checkpoint_resume_bit_exact(tiny_cfg, tmp_path):
     np.testing.assert_allclose(
         resumed.losses, full.losses[8:], rtol=1e-5, atol=1e-6
     )
+
+
+def test_commit_marker_is_deterministic(tmp_path):
+    # the same tree at the same step must produce a byte-identical
+    # checkpoint directory, COMMIT marker included — a wall-clock payload
+    # there would break checkpoint-level reproducibility comparisons
+    tree = {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": np.zeros(4, dtype=np.float32)}
+    a = save_checkpoint(tmp_path / "a", step=7, tree=tree)
+    b = save_checkpoint(tmp_path / "b", step=7, tree=tree)
+    assert (a / "COMMIT").read_bytes() == (b / "COMMIT").read_bytes()
+    payload = (a / "COMMIT").read_text()
+    assert '"step": 7' in payload and "manifest_sha256" in payload
