@@ -40,7 +40,14 @@ to end, seed vs current engine:
    (stats, interval times, config vectors) before timing. On 2-core CI
    runners under interpret mode the ratio is informational headroom; the
    equivalence assertions are the contract.
-7. **stress section** — a fleet-sized experiment: 1000 tiny scenarios
+7. **fleet path** — the tuned path's closed-loop runs wrapped as a
+   single-tenant :class:`~repro.fleet.FleetScenario` at the full budget,
+   tuned at every loss target. The degenerate case is the fleet layer's contract: the
+   arbiter may only hold (``within_budget`` events in the
+   ``arbiter_log``), and every run must be bit-identical to the bare
+   tuned sweep — so the lane times (and ratio-gates) exactly the fleet
+   scaffolding's overhead: trace merge, slice mapping, arbiter holds.
+8. **stress section** — a fleet-sized experiment: 1000 tiny scenarios
    (150 in quick mode) through the :func:`repro.sim.api.run` planner and
    its process fan-out in one call. Correctness-gated (every scenario must
    complete, with zero chunked steps); wall clock is reported as
@@ -74,7 +81,9 @@ the top level themselves), quick mode refuses ``--out BENCH_engine.json``
 the gate refuses to compare a quick run against a baseline that has no
 ``quick_baseline`` section. Schema additions for the new lanes:
 ``jax_path_{seed_s,new_s,speedup,ratio}``, ``jax_sweep_chunked_steps``,
-``jax_migrations``, ``jax_pallas_mode``, and ``stress_scenarios``,
+``jax_migrations``, ``jax_pallas_mode``,
+``fleet_path_{seed_s,new_s,speedup,ratio}``, ``fleet_migrations``,
+``fleet_sweep_chunked_steps``, and ``stress_scenarios``,
 ``stress_path_new_s``, ``stress_scenarios_per_s``.
 
 The application trace is a self-contained deterministic stand-in for the
@@ -98,6 +107,7 @@ from repro.core.microbench import generate_microbench
 from repro.core.trace import IntervalAccess, Trace
 from repro.core.tuner import TunaTuner, TunerConfig, build_database, scale_config
 from repro.core.watermark import WatermarkController
+from repro.fleet import ArbiterSpec, FleetScenario, TenantSpec
 from repro.sim.api import Experiment, PolicySpec, Scenario, TunerSpec
 from repro.sim.api import run as run_experiment
 
@@ -625,6 +635,96 @@ def run(report, params: BenchParams = FULL) -> dict:
             empty_msg="engine bench: jax path scenario did not migrate",
         )
 
+    # --- the fleet path: the tuned closed-loop runs as a single-tenant
+    #     FleetScenario at budget_frac=1.0 — the degenerate case the fleet
+    #     layer promises is free. With one tenant and the whole budget the
+    #     arbiter can only ever hold (within_budget), so every tuned run
+    #     must be bit-identical to the plain tuned sweep it wraps (stats,
+    #     interval times, fm trajectories, config vectors), while the
+    #     arbiter_log proves arbitration actually stepped. Times the fleet
+    #     scaffolding (trace merge, slice mapping, arbiter holds) against
+    #     the bare tuned sweep, and gates the ratio so the wrapper's
+    #     overhead cannot silently grow.
+    fleet_policies = [
+        PolicySpec(
+            label=f"tau{tau:g}",
+            tuner=TunerSpec(
+                target_loss=tau,
+                tune_every=p.tune_every,
+                k_neighbors=1,
+                cooldown_windows=3,
+                max_step_frac=0.05,
+            ),
+        )
+        for tau in p.tuned_targets
+    ]
+
+    def _seed_fleet():
+        return run_experiment(
+            Experiment(
+                name="bench_fleet_oracle",
+                scenarios=[Scenario(trace=trace)],
+                fm_fracs=(1.0,),
+                policies=fleet_policies,
+            ),
+            db=db_new,
+        ).runs
+
+    def _new_fleet():
+        return run_experiment(
+            Experiment(
+                name="bench_fleet",
+                scenarios=[
+                    FleetScenario(
+                        tenants=(TenantSpec(trace=trace, name="solo"),),
+                        name="fleet",
+                        budget_frac=1.0,
+                        arbiter=ArbiterSpec(every=2),
+                    )
+                ],
+                fm_fracs=(1.0,),
+                policies=fleet_policies,
+            ),
+            db=db_new,
+        )
+
+    def _check_fleet(r_seed, rec):
+        if r_seed.backend != "tuned_sweep" or rec.backend != "fleet":
+            raise AssertionError(
+                "engine bench: fleet path routed to the wrong backends "
+                f"({r_seed.backend!r} vs {rec.backend!r})"
+            )
+        if not rec.arbiter_log:
+            raise AssertionError(
+                "engine bench: fleet path ran without arbitration events"
+            )
+        if any(e["mode"] != "within_budget" for e in rec.arbiter_log):
+            raise AssertionError(
+                "engine bench: single-tenant full-budget fleet actuated "
+                "the arbiter"
+            )
+        if (
+            r_seed.result.stats != rec.result.stats
+            or not np.array_equal(
+                r_seed.result.interval_times, rec.result.interval_times
+            )
+            or not np.array_equal(r_seed.result.fm_sizes, rec.result.fm_sizes)
+            or r_seed.result.configs != rec.result.configs
+        ):
+            raise AssertionError(
+                "engine bench: fleet degenerate case diverges from the "
+                "tuned sweep"
+            )
+        return rec.result.migrations
+
+    fl_seed, fl_new, fleet_speedup, fleet_ratio, fleet_chunked, \
+        fleet_migrations = _churn_lane(
+            report, "fleet", _seed_fleet, _new_fleet, _check_fleet,
+            p.thrash_repeats,
+            # a fleet lane whose tuners never actuate times an idle wrapper
+            empty_msg="engine bench: fleet path scenario did not migrate",
+        )
+
     # --- fleet-sized stress: the run() planner and its process fan-out at
     #     experiment scale — p.stress_scenarios tiny scenarios (1000 full,
     #     scaled down in quick mode) in one call. Correctness-gated: every
@@ -717,6 +817,12 @@ def run(report, params: BenchParams = FULL) -> dict:
         "jax_path_new_s": round(jx_new, 3),
         "jax_path_speedup": round(jax_speedup, 2),
         "jax_path_ratio": round(jax_ratio, 4),
+        "fleet_migrations": int(fleet_migrations),
+        "fleet_sweep_chunked_steps": int(fleet_chunked),
+        "fleet_path_seed_s": round(fl_seed, 3),
+        "fleet_path_new_s": round(fl_new, 3),
+        "fleet_path_speedup": round(fleet_speedup, 2),
+        "fleet_path_ratio": round(fleet_ratio, 4),
         "stress_scenarios": stress_n,
         "stress_path_new_s": round(stress_t, 3),
         "stress_scenarios_per_s": round(stress_n / stress_t, 2),
@@ -734,7 +840,8 @@ def run(report, params: BenchParams = FULL) -> dict:
 
 
 GATED_PATHS = (
-    "bench_db_path", "tuned_path", "thrash_path", "admission_path", "jax_path"
+    "bench_db_path", "tuned_path", "thrash_path", "admission_path",
+    "jax_path", "fleet_path",
 )
 
 

@@ -160,34 +160,46 @@ def _quick_smoke() -> None:
     harsh_spec = dataclasses.replace(
         fault_levels()["harsh"], promote_fail_rate=0.6, max_retries=1
     )
+    # every tunable policy kind rides the harsh lane: the resilience
+    # contract is a property of the tuner loop, and a registry backend
+    # whose sweep path swallowed fault events would otherwise pass CI
+    kinds = policy_kinds(tunable=True)
     rows: dict = {}
     for level, spec in (("none", None), ("harsh", harsh_spec)):
-        rs = _level_experiment(
-            tr, level, spec, ("tpp",), db, tuned_start=0.5
+        rs = _level_experiment(tr, level, spec, kinds, db, tuned_start=0.5)
+        for kind in kinds:
+            rec = rs.record(policy=f"{kind}_tuna")
+            rows[(level, kind)] = rec
+            print(
+                f"fault-smoke {level}/{kind}:"
+                f" total={rec.result.total_time * 1e3:.1f}ms"
+                f" pgpromote_fail={rec.result.stats['pgpromote_fail']}"
+                f" degraded={_degraded_counts(rec.decisions)}"
+                f" fault_events={_fault_event_count(rec)}"
+            )
+    for kind in kinds:
+        harsh = rows[("harsh", kind)]
+        assert harsh.fault_events, f"{kind}: harsh level injected no events"
+        assert harsh.result.stats["pgpromote_fail"] > 0, (
+            f"{kind}: retry-exhausted promotions must surface in "
+            "pgpromote_fail"
         )
-        rec = rs.record(policy="tpp_tuna")
-        rows[level] = rec
-        print(
-            f"fault-smoke {level}: total={rec.result.total_time * 1e3:.1f}ms"
-            f" pgpromote_fail={rec.result.stats['pgpromote_fail']}"
-            f" degraded={_degraded_counts(rec.decisions)}"
-            f" fault_events={_fault_event_count(rec)}"
+        assert any(d.degraded is not None for d in harsh.decisions), (
+            f"{kind}: harsh telemetry/db faults must yield degraded tuner "
+            "decisions"
         )
-    harsh = rows["harsh"]
-    assert harsh.fault_events, "harsh level injected no events"
-    assert harsh.result.stats["pgpromote_fail"] > 0, (
-        "retry-exhausted promotions must surface in pgpromote_fail"
-    )
-    assert any(d.degraded is not None for d in harsh.decisions), (
-        "harsh telemetry/db faults must yield degraded tuner decisions"
-    )
-    assert rows["none"].fault_events is None
-    assert all(d.degraded is None for d in rows["none"].decisions)
-    # identical seed => identical fault-event log (determinism contract)
-    again = _level_experiment(
-        tr, "harsh", harsh_spec, ("tpp",), db, tuned_start=0.5
-    ).record(policy="tpp_tuna")
-    assert again.fault_events == harsh.fault_events
+        clean = rows[("none", kind)]
+        assert clean.fault_events is None
+        assert all(d.degraded is None for d in clean.decisions)
+    # identical seed => identical fault-event log (determinism contract),
+    # for every registry backend on the tuned sweep
+    again = _level_experiment(tr, "harsh", harsh_spec, kinds, db,
+                              tuned_start=0.5)
+    for kind in kinds:
+        assert (
+            again.record(policy=f"{kind}_tuna").fault_events
+            == rows[("harsh", kind)].fault_events
+        ), f"{kind}: fault schedule not deterministic"
     print("fault-smoke ok.")
 
 

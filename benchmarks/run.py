@@ -25,6 +25,7 @@ def main() -> None:
         fig8_migrations,
         table3_target_sensitivity,
         fig_fault_resilience,
+        fig_fleet,
         serving_tiered,
         bench_engine,
         kernels as kernel_bench,
@@ -37,6 +38,7 @@ def main() -> None:
         ("fig8", fig8_migrations),
         ("table3", table3_target_sensitivity),
         ("fault", fig_fault_resilience),
+        ("fleet", fig_fleet),
         ("serving", serving_tiered),
         ("engine", bench_engine),
         ("kernels", kernel_bench),

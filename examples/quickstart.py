@@ -18,9 +18,12 @@ CI executes this file with `-W "error:repro.sim:DeprecationWarning"`
 onto the deprecated `simulate`/`sweep_*` entry points.
 """
 
+import functools
+
 import numpy as np
 
 from repro.core.tuner import build_database
+from repro.fleet import ArbiterSpec, FleetScenario, TenantSpec
 from repro.sim.api import (
     Experiment,
     FaultSpec,
@@ -29,7 +32,7 @@ from repro.sim.api import (
     TunerSpec,
     run,
 )
-from repro.sim.workloads import xsbench_trace
+from repro.sim.workloads import arrivals_trace, xsbench_trace
 
 print("== generating XSBench trace (real MC lookup kernel, page-instrumented)")
 trace = xsbench_trace(n_intervals=36, lookups=80_000)
@@ -121,4 +124,48 @@ print(f"   under faults: runtime {faulted.total_time*1e3:.1f} ms "
       f"pgpromote_fail={faulted.stats['pgpromote_fail']}, "
       f"{len(rec_f.fault_events)} injected events, "
       f"{len(degraded)} degraded tuner decisions {sorted(set(degraded))}")
+
+print("== three tenants sharing one fast-memory budget (fleet arbitration)")
+# A FleetScenario maps N tenants onto disjoint page ranges of one batched
+# sweep pass; per-tenant Tuna tuners report demand and a fleet arbiter
+# water-fills the shared budget between them every `every` intervals, so
+# fast memory stranded at an over-provisioned tenant flows to a starved
+# one. TenantSpec traces ship as picklable callables (spawn-safe fan-out).
+tenants = tuple(
+    TenantSpec(
+        trace=functools.partial(
+            arrivals_trace, n_intervals=18, rss_pages=3_000,
+            pages_per_session=300, base_rate=rate, seed=seed,
+        ),
+        name=name,
+    )
+    for name, rate, seed in
+    (("web", 0.3, 11), ("batch", 0.5, 23), ("cache", 0.7, 37))
+)
+rs_fleet = run(
+    Experiment(
+        name="quickstart_fleet",
+        scenarios=[
+            FleetScenario(tenants=tenants, name="fleet", budget_frac=0.7,
+                          arbiter=ArbiterSpec(every=2)),
+        ],
+        fm_fracs=(1.0,),
+        policies=[
+            PolicySpec(label="fleet_tuna",
+                       tuner=TunerSpec(target_loss=0.2, tune_every=2,
+                                       k_neighbors=1, cooldown_windows=3,
+                                       max_step_frac=0.08)),
+        ],
+    ),
+    db=db,
+)
+arb_log = rs_fleet.record(scenario="fleet/web").arbiter_log
+modes = sorted({e["mode"] for e in arb_log})
+for t in tenants:
+    res_t = rs_fleet.result(scenario=f"fleet/{t.name}")
+    print(f"   tenant {t.name:>5}: runtime {res_t.total_time*1e3:8.1f} ms, "
+          f"fast memory {res_t.fm_sizes.min()}..{res_t.fm_sizes.max()} "
+          f"of 3000 pages")
+print(f"   {len(arb_log)} arbitration events, modes={modes}, "
+      f"backend={rs_fleet.record(scenario='fleet/web').backend}")
 print("done.")

@@ -72,6 +72,15 @@ backend/policy PR adds its invariant as one rule file; no core edits.
     is ``run()``'s upfront ``pickle.dumps`` validation, but the lint
     catches it at review time, including in code paths that only fan
     out under a many-core planner heuristic.
+``TUNA009`` *fleet-budget-writes*
+    Direct ``.set_size()`` / ``.set_fm_size()`` calls or
+    ``.budget_pages`` re-assignments in fleet code (any path containing
+    ``fleet``) outside ``fleet/arbiter.py``. Per-tenant fast-memory
+    shares have one legal write path —
+    :meth:`repro.fleet.arbiter.FleetTunaArbiter.apply` — so grants,
+    tuner moves and fault lag share one rate-limited, logged actuator;
+    a bypass silently skips floors/ceilings, hysteresis, and the
+    allocation event log the benchmarks report.
 
 Suppression policy
 ------------------

@@ -18,4 +18,5 @@ from repro.analysis.rules import (  # noqa: F401  (import = register)
     tuna006_runset_schema,
     tuna007_trace_determinism,
     tuna008_picklable_specs,
+    tuna009_fleet_budget_writes,
 )

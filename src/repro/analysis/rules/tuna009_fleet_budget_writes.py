@@ -1,0 +1,89 @@
+"""TUNA009: fleet budget writes flow through the arbiter's apply path.
+
+The fleet layer's whole correctness story is that per-tenant fast-memory
+shares have *one* write path: :meth:`repro.fleet.arbiter.FleetTunaArbiter.
+apply` drives every tenant's rate-limited ``WatermarkController``, so
+grants, tuner moves, and fault-layer lag all share the same actuator,
+audit log, and rate limit. A direct ``ctl.set_size(...)`` /
+``pool.set_fm_size(...)`` call (or a re-assignment of the arbiter's
+``budget_pages``) anywhere else in fleet code silently bypasses the
+hysteresis, the floors/ceilings, and the allocation event log — the
+division the benchmarks and provenance report is then not the division
+that ran.
+
+Scope is fleet code (any path containing ``fleet``); only
+``fleet/arbiter.py`` — the apply path itself — may actuate. Reads of
+``budget_pages`` and constructor keywords are free.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, ModuleSource, Rule, register_rule
+
+_ACTUATORS = ("set_size", "set_fm_size")
+
+
+def _budget_attr_stores(node: ast.AST):
+    """Yield ``X.budget_pages`` attribute targets in store context."""
+    targets: list[ast.expr] = []
+    if isinstance(node, ast.Assign):
+        targets = list(node.targets)
+    elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+        targets = [node.target]
+    for t in targets:
+        stack = [t]
+        while stack:
+            cur = stack.pop()
+            if isinstance(cur, (ast.Tuple, ast.List)):
+                stack.extend(cur.elts)
+            elif (
+                isinstance(cur, ast.Attribute)
+                and cur.attr == "budget_pages"
+            ):
+                yield cur
+
+
+@register_rule
+class FleetBudgetWriteRule(Rule):
+    code = "TUNA009"
+    name = "fleet-budget-writes"
+    description = (
+        "direct set_size/set_fm_size calls or budget_pages stores in "
+        "fleet code outside the arbiter; budgets actuate only through "
+        "FleetTunaArbiter.apply"
+    )
+    scope = ("fleet",)
+    exempt = ("fleet/arbiter.py",)
+
+    def check(self, mod: ModuleSource) -> list[Finding]:
+        out: list[Finding] = []
+        for node in ast.walk(mod.tree):
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in _ACTUATORS
+            ):
+                out.append(
+                    self.finding(
+                        mod,
+                        node,
+                        f"direct .{node.func.attr}() call in fleet code "
+                        "bypasses the arbiter's floors/ceilings, "
+                        "hysteresis, and allocation log; route the grant "
+                        "through FleetTunaArbiter.apply",
+                    )
+                )
+            for attr in _budget_attr_stores(node):
+                out.append(
+                    self.finding(
+                        mod,
+                        attr,
+                        "re-assigning .budget_pages outside the arbiter "
+                        "changes the division the provenance reports; "
+                        "construct a new arbiter (or extend its API) "
+                        "instead",
+                    )
+                )
+        return out

@@ -48,6 +48,12 @@ class WatermarkController:
     # lag_steps calls later — the reclaimer acknowledges watermark moves
     # late. 0 (default) is the ideal immediate actuator.
     lag_steps: int = 0
+    # hard upper bound on the fast-memory size (pages); None = hw
+    # capacity. The fleet layer pins a tenant's isolation ceiling here
+    # (``TenantSpec.ceil_frac``) so per-tenant tuner growth between
+    # arbitrations can never crest the bound the arbiter enforces at its
+    # own steps.
+    max_fm_pages: int | None = None
     _pending: list = field(default_factory=list)
 
     def bind(self, pool: TieredPagePool) -> "WatermarkController":
@@ -71,6 +77,8 @@ class WatermarkController:
             if len(self._pending) <= self.lag_steps:
                 return cur
             new_fm_pages = self._pending.pop(0)
+        if self.max_fm_pages is not None:
+            cap = min(cap, int(self.max_fm_pages))
         target = int(max(1, min(cap, new_fm_pages)))
         # a reached target is a no-op even at deadband 0 — it must not
         # append zero-delta events to the audit log

@@ -1,0 +1,62 @@
+"""Fleet-scale multi-tenant tiering: many tenant pools, one fast tier.
+
+The paper's headline claim — Tuna saves fast memory "in production" — is
+exercised here at production shape: a host serves N tenants (model
+replicas, KV-cache pools, user session heaps) that share one global
+fast-memory budget under bursty, diurnal, long-tail session arrivals
+(:mod:`repro.sim.workloads.arrivals`). This package layers that fleet on
+top of the batched sweep engine without a new execution loop:
+
+* :class:`~repro.fleet.scenario.TenantSpec` /
+  :class:`~repro.fleet.scenario.FleetScenario` — the declarative layer:
+  each tenant brings its own trace, static-partition share, and
+  floor/ceiling bounds; the scenario carries the global budget fraction
+  and the arbitration policy. A ``FleetScenario`` drops into
+  :class:`repro.sim.api.Experiment` next to plain scenarios and is routed
+  by the :func:`repro.sim.api.run` planner (``backend="fleet"``, one
+  :class:`~repro.sim.api.RunRecord` per tenant).
+* **tenants as slices** (:mod:`repro.fleet.runner`): the tenant traces are
+  merged into one trace over disjoint page ranges, and each tenant
+  becomes one slice of the sweep engine's stacked ``[n_slices, rss]``
+  tier array — exactly the machinery :func:`repro.sim.sweep._sweep_tuned`
+  uses for candidate *sizes*, reused for *tenants*: per-slice pools,
+  per-slice Tuna tuners, per-slice watermark controllers, one trace pass
+  for the whole fleet. A single-tenant fleet is bit-exact against the
+  plain tuned sweep.
+* :class:`~repro.fleet.arbiter.FleetTunaArbiter` — the fleet-level Tuna:
+  every ``ArbiterSpec.every`` intervals it reads each tenant's telemetry
+  and unconstrained Tuna trajectory, queries the performance database per
+  tenant, and re-divides the global budget by water-filling the predicted
+  loss level across tenants (per-tenant floors/ceilings, hysteresis
+  against re-division churn), actuating through the tenants' own
+  rate-limited watermark controllers. Under the fault layer it degrades
+  per tenant — an unreadable tenant holds its demand instead of being
+  shrunk blind. :meth:`~repro.fleet.arbiter.FleetTunaArbiter.apply` is
+  the *only* legal write path for per-tenant budgets (machine-checked by
+  analysis rule TUNA009).
+
+``benchmarks/fig_fleet.py`` reports the fleet-level outcome: per-tenant
+SLO loss percentiles (p50/p95/p99), stranded-fast-memory savings vs
+static equal-partitioning at matched SLO, and isolation deltas under a
+noisy-neighbor (thrash) tenant.
+"""
+
+from repro.fleet.arbiter import (
+    ArbiterSpec,
+    FleetAllocationEvent,
+    FleetTunaArbiter,
+    water_fill,
+)
+from repro.fleet.scenario import FleetScenario, TenantSpec
+from repro.fleet.runner import merge_tenant_traces, run_fleet_scenario
+
+__all__ = [
+    "ArbiterSpec",
+    "FleetAllocationEvent",
+    "FleetScenario",
+    "FleetTunaArbiter",
+    "TenantSpec",
+    "merge_tenant_traces",
+    "run_fleet_scenario",
+    "water_fill",
+]

@@ -1,0 +1,279 @@
+"""Fleet execution: tenants as slices of one batched sweep pass.
+
+The tuned sweep already runs a *vector* of independent pools — one per
+candidate fm size — against one trace in a single pass, each slice with
+its own Tuna tuner and watermark controller. The fleet runner reuses that
+machinery with the slice axis reinterpreted: the tenant traces are merged
+onto disjoint page ranges of one trace (:func:`merge_tenant_traces`), and
+each *tenant* becomes one slice of the stacked ``[n_slices, rss]`` tier
+array (``page_owner`` tells the sweep driver which slice owns each page).
+Heat, the interval touch counters, and the demotion ranking stay shared
+across slices exactly as in the size sweep — disjoint ownership makes
+them exact per tenant — so one trace pass drives per-tenant telemetry,
+per-tenant Tuna tuners, and the fleet-level budget arbiter together.
+
+Degenerate case: a one-tenant fleet at ``budget_frac=1.0`` with
+non-binding floors/ceilings reproduces the plain tuned sweep bit for bit
+(same interval times, counters, config vectors, tuner decisions), which
+``tests/test_fleet.py`` pins.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.trace import IntervalAccess, Trace
+from repro.fleet.arbiter import FleetTunaArbiter
+from repro.fleet.scenario import FleetScenario
+from repro.sim.faults import FaultInjector
+from repro.sim.sweep import _sweep_run
+
+
+def merge_tenant_traces(
+    traces, name: str = "fleet"
+) -> tuple[Trace, np.ndarray, np.ndarray]:
+    """Merge tenant traces onto disjoint page ranges of one trace.
+
+    Returns ``(merged, page_owner, caps)``: tenant *t* owns pages
+    ``[offsets[t], offsets[t] + caps[t])`` of the merged trace,
+    ``page_owner[p]`` is the owning tenant of page ``p``. Per merged
+    interval the page lists stay sorted and unique (tenant page lists
+    are sorted-unique and the ranges are disjoint and ascending), ops
+    sum, and ``rand_frac`` is the access-weighted mean — with a single
+    contributing tenant both are that tenant's values unchanged, so the
+    one-tenant merge is an exact relabeling. Tenants shorter than the
+    longest trace simply stop contributing intervals (their pools idle).
+    """
+    traces = list(traces)
+    if not traces:
+        raise ValueError("merge_tenant_traces needs at least one trace")
+    caps = np.array([int(t.rss_pages) for t in traces], dtype=np.int64)
+    offsets = np.concatenate([[0], np.cumsum(caps)[:-1]])
+    page_owner = np.repeat(
+        np.arange(caps.size, dtype=np.int64), caps
+    )
+    n_intervals = max(len(t) for t in traces)
+
+    slow_parts = [
+        np.asarray(t.slow_pages, dtype=np.int64) + offsets[ti]
+        for ti, t in enumerate(traces)
+        if t.slow_pages is not None
+    ]
+    merged = Trace(
+        name=name,
+        rss_pages=int(caps.sum()),
+        num_threads=max(t.num_threads for t in traces),
+        slow_pages=np.concatenate(slow_parts) if slow_parts else None,
+    )
+    for i in range(n_intervals):
+        parts = [
+            (ti, t.intervals[i]) for ti, t in enumerate(traces) if i < len(t)
+        ]
+        if len(parts) == 1:
+            ti, ia = parts[0]
+            merged.append(
+                IntervalAccess(
+                    pages=ia.pages + offsets[ti],
+                    counts=ia.counts,
+                    ops=ia.ops,
+                    rand_frac=ia.rand_frac,
+                    touches=ia.touches,
+                )
+            )
+            continue
+        pages = np.concatenate([ia.pages + offsets[ti] for ti, ia in parts])
+        counts = np.concatenate([ia.counts for _, ia in parts])
+        touches = np.concatenate([ia.touches for _, ia in parts])
+        acc = np.array(
+            [max(int(ia.counts.sum()), 1) for _, ia in parts],
+            dtype=np.float64,
+        )
+        rand = np.array([ia.rand_frac for _, ia in parts])
+        merged.append(
+            IntervalAccess(
+                pages=pages,
+                counts=counts,
+                ops=float(sum(ia.ops for _, ia in parts)),
+                rand_frac=float((rand * acc).sum() / acc.sum()),
+                touches=touches,
+            )
+        )
+    return merged, page_owner, caps
+
+
+def _resolve_tenant_trace(tenant) -> Trace:
+    tr = tenant.trace
+    if isinstance(tr, Trace):
+        return tr
+    if isinstance(tr, str):
+        from repro.sim.workloads import WORKLOADS
+
+        return WORKLOADS[tr]()
+    return tr()
+
+
+def static_partition(
+    budget: int, caps, shares, floors, ceils
+) -> np.ndarray:
+    """Share-weighted split of ``budget`` pages, clamped to the bounds.
+
+    The fleet's *static equal-partitioning* baseline (the ``fig_fleet``
+    comparison point) and every fleet run's initial allocation. With one
+    tenant, ``share=None``, and non-binding bounds this returns exactly
+    ``budget`` — the degenerate-case anchor.
+    """
+    caps = np.asarray(caps, dtype=np.int64)
+    w = np.array(
+        [1.0 if s is None else float(s) for s in shares], dtype=np.float64
+    )
+    w = w / w.sum()
+    alloc = np.rint(w * float(budget)).astype(np.int64)
+    return np.minimum(
+        np.maximum(alloc, np.asarray(floors, dtype=np.int64)),
+        np.asarray(ceils, dtype=np.int64),
+    )
+
+
+def run_fleet_scenario(
+    scenario: FleetScenario,
+    fm_fracs: tuple,
+    policies: tuple,
+    db,
+    collect_configs: bool,
+):
+    """Execute every (policy, budget-scale) cell of one fleet scenario.
+
+    The planner's fleet backend (``backend="fleet"``): each experiment
+    ``fm_frac`` scales the global budget ``B = fm_frac * budget_frac *
+    sum(tenant RSS)``; every tenant yields one RunRecord per cell, named
+    ``"{fleet}/{tenant}"``, in (policy-major, size, tenant) order.
+    Tuned specs run per-tenant tuners plus the fleet arbiter; untuned
+    specs hold the static share-weighted partition. Returns ``(records,
+    chunked)`` like :func:`repro.sim.api._run_scenario`.
+    """
+    from repro.sim.api import RunRecord, _spec_fracs
+    from repro.sim.engine import SimResult
+
+    if scenario.engine not in ("auto", "numpy"):
+        raise ValueError(
+            f"fleet scenario {scenario.name!r} requires engine 'auto' or "
+            f"'numpy', got {scenario.engine!r}"
+        )
+    tenants = list(scenario.tenants)
+    tnames = [t.resolved_name for t in tenants]
+    traces = [_resolve_tenant_trace(t) for t in tenants]
+    merged, page_owner, caps = merge_tenant_traces(
+        traces, name=f"fleet:{scenario.name}"
+    )
+    n = len(tenants)
+    floors = np.maximum(
+        1,
+        np.rint(
+            [t.floor_frac * c for t, c in zip(tenants, caps)]
+        ).astype(np.int64),
+    )
+    ceils = np.rint(
+        [t.ceil_frac * c for t, c in zip(tenants, caps)]
+    ).astype(np.int64)
+    shares = [t.share for t in tenants]
+    total_cap = float(caps.sum())
+    sname = scenario.resolved_name
+
+    records: list = []
+    chunked = 0
+    for spec in policies:
+        if not spec.policy_cls.batchable:
+            raise ValueError(
+                f"fleet scenarios need batchable policies; "
+                f"{spec.kind!r} is not"
+            )
+        for f in _spec_fracs(spec, fm_fracs):
+            f = float(f)
+            budget = int(round(f * scenario.budget_frac * total_cap))
+            alloc0 = static_partition(budget, caps, shares, floors, ceils)
+            # initial per-slice fracs round-trip to alloc0 exactly inside
+            # the sweep driver: round((alloc/cap) * cap) == alloc
+            fracs = (alloc0 / caps).astype(np.float64)
+            policy = spec.build_policy()
+            inj = (
+                FaultInjector(scenario.faults)
+                if scenario.faults is not None
+                else None
+            )
+            if inj is not None:
+                policy.fault_injector = inj
+            tuned = spec.tuner is not None
+            tuners = tes = arbiter = None
+            if tuned:
+                tuners = [spec.tuner.build(db) for _ in range(n)]
+                # the tenant's isolation ceiling binds *between* arbiter
+                # steps too: the controller is the single actuator both
+                # the tuner and the arbiter drive, so pinning it here
+                # makes ceil_frac a hard bound, not a sampled one (with
+                # ceil == cap this is a no-op — the degenerate case's
+                # bit-exactness is untouched)
+                for tn, ceil in zip(tuners, ceils):
+                    tn.controller.max_fm_pages = int(ceil)
+                tes = [spec.tuner.tune_every] * n
+                arbiter = FleetTunaArbiter(
+                    budget_pages=budget,
+                    floors=floors,
+                    ceils=ceils,
+                    caps=caps,
+                    controllers=[t.controller for t in tuners],
+                    db=db,
+                    spec=scenario.arbiter,
+                    fault_injector=inj,
+                )
+            times, pools, configs_out, fm_sizes, costs = _sweep_run(
+                merged,
+                fracs,
+                policy,
+                scenario.hw,
+                None,
+                scenario.seed,
+                True,
+                tuners=tuners,
+                tune_everys=tes,
+                kswapd_batch=scenario.kswapd_batch,
+                faults=inj,
+                page_owner=page_owner,
+                slice_caps=caps,
+                arbiter=arbiter,
+            )
+            arb_log = arbiter.log_dicts() if arbiter is not None else None
+            for s in range(n):
+                res = SimResult(
+                    name=tnames[s],
+                    total_time=float(np.sum(times[s])),
+                    interval_times=times[s].copy(),
+                    configs=configs_out[s],
+                    fm_sizes=(
+                        fm_sizes[s].copy()
+                        if fm_sizes is not None
+                        else np.full(times.shape[1], alloc0[s], np.int64)
+                    ),
+                    stats=pools[s].stats.snapshot(),
+                    costs=costs[s],
+                )
+                records.append(
+                    RunRecord(
+                        f"{sname}/{tnames[s]}",
+                        spec.name,
+                        f,
+                        "fleet",
+                        res,
+                        decisions=(
+                            list(tuners[s].decisions) if tuned else None
+                        ),
+                        watermark_log=(
+                            list(tuners[s].controller.log) if tuned else None
+                        ),
+                        fault_events=(
+                            inj.events(pools[s]) if inj is not None else None
+                        ),
+                        arbiter_log=arb_log,
+                    )
+                )
+            chunked += policy.chunked_steps
+    return records, chunked

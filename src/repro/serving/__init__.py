@@ -1,5 +1,7 @@
 from repro.serving.kv_cache import TieredPagedKV
+from repro.serving.fleet_kv import MultiTenantKV
 from repro.serving.scheduler import Session, ContinuousBatcher
 from repro.serving.server import TieredServer
 
-__all__ = ["TieredPagedKV", "Session", "ContinuousBatcher", "TieredServer"]
+__all__ = ["TieredPagedKV", "MultiTenantKV", "Session", "ContinuousBatcher",
+           "TieredServer"]

@@ -45,6 +45,15 @@ unbatchable spec            per-size :func:`repro.sim.engine._simulate` — a
                             whose class has ``batchable=False`` (e.g.
                             first-touch) (``backend="simulate"``)
 ``Scenario.runner`` set     the scenario's own callable (``backend="custom"``)
+``FleetScenario``           the multi-tenant fleet layer (:mod:`repro.fleet`):
+                            tenant traces merge onto disjoint page ranges and
+                            each *tenant* becomes one slice of the batched
+                            sweep's stacked ``[n_slices, rss]`` tier array —
+                            per-tenant pools/tuners/watermarks plus the
+                            fleet-level budget arbiter run in one trace pass
+                            (``backend="fleet"``, one RunRecord per tenant
+                            named ``"{fleet}/{tenant}"``). Numpy sweeps only;
+                            every policy must be batchable.
 ``Scenario.engine="jax"``   the sweep passes above on the jitted JAX device
                             step (:mod:`repro.sim.jax_engine`) instead of the
                             numpy interval loop (``backend="jax_sweep"`` /
@@ -90,14 +99,18 @@ event is logged into the RunSet provenance (``runs[*].fault_events``).
 RunSet JSON schema (``RunSet.to_json`` / ``RunSet.from_json``)
 --------------------------------------------------------------
 Lossless (floats round-trip via ``repr``), versioned by ``schema``.
-Current version ``tuna-runset-v3``: additive over v2 — scenario echoes
-gained the ``faults`` spec, run entries the ``fault_events`` log, and
-tuner decisions the ``degraded`` marker (v2 itself added the policy
-``params`` echo over v1); :meth:`RunSet.from_json` still loads v1 and v2
-documents (missing keys take their defaults)::
+Current version ``tuna-runset-v4``: additive over v3 — run entries
+gained the ``arbiter_log`` (fleet runs: the budget arbiter's allocation
+events as plain dicts), and fleet scenario echoes carry a ``fleet``
+block (``budget_frac``, ``arbiter`` spec, per-tenant
+``name``/``trace``/``share``/``floor_frac``/``ceil_frac``) instead of
+the trace/runner fields. v3 added the ``faults`` spec echo, the
+``fault_events`` log, and the decision ``degraded`` marker over v2; v2
+added the policy ``params`` echo over v1. :meth:`RunSet.from_json`
+still loads v1–v3 documents (missing keys take their defaults)::
 
     {
-      "schema": "tuna-runset-v3",
+      "schema": "tuna-runset-v4",
       "name": str,                     # experiment name
       "spec": {                        # provenance: the experiment echo
         "name": str,
@@ -131,7 +144,10 @@ documents (missing keys take their defaults)::
             "predicted_loss", "degraded": str | null}, ...] | null,
         "watermark_log": [{"t", "old_fm", "new_fm"}, ...] | null,
         "fault_events":                # fault-injected runs only
-          [{"i": int, "kind": str, ...}, ...] | null
+          [{"i": int, "kind": str, ...}, ...] | null,
+        "arbiter_log":                 # fleet runs only (shared per fleet)
+          [{"interval", "t", "mode", "desired": [int, ...],
+            "granted": [int, ...], "degraded"}, ...] | null
       }, ...]
     }
 
@@ -188,9 +204,14 @@ from repro.sim.sweep import TunedSlice, _sweep_fm_fracs, _sweep_tuned
 from repro.tiering.page_pool import TieredPagePool
 from repro.tiering.policy import register_policy, resolve_policy
 
-RUNSET_SCHEMA = "tuna-runset-v3"
+RUNSET_SCHEMA = "tuna-runset-v4"
 # older schema versions from_json still understands (additive evolution)
-RUNSET_SCHEMA_COMPAT = ("tuna-runset-v1", "tuna-runset-v2", RUNSET_SCHEMA)
+RUNSET_SCHEMA_COMPAT = (
+    "tuna-runset-v1",
+    "tuna-runset-v2",
+    "tuna-runset-v3",
+    RUNSET_SCHEMA,
+)
 
 __all__ = [
     "Experiment",
@@ -436,11 +457,14 @@ class RunRecord:
     policy: str
     fm_frac: float
     backend: str  # "sweep" | "tuned_sweep" | "jax_sweep" |
-    # "jax_tuned_sweep" | "simulate" | "custom"
+    # "jax_tuned_sweep" | "simulate" | "custom" | "fleet"
     result: SimResult | dict
     decisions: list | None = None  # TunerDecision list (tuned specs)
     watermark_log: list | None = None  # WatermarkEvent list (tuned specs)
     fault_events: list | None = None  # injected-fault log (fault runs)
+    # fleet runs only: the FleetTunaArbiter's allocation-event log as
+    # plain dicts (shared across the fleet's tenant records)
+    arbiter_log: list | None = None
 
 
 @dataclass
@@ -532,6 +556,7 @@ class RunSet:
                             else [asdict(e) for e in r.watermark_log]
                         ),
                         "fault_events": r.fault_events,
+                        "arbiter_log": r.arbiter_log,
                     }
                     for r in self.runs
                 ],
@@ -562,6 +587,7 @@ class RunSet:
                     else [WatermarkEvent(**x) for x in r["watermark_log"]]
                 ),
                 fault_events=r.get("fault_events"),
+                arbiter_log=r.get("arbiter_log"),
             )
             for r in d["runs"]
         ]
@@ -688,6 +714,17 @@ def _run_scenario(
     """
     for cls in policy_classes:
         register_policy(cls)
+
+    if getattr(scenario, "is_fleet", False):
+        # FleetScenario (repro.fleet): tenants-as-slices over the batched
+        # sweep, one RunRecord per tenant (lazy import — repro.fleet
+        # imports this module at load time, the reverse edge is runtime)
+        from repro.fleet.runner import run_fleet_scenario
+
+        return run_fleet_scenario(
+            scenario, fm_fracs, policies, db, collect_configs
+        )
+
     sname = scenario.resolved_name
     cells: dict = {}
     chunked = 0
@@ -998,8 +1035,33 @@ def _trace_ref(trace) -> dict | str | None:
     return _callable_ref(trace)
 
 
-def _scenario_ref(sc: Scenario) -> dict:
+def _scenario_ref(sc) -> dict:
     """One scenario's spec echo (provenance, cache key, error reports)."""
+    if getattr(sc, "is_fleet", False):
+        return {
+            "name": sc.resolved_name,
+            "seed": int(sc.seed),
+            "hw": asdict(sc.hw),
+            "kswapd_batch": sc.kswapd_batch,
+            "faults": (
+                sc.faults.to_dict() if sc.faults is not None else None
+            ),
+            "fleet": {
+                "budget_frac": float(sc.budget_frac),
+                "arbiter": asdict(sc.arbiter),
+                "tenants": [
+                    {
+                        "name": t.resolved_name,
+                        "trace": _trace_ref(t.trace),
+                        "share": t.share,
+                        "floor_frac": float(t.floor_frac),
+                        "ceil_frac": float(t.ceil_frac),
+                    }
+                    for t in sc.tenants
+                ],
+            },
+            **({"engine": sc.engine} if sc.engine != "auto" else {}),
+        }
     return {
         "name": sc.resolved_name,
         "trace": _trace_ref(sc.trace),
@@ -1084,7 +1146,33 @@ def _validate_picklable(scenarios, policies) -> None:
                 ) from e
 
 
-def _fanout(jobs: list, parallelism: int, scenario_timeout: float | None):
+def _resolve_start_method(requested, engines, available):
+    """Pick the fan-out workers' multiprocessing start method.
+
+    ``requested`` (``run()``'s ``mp_start_method``) wins when given and
+    available. Otherwise pure-numpy fan-outs keep the historical fork
+    preference — fork (where available) spares each worker the
+    interpreter + numpy re-import — while any ``engine="jax"`` scenario
+    flips the whole fan-out to spawn: forking after the XLA runtime has
+    initialized in the parent hands the child a copy of XLA's locked
+    thread state, which deadlocks or crashes it, and a spawned worker
+    re-imports a pristine runtime instead. Returns a method name from
+    ``available``, or ``None`` for the platform default.
+    """
+    if requested is not None:
+        if requested not in available:
+            raise ValueError(
+                f"mp_start_method {requested!r} is not available on this "
+                f"platform (available: {list(available)})"
+            )
+        return requested
+    if "jax" in engines:
+        return "spawn" if "spawn" in available else None
+    return "fork" if "fork" in available else None
+
+
+def _fanout(jobs: list, parallelism: int, scenario_timeout: float | None,
+            start_method: str | None = None):
     """Submit-based process fan-out over scenario jobs.
 
     Returns the jobs' trapped ``("ok" | "err", ...)`` values in job
@@ -1106,10 +1194,9 @@ def _fanout(jobs: list, parallelism: int, scenario_timeout: float | None):
       not run twice.
     """
     try:
-        # fork (where available) spares each worker the interpreter +
-        # numpy import; the workers run pure-numpy engine code only
-        method = "fork" if "fork" in mp.get_all_start_methods() else None
-        ctx = mp.get_context(method)
+        # the caller resolves the method (see _resolve_start_method);
+        # None keeps the platform default
+        ctx = mp.get_context(start_method)
     except ValueError:
         return None
     results: list = [None] * len(jobs)
@@ -1174,6 +1261,7 @@ def run(
     parallelism: int | None = None,
     cache_dir=None,
     scenario_timeout: float | None = None,
+    mp_start_method: str | None = None,
 ) -> RunSet:
     """Execute ``experiment`` and return a :class:`RunSet`.
 
@@ -1199,6 +1287,13 @@ def run(
     the RunSet result cache (see the module docstring's *Result caching*
     section): a directory under which the whole RunSet is memoized as its
     JSON document, keyed on the experiment spec echo + schema version.
+    ``mp_start_method`` pins the fan-out workers' multiprocessing start
+    method (``"fork"`` / ``"spawn"`` / ``"forkserver"``); ``None``
+    resolves it from the scenarios — pure-numpy experiments keep the
+    fork preference (cheap workers), while any ``engine="jax"`` scenario
+    switches the fan-out to spawn, because forking a parent whose XLA
+    runtime is already initialized is unsafe (see
+    :func:`_resolve_start_method`).
     """
     scenarios = list(experiment.scenarios)
     if not scenarios:
@@ -1213,6 +1308,19 @@ def run(
     if len(set(names)) != len(names):
         raise ValueError(f"duplicate scenario names: {names}")
     for sc in scenarios:
+        if getattr(sc, "is_fleet", False):
+            # fleet scenarios carry tenants instead of a trace/runner;
+            # every policy must be batchable (tenants ride sweep slices)
+            bad = [
+                p.name for p in policies if not p.policy_cls.batchable
+            ]
+            if bad:
+                raise ValueError(
+                    f"fleet scenario {sc.resolved_name!r} maps tenants "
+                    f"onto batched sweep slices; policy specs {bad} are "
+                    "not batchable"
+                )
+            continue
         if sc.trace is None and sc.runner is None:
             raise ValueError(
                 f"scenario {sc.resolved_name!r} has neither trace nor runner"
@@ -1230,7 +1338,7 @@ def run(
             ) from None
     for sc in scenarios:
         try:
-            json.dumps(sc.params, sort_keys=True)
+            json.dumps(getattr(sc, "params", {}), sort_keys=True)
         except TypeError as e:
             raise ValueError(
                 f"scenario {sc.resolved_name!r} has non-JSON-serializable "
@@ -1248,6 +1356,14 @@ def run(
                 f"scenario {sc.resolved_name!r} has unknown engine {eng!r} "
                 "(use 'auto', 'numpy' or 'jax')"
             )
+        if getattr(sc, "is_fleet", False):
+            if eng == "jax":
+                raise ValueError(
+                    f"fleet scenario {sc.resolved_name!r}: the fleet "
+                    "backend runs the numpy sweep driver; use "
+                    "engine='auto' or 'numpy'"
+                )
+            continue
         if eng != "jax":
             continue
         # the JAX backend only replicates the batched sweep passes; refuse
@@ -1316,7 +1432,12 @@ def run(
     outs = None
     if parallelism > 1:
         _validate_picklable(scenarios, policies)
-        trapped = _fanout(jobs, parallelism, scenario_timeout)
+        start_method = _resolve_start_method(
+            mp_start_method,
+            {getattr(sc, "engine", "auto") for sc in scenarios},
+            mp.get_all_start_methods(),
+        )
+        trapped = _fanout(jobs, parallelism, scenario_timeout, start_method)
         if trapped is not None:
             outs = []
             for tag, val in trapped:

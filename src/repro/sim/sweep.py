@@ -183,6 +183,9 @@ def _sweep_run(
     tune_everys: list | None = None,
     kswapd_batch: int | None = None,
     faults=None,
+    page_owner: np.ndarray | None = None,
+    slice_caps: np.ndarray | None = None,
+    arbiter=None,
 ):
     """Shared sweep driver: one trace pass across the whole size vector.
 
@@ -193,11 +196,34 @@ def _sweep_run(
     constructs it from the spec. Returns ``(times, pools, configs_out,
     fm_sizes, costs)`` where the last two are ``None`` unless ``tuners``
     is given (tuned mode).
+
+    **Fleet mode** (``page_owner`` given, :mod:`repro.fleet`): the slices
+    are *tenants* over disjoint page ranges of a merged fleet trace
+    instead of candidate sizes of one workload — ``page_owner[p]`` names
+    the slice that owns page ``p``. Each slice then first-touch-allocates,
+    promotes, and accounts only its own pages (telemetry and interval
+    cost per slice cover the tenant's accesses, with the interval's ops
+    split by access share), while heat, the interval touch counters, and
+    the demotion ranking stay shared — disjoint ownership makes the
+    shared state exact per tenant. ``slice_caps`` sizes each slice pool's
+    hardware capacity (the tenant's own RSS rather than the merged
+    total); ``arbiter`` is stepped every ``arbiter.every`` intervals
+    after the per-slice tuner steps and re-divides the global budget
+    across the tenant pools (see :class:`repro.fleet.arbiter.
+    FleetTunaArbiter`). With one tenant every fleet formula degenerates
+    to the plain tuned-sweep arithmetic bit for bit, which
+    ``tests/test_fleet.py`` pins.
     """
     n_sizes = fm_fracs.size
     num_pages = int(trace.rss_pages)
     cap = int(hw_capacity_pages or trace.rss_pages)
     hot_thr = policy.hot_thr
+    fleet = page_owner is not None
+    caps = (
+        np.asarray(slice_caps, dtype=np.int64)
+        if slice_caps is not None
+        else np.full(n_sizes, cap, dtype=np.int64)
+    )
 
     # stacked per-size tier state + state shared across sizes
     tier_b = np.full((n_sizes, num_pages), int(Tier.UNALLOCATED), dtype=np.int8)
@@ -212,21 +238,28 @@ def _sweep_run(
             heat=heat,
             interval_acc=interval_acc,
             interval_touch=interval_touch,
-            hw_capacity=cap,
+            hw_capacity=int(caps[s]),
             page_bytes=hw.page_bytes,
             kswapd_batch=kswapd_batch,
             seed=seed,
         )
-        pool.set_fm_size(int(round(fm_fracs[s] * cap)))
+        pool.set_fm_size(int(round(fm_fracs[s] * caps[s])))
         if trace.slow_pages is not None:
-            pool.place(trace.slow_pages, Tier.SLOW)
+            if fleet:  # a tenant slice only places its own pages
+                own_slow = trace.slow_pages[
+                    page_owner[trace.slow_pages] == s
+                ]
+                if own_slow.size:
+                    pool.place(own_slow, Tier.SLOW)
+            else:
+                pool.place(trace.slow_pages, Tier.SLOW)
         pools.append(pool)
 
     tuned = tuners is not None
     if tuned:
-        for pool, tuner in zip(pools, tuners):
+        for s, (pool, tuner) in enumerate(zip(pools, tuners)):
             if tuner is not None:
-                tuner.bind_pool(pool, cap)
+                tuner.bind_pool(pool, int(caps[s]))
                 if faults is not None:
                     faults.wire_tuner(tuner)
 
@@ -256,12 +289,23 @@ def _sweep_run(
         # --- size-independent work, computed once for all sizes
         counts_mem = absorb_cache(ia.counts, hw.llc_pages)
         mlp_eff = effective_mlp(counts_mem, hw.mlp, trace.num_threads)
-        new_mask = tier_b[0, pages] == Tier.UNALLOCATED
-        new_pages = pages[new_mask] if bool(new_mask.any()) else None
-        for pool in pools:
-            pool._grank_box = None  # new touches change the ranking
-            if new_pages is not None:
-                pool._first_touch_alloc(new_pages)
+        owner_t = page_owner[pages] if fleet else None
+        if fleet:
+            # each tenant slice allocates only its own pages (its row never
+            # sees another tenant's pages, so row-s is the authority)
+            for s, pool in enumerate(pools):
+                pool._grank_box = None  # new touches change the ranking
+                own = pages[owner_t == s]
+                new = own[tier_b[s, own] == Tier.UNALLOCATED]
+                if new.size:
+                    pool._first_touch_alloc(new)
+        else:
+            new_mask = tier_b[0, pages] == Tier.UNALLOCATED
+            new_pages = pages[new_mask] if bool(new_mask.any()) else None
+            for pool in pools:
+                pool._grank_box = None  # new touches change the ranking
+                if new_pages is not None:
+                    pool._first_touch_alloc(new_pages)
         interval_touch[pages] += ia.touches
         # one stable ranking of every page by (effective heat, id) serves
         # the victim selection of all sizes this interval — materialized
@@ -291,10 +335,33 @@ def _sweep_run(
             ).astype(np.int64)
             pacc_f_all = sums[:, 0]
             ptouch_f_all = sums[:, 1]
-            ptouch_s_all = int(rep.sum()) - ptouch_f_all
+            if fleet:
+                # per-tenant touch totals: only the pages a slice owns are
+                # its slow complement (integer-valued float sums < 2**53
+                # stay exact, so the single-tenant case is bit-identical)
+                ptouch_s_all = (
+                    np.bincount(owner_t, weights=rep_f, minlength=n_sizes)
+                    .astype(np.int64) - ptouch_f_all
+                )
+            else:
+                ptouch_s_all = int(rep.sum()) - ptouch_f_all
             warm_pages_all = sums[:, 2]
             warm_touch_all = sums[:, 3]
-        pacc_s_all = int(counts_mem.sum()) - pacc_f_all
+        if fleet:
+            tot_counts = np.bincount(
+                owner_t, weights=counts_f, minlength=n_sizes
+            ).astype(np.int64)
+            pacc_s_all = tot_counts - pacc_f_all
+            # the interval's arithmetic work splits by access share (the
+            # merged trace sums per-tenant ops; a 1-tenant share is 1.0)
+            total_c = int(counts_mem.sum())
+            ops_share = (
+                tot_counts / total_c
+                if total_c > 0
+                else np.zeros(n_sizes, dtype=np.float64)
+            )
+        else:
+            pacc_s_all = int(counts_mem.sum()) - pacc_f_all
         # --- promotion candidates: touch counts are size-independent, so
         # the hottest-first stable order is computed once; each size keeps
         # its slow-tier subset (subsets preserve the stable order)
@@ -329,12 +396,21 @@ def _sweep_run(
             if hot_sorted.size
             else None
         )
-        cands = [
-            hot_sorted[cand_slow_all[s]]
-            if cand_slow_all is not None
-            else hot_sorted
-            for s in range(n_sizes)
-        ]
+        if fleet and cand_slow_all is not None:
+            # a tenant promotes only its own hot pages (the stable
+            # hottest-first order is preserved by the subset)
+            hot_owner = page_owner[hot_sorted]
+            cands = [
+                hot_sorted[cand_slow_all[s] & (hot_owner == s)]
+                for s in range(n_sizes)
+            ]
+        else:
+            cands = [
+                hot_sorted[cand_slow_all[s]]
+                if cand_slow_all is not None
+                else hot_sorted
+                for s in range(n_sizes)
+            ]
         # --- one cross-size policy decision batch (identical outcomes to
         # per-size TPPPolicy.step_hot_sorted calls, in order)
         before_direct = [pool.stats.pgdemote_direct for pool in pools]
@@ -355,11 +431,12 @@ def _sweep_run(
         # --- per-size telemetry + cost
         for s, pool in enumerate(pools):
             outcome = outcomes[s]
+            ops_s = ia.ops * float(ops_share[s]) if fleet else ia.ops
             if profilers is not None:
                 profilers[s].record_accesses(
                     int(ptouch_f_all[s]),
                     int(ptouch_s_all[s]),
-                    ia.ops,
+                    ops_s,
                     cachelines=int(pacc_f_all[s]) + int(pacc_s_all[s]),
                     warm_pages=int(warm_pages_all[s]),
                     warm_touches=int(warm_touch_all[s]),
@@ -370,7 +447,7 @@ def _sweep_run(
                 hw,
                 pacc_f=int(pacc_f_all[s]),
                 pacc_s=int(pacc_s_all[s]),
-                ops=ia.ops,
+                ops=ops_s,
                 pm_pr=outcome.pm_pr,
                 pm_de=outcome.pm_de,
                 pm_fail=outcome.pm_fail,
@@ -421,6 +498,13 @@ def _sweep_run(
                         tuner.step(
                             configs_out[s][-1], t=t_now[s], measured_tpa=tpa
                         )
+        # --- fleet budget arbitration (after the tuner steps, so the
+        # arbiter sees each tenant's unconstrained Tuna trajectory and
+        # re-divides the global budget across the tenant pools)
+        if arbiter is not None and (i + 1) % arbiter.every == 0:
+            arbiter.step(
+                pools, configs_out=configs_out, t_now=t_now, interval=i
+            )
     return times, pools, configs_out, fm_sizes, costs
 
 

@@ -22,6 +22,12 @@ working set (~2x the fast tier) that pins the migration-failure /
 direct-reclaim regime the Tuna model's knee lives in — the engine
 benchmark and the equivalence suite sweep it to exercise the bulk
 policy step's thrash path.
+
+``arrivals`` is the fleet traffic shape (:mod:`repro.sim.workloads.
+arrivals`): open/closed-loop session arrivals under Poisson + diurnal +
+flash-crowd rate modulation with long-tail session lifetimes — the
+per-tenant workload of the :mod:`repro.fleet` multi-tenant layer, and a
+bursty-churn stressor for every other engine path.
 """
 
 from repro.sim.workloads.base import PageMapper
@@ -29,6 +35,7 @@ from repro.sim.workloads.graphs import bfs_trace, pagerank_trace, sssp_trace
 from repro.sim.workloads.xsbench import xsbench_trace
 from repro.sim.workloads.btree import btree_trace
 from repro.sim.workloads.thrash import thrash_trace
+from repro.sim.workloads.arrivals import arrivals_trace
 
 WORKLOADS = {
     "bfs": bfs_trace,
@@ -37,7 +44,9 @@ WORKLOADS = {
     "xsbench": xsbench_trace,
     "btree": btree_trace,
     "thrash": thrash_trace,
+    "arrivals": arrivals_trace,
 }
 
 __all__ = ["WORKLOADS", "PageMapper", "bfs_trace", "sssp_trace",
-           "pagerank_trace", "xsbench_trace", "btree_trace", "thrash_trace"]
+           "pagerank_trace", "xsbench_trace", "btree_trace", "thrash_trace",
+           "arrivals_trace"]

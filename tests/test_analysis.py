@@ -196,6 +196,24 @@ RULE_FIXTURES = {
             "    return time.perf_counter()\n"
         ),
     },
+    "TUNA009": {
+        "path": "src/repro/fleet/balancer.py",
+        "flagged": (
+            "def grant(controllers, sizes):\n"
+            "    for ctl, s in zip(controllers, sizes):\n"
+            "        ctl.set_size(s)\n"
+        ),
+        "clean": (
+            "def grant(arbiter, sizes):\n"
+            "    arbiter.apply(sizes)\n"
+        ),
+        "suppressed": (
+            "def grant(controllers, sizes):\n"
+            "    for ctl, s in zip(controllers, sizes):\n"
+            "        # tuna: ignore[TUNA009] fixture: teaching example\n"
+            "        ctl.set_size(s)\n"
+        ),
+    },
     "TUNA008": {
         "path": "benchmarks/drv.py",
         "flagged": (
@@ -406,6 +424,48 @@ class TestRuleEdges:
             },
         )
         res, _ = analyze(tmp_path, select=["TUNA007"])
+        assert res.findings == []
+
+    def test_tuna009_arbiter_exempt(self, tmp_path):
+        write_tree(
+            tmp_path,
+            {
+                "src/repro/fleet/arbiter.py": (
+                    "class FleetTunaArbiter:\n"
+                    "    def apply(self, granted):\n"
+                    "        for s, ctl in enumerate(self.controllers):\n"
+                    "            ctl.set_size(int(granted[s]))\n"
+                )
+            },
+        )
+        res, _ = analyze(tmp_path, select=["TUNA009"])
+        assert res.findings == []
+
+    def test_tuna009_budget_pages_store_flagged(self, tmp_path):
+        write_tree(
+            tmp_path,
+            {
+                "src/repro/fleet/runner.py": (
+                    "def grow(arbiter, extra):\n"
+                    "    arbiter.budget_pages += extra\n"
+                )
+            },
+        )
+        res, _ = analyze(tmp_path, select=["TUNA009"])
+        assert len(res.findings) == 1
+        assert "budget_pages" in res.findings[0].message
+
+    def test_tuna009_non_fleet_code_out_of_scope(self, tmp_path):
+        write_tree(
+            tmp_path,
+            {
+                "src/repro/core/tuner.py": (
+                    "def steer(ctl, size):\n"
+                    "    return ctl.set_size(size)\n"
+                )
+            },
+        )
+        res, _ = analyze(tmp_path, select=["TUNA009"])
         assert res.findings == []
 
     def test_multi_code_suppression(self, tmp_path):

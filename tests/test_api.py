@@ -325,6 +325,41 @@ class TestPlannerEquivalence:
             assert (a.policy, a.fm_frac) == (b.policy, b.fm_frac)
             assert_result_equal(a.result, b.result)
 
+    def test_start_method_resolution(self):
+        # numpy fan-outs pin the historical fork preference; jax scenarios
+        # flip to spawn (forking an XLA-initialized parent is unsafe)
+        from repro.sim.api import _resolve_start_method
+
+        avail = ["fork", "spawn", "forkserver"]
+        assert _resolve_start_method(None, {"auto"}, avail) == "fork"
+        assert _resolve_start_method(None, {"numpy", "auto"}, avail) == "fork"
+        assert _resolve_start_method(None, {"jax"}, avail) == "spawn"
+        assert _resolve_start_method(None, {"auto", "jax"}, avail) == "spawn"
+        # an explicit request always wins
+        assert _resolve_start_method("spawn", {"auto"}, avail) == "spawn"
+        assert _resolve_start_method("fork", {"jax"}, avail) == "fork"
+        # degraded platforms: fall back to the platform default / spawn
+        assert _resolve_start_method(None, {"auto"}, ["spawn"]) is None
+        assert _resolve_start_method(None, {"jax"}, ["fork"]) is None
+        with pytest.raises(ValueError, match="not available"):
+            _resolve_start_method("forkserver", {"auto"}, ["fork", "spawn"])
+
+    def test_fanout_spawn_matches_serial(self):
+        # the spawn context re-imports repro in each worker; results must
+        # be bit-identical to serial (and to the default fork fan-out)
+        traces = [random_trace(s, n_intervals=4) for s in (8, 9)]
+        exp = Experiment(
+            scenarios=[Scenario(trace=tr) for tr in traces],
+            fm_fracs=(0.6,),
+        )
+        serial = run(exp, parallelism=1)
+        spawned = run(exp, parallelism=2, mp_start_method="spawn")
+        for a, b in zip(serial.runs, spawned.runs):
+            assert (a.scenario, a.policy, a.fm_frac) == (
+                b.scenario, b.policy, b.fm_frac
+            )
+            assert_result_equal(a.result, b.result)
+
     def test_fanout_rejects_unpicklable_spec_upfront(self):
         # a lambda trace dies inside the worker pool with an opaque
         # PicklingError; run() must fail fast and name the field instead
@@ -759,20 +794,26 @@ class TestPolicyRegistry:
             class Nameless(TPPPolicy):
                 kind = ""
 
-    def test_schema_v3_with_v1_v2_compat(self):
+    def test_schema_v4_with_v1_v2_v3_compat(self):
         import json as json_mod
 
         from repro.sim.api import RUNSET_SCHEMA
 
-        assert RUNSET_SCHEMA == "tuna-runset-v3"
+        assert RUNSET_SCHEMA == "tuna-runset-v4"
         tr = random_trace(41, n_intervals=4)
         rs = run(
             Experiment(scenarios=[Scenario(trace=tr)], fm_fracs=(0.5,))
         )
         d = json_mod.loads(rs.to_json())
-        assert d["schema"] == "tuna-runset-v3"
-        # a v2 document (no fault_events / faults echo) still loads:
-        # missing keys default
+        assert d["schema"] == "tuna-runset-v4"
+        # a v3 document (no arbiter_log) still loads: missing keys default
+        for r in d["runs"]:
+            r.pop("arbiter_log")
+        d["schema"] = "tuna-runset-v3"
+        back3 = RunSet.from_json(json_mod.dumps(d))
+        assert back3.result().stats == rs.result().stats
+        assert back3.runs[0].arbiter_log is None
+        # a v2 document (no fault_events / faults echo either) still loads
         for r in d["runs"]:
             r.pop("fault_events")
         for sc in d["spec"]["scenarios"]:

@@ -1,16 +1,42 @@
 """Workload traces and simulator invariants (property-style)."""
 
+import functools
+import pickle
+
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="hypothesis not installed (test extra)")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAS_HYPOTHESIS = True
+except ImportError:  # test extra: only the property tests skip without it
+    HAS_HYPOTHESIS = False
+
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    def _decorator_stub(*a, **k):
+        return lambda fn: fn
+
+    given = settings = _decorator_stub
+    st = _StrategyStub()
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAS_HYPOTHESIS, reason="hypothesis not installed (test extra)"
+)
 
 from repro.core.microbench import generate_microbench, spec_from_config
 from repro.core.telemetry import ConfigVector
 from repro.core.trace import load_trace, save_trace
 from repro.sim.engine import run_trace, simulate
-from repro.sim.workloads import WORKLOADS, bfs_trace
+from repro.sim.workloads import WORKLOADS, arrivals_trace, bfs_trace
+from repro.sim.workloads.arrivals import (
+    modulated_rates,
+    open_arrivals,
+    session_lengths,
+)
 from repro.tiering.policy import FirstTouchPolicy
 
 
@@ -65,6 +91,7 @@ class TestTraces:
 
 
 class TestMicrobenchProperties:
+    @needs_hypothesis
     @settings(max_examples=15, deadline=None)
     @given(
         pacc_f=st.integers(5_000, 80_000),
@@ -96,6 +123,103 @@ class TestMicrobenchProperties:
         np.testing.assert_array_equal(ia1.pages, ia2.pages)
         np.testing.assert_array_equal(ia1.touches, ia2.touches)
         assert ia2.counts.sum() > 6 * ia1.counts.sum()
+
+
+class TestArrivals:
+    """Fleet traffic shape: seeded arrival-driven session workload."""
+
+    def test_same_seed_bit_identical(self):
+        a = arrivals_trace(n_intervals=10, rss_pages=3_000, seed=5)
+        b = arrivals_trace(n_intervals=10, rss_pages=3_000, seed=5)
+        assert len(a) == len(b)
+        for ia, ib in zip(a, b):
+            np.testing.assert_array_equal(ia.pages, ib.pages)
+            np.testing.assert_array_equal(ia.counts, ib.counts)
+            np.testing.assert_array_equal(ia.touches, ib.touches)
+            assert ia.ops == ib.ops and ia.rand_frac == ib.rand_frac
+
+    def test_different_seed_differs(self):
+        a = arrivals_trace(n_intervals=10, rss_pages=3_000, seed=5)
+        b = arrivals_trace(n_intervals=10, rss_pages=3_000, seed=6)
+        assert any(
+            ia.pages.size != ib.pages.size
+            or not np.array_equal(ia.pages, ib.pages)
+            for ia, ib in zip(a, b)
+        )
+
+    def test_modulated_rates_shape(self):
+        flat = modulated_rates(96, base_rate=2.0, diurnal_amp=0.5,
+                               diurnal_period=48, flash_crowds=0)
+        # diurnal sinusoid: peak at a quarter period, trough at three
+        i = np.arange(96)
+        np.testing.assert_allclose(
+            flat, 2.0 * (1.0 + 0.5 * np.sin(2 * np.pi * i / 48)),
+            rtol=1e-12,
+        )
+        burst = modulated_rates(96, base_rate=2.0, diurnal_amp=0.5,
+                                diurnal_period=48, flash_crowds=2,
+                                flash_mult=6.0, flash_len=3, seed=7)
+        boosted = burst > flat * 1.5
+        assert 3 <= boosted.sum() <= 6  # 2 windows of 3 (may overlap)
+        np.testing.assert_array_equal(burst[~boosted], flat[~boosted])
+        assert (modulated_rates(96, base_rate=0.01) >= 0.05).all()
+
+    def test_open_arrivals_poisson_mean(self):
+        rates = np.full(4_000, 3.0)
+        draws = open_arrivals(rates, seed=11)
+        # mean of 4000 Poisson(3) draws: sigma = sqrt(3/4000) ~ 0.027
+        assert abs(draws.mean() - 3.0) < 0.15
+        assert (draws >= 0).all()
+
+    def test_session_lengths_long_tail(self):
+        rng = np.random.default_rng(3)
+        ln = session_lengths(5_000, session_mean=4.0, session_tail=1.6, rng=rng)
+        assert ln.dtype == np.int64 and (ln >= 1).all()
+        # Pareto(1.6) long tail: some sessions far beyond the mean scale
+        assert ln.max() > 10 * np.median(ln)
+        assert session_lengths(0, 4.0, 1.6, rng).size == 0
+
+    @needs_hypothesis
+    @settings(max_examples=10, deadline=None)
+    @given(
+        mode=st.sampled_from(["open", "closed"]),
+        n_intervals=st.integers(3, 8),
+        seed=st.integers(0, 2**16),
+    )
+    def test_trace_valid_any_seed(self, mode, n_intervals, seed):
+        tr = arrivals_trace(
+            n_intervals=n_intervals, rss_pages=1_500, mode=mode,
+            pages_per_session=120, seed=seed,
+        )
+        assert tr.rss_pages == 1_500
+        # init interval + one per arrival interval
+        assert len(tr) == n_intervals + 1
+        for ia in tr:
+            assert ia.pages.size == np.unique(ia.pages).size
+            assert (ia.pages >= 0).all() and (ia.pages < tr.rss_pages).all()
+            assert (ia.counts >= 1).all()
+            assert 0.0 <= ia.rand_frac <= 1.0
+
+    def test_bad_mode_rejected(self):
+        with pytest.raises(ValueError, match="mode"):
+            arrivals_trace(n_intervals=3, rss_pages=1_000, mode="batch")
+
+    def test_registry_round_trip(self):
+        assert WORKLOADS["arrivals"] is arrivals_trace
+
+    def test_partial_picklable(self):
+        # fleet TenantSpec traces ship as callables to spawn workers
+        # (TUNA008): a partial over the module-level generator must
+        # round-trip through pickle and regenerate the identical trace
+        fn = functools.partial(
+            arrivals_trace, n_intervals=6, rss_pages=1_500, seed=9
+        )
+        fn2 = pickle.loads(pickle.dumps(fn))
+        a, b = fn(), fn2()
+        assert len(a) == len(b)
+        for ia, ib in zip(a, b):
+            np.testing.assert_array_equal(ia.pages, ib.pages)
+            np.testing.assert_array_equal(ia.counts, ib.counts)
 
 
 class TestHLOStats:
