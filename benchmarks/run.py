@@ -26,6 +26,7 @@ def main() -> None:
         table3_target_sensitivity,
         fig_fault_resilience,
         fig_fleet,
+        fig_model_fidelity,
         serving_tiered,
         bench_engine,
         kernels as kernel_bench,
@@ -39,6 +40,7 @@ def main() -> None:
         ("table3", table3_target_sensitivity),
         ("fault", fig_fault_resilience),
         ("fleet", fig_fleet),
+        ("fidelity", fig_model_fidelity),
         ("serving", serving_tiered),
         ("engine", bench_engine),
         ("kernels", kernel_bench),

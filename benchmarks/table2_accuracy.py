@@ -20,6 +20,12 @@ ask).
 
 Paper: error < 10% everywhere, growing as fast memory shrinks
 (e.g. SSSP 0.6% at 99% → 8.0% at 85%).
+
+A model-fidelity column rides along: per workload, the total-time
+divergence between the interval cost model and the independent
+address-level timing engine (``repro.timing``) across the same measured
+size grid — the second-oracle check on the clock every other number in
+this table is computed with (see ``benchmarks/fig_model_fidelity.py``).
 """
 
 from __future__ import annotations
@@ -63,8 +69,14 @@ def _model_errs(db, cv, times) -> list:
 
 
 def run(report) -> None:
+    from repro.sim.costmodel import OPTANE_LIKE
+    from repro.timing import calibrate
+
+    from benchmarks.fig_model_fidelity import fidelity_summary
+
     db = build_bench_db()
     kinds = policy_kinds()
+    cal = calibrate(OPTANE_LIKE)
     for name in WORKLOADS:
         t0 = time.time()
         tr = get_trace(name)
@@ -106,3 +118,15 @@ def run(report) -> None:
                 f"mean_err={np.mean(errs)*100:.1f}%"
                 f";max_err={np.max(errs)*100:.1f}%" + suffix,
             )
+        # model-fidelity column: interval clock vs the timing oracle over
+        # the same measured grid (second-oracle check, not a db query)
+        fid = fidelity_summary(
+            tr, name, cal=cal, fracs=(1.0,) + FM_GRID, cache_dir=CACHE
+        )
+        report(
+            f"table2/{name}_fidelity",
+            (time.time() - t0) * 1e6,
+            f"mean_div={fid['mean_abs']*100:.1f}%"
+            f";max_div={fid['max_abs']*100:.1f}%"
+            " (interval model vs repro.timing oracle)",
+        )

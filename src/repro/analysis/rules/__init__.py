@@ -19,4 +19,5 @@ from repro.analysis.rules import (  # noqa: F401  (import = register)
     tuna007_trace_determinism,
     tuna008_picklable_specs,
     tuna009_fleet_budget_writes,
+    tuna010_timing_independence,
 )

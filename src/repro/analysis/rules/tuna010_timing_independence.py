@@ -1,0 +1,99 @@
+"""TUNA010: the timing engine is an independent oracle.
+
+``repro.timing`` exists to measure the interval cost model's error, so
+it must not be built out of the thing it measures: nothing under
+``timing/`` may import the interval engine (``repro.sim.engine``), the
+sweep backends (``repro.sim.sweep``, ``repro.sim.jax_engine``), or read
+wall clocks (replays are seeded-deterministic). Shared *physics* is
+fine — ``HardwareProfile`` constants, the tiering stack it re-executes
+for schedule parity — but shared *simulation* (interval costing, sweep
+state) would collapse the two clocks into one and make the fidelity
+benchmark circular.
+
+A deliberate exception (none exists today) takes a
+``# tuna: ignore[TUNA010]`` with its justification.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, ModuleSource, Rule, dotted_name, register_rule
+
+_FORBIDDEN_MODULES = (
+    "repro.sim.engine",
+    "repro.sim.sweep",
+    "repro.sim.jax_engine",
+)
+
+_WALL_CLOCK = {
+    "time.time",
+    "time.time_ns",
+    "time.perf_counter",
+    "time.perf_counter_ns",
+    "time.monotonic",
+    "time.monotonic_ns",
+    "time.process_time",
+    "time.process_time_ns",
+    "time.clock_gettime",
+    "datetime.now",
+    "datetime.utcnow",
+    "datetime.datetime.now",
+    "datetime.datetime.utcnow",
+}
+
+
+def _imported_modules(node: ast.AST):
+    if isinstance(node, ast.Import):
+        for a in node.names:
+            yield a.name
+    elif isinstance(node, ast.ImportFrom) and node.module:
+        yield node.module
+        # `from repro.sim import engine` reaches the same internals
+        for a in node.names:
+            yield f"{node.module}.{a.name}"
+
+
+@register_rule
+class TimingIndependenceRule(Rule):
+    code = "TUNA010"
+    name = "timing-oracle-independence"
+    description = (
+        "repro.timing importing sim.engine/sim.sweep/sim.jax_engine "
+        "internals or reading wall clocks — the second oracle must stay "
+        "independent of the clock it measures"
+    )
+    scope = ("timing/",)
+    exempt = ()
+
+    def check(self, mod: ModuleSource) -> list[Finding]:
+        out: list[Finding] = []
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                for name in _imported_modules(node):
+                    if any(
+                        name == f or name.startswith(f + ".")
+                        for f in _FORBIDDEN_MODULES
+                    ):
+                        out.append(
+                            self.finding(
+                                mod,
+                                node,
+                                f"timing engine imports {name}: the second "
+                                "oracle must not be built out of the "
+                                "interval engine it measures",
+                            )
+                        )
+                        break
+            elif isinstance(node, ast.Call):
+                name = dotted_name(node.func)
+                if name in _WALL_CLOCK:
+                    out.append(
+                        self.finding(
+                            mod,
+                            node,
+                            f"wall-clock read {name}() in the timing "
+                            "engine: replays must be seeded-deterministic",
+                        )
+                    )
+        return out

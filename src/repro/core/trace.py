@@ -30,6 +30,13 @@ class IntervalAccess:
     (latency-exposed); the rest are sequential bursts the prefetcher hides.
     The micro-benchmark's strided accesses deliberately defeat the cache
     hierarchy, so it uses the default 1.0.
+
+    ``writes`` is an optional per-page count of *store* accesses (a subset
+    of ``counts``); ``None`` means all-reads, which keeps every existing
+    trace, cache key, and bit-exactness lane unchanged. The interval cost
+    model is read-modeled and ignores it; the address-level timing engine
+    (``repro.timing``) charges writes the asymmetric per-tier write
+    latency/bandwidth (Nomad's motivation for the distinction).
     """
 
     pages: np.ndarray  # int64 page ids (unique)
@@ -37,6 +44,7 @@ class IntervalAccess:
     ops: float  # arithmetic ops performed this interval
     rand_frac: float = 1.0
     touches: np.ndarray | None = None  # fault-like events per page
+    writes: np.ndarray | None = None  # store accesses per page (<= counts)
 
     def __post_init__(self) -> None:
         self.pages = np.asarray(self.pages, dtype=np.int64)
@@ -49,6 +57,12 @@ class IntervalAccess:
             self.touches = np.asarray(self.touches, dtype=np.int64)
             if self.touches.shape != self.pages.shape:
                 raise ValueError("pages/touches shape mismatch")
+        if self.writes is not None:
+            self.writes = np.asarray(self.writes, dtype=np.int64)
+            if self.writes.shape != self.pages.shape:
+                raise ValueError("pages/writes shape mismatch")
+            if np.any(self.writes < 0) or np.any(self.writes > self.counts):
+                raise ValueError("writes must satisfy 0 <= writes <= counts")
 
     @property
     def total_accesses(self) -> int:
@@ -112,6 +126,16 @@ def save_trace(trace: Trace, path) -> None:
     lens = np.array([ia.pages.size for ia in trace], dtype=np.int64)
     ops = np.array([ia.ops for ia in trace])
     rand = np.array([ia.rand_frac for ia in trace])
+    # writes channel: persisted as a dense flat array with a per-interval
+    # presence flag so all-read intervals round-trip to writes=None exactly
+    has_writes = np.array([ia.writes is not None for ia in trace], dtype=bool)
+    writes = (
+        np.concatenate(
+            [ia.writes if ia.writes is not None else np.zeros(ia.pages.size, np.int64) for ia in trace]
+        )
+        if len(trace)
+        else np.empty(0, np.int64)
+    )
     np.savez_compressed(
         path,
         name=trace.name,
@@ -122,6 +146,8 @@ def save_trace(trace: Trace, path) -> None:
         pages=pages,
         counts=counts,
         touches=touches,
+        writes=writes,
+        has_writes=has_writes,
         lens=lens,
         ops=ops,
         rand=rand,
@@ -138,6 +164,8 @@ def load_trace(path) -> Trace:
     )
     lens = z["lens"]
     starts = np.concatenate([[0], np.cumsum(lens)])
+    # older caches predate the writes channel; treat them as all-reads
+    has_writes = z["has_writes"] if "has_writes" in z.files else np.zeros(len(lens), bool)
     for i, n in enumerate(lens):
         s, e = starts[i], starts[i + 1]
         trace.append(
@@ -147,6 +175,7 @@ def load_trace(path) -> Trace:
                 ops=float(z["ops"][i]),
                 rand_frac=float(z["rand"][i]),
                 touches=z["touches"][s:e],
+                writes=z["writes"][s:e] if bool(has_writes[i]) else None,
             )
         )
     return trace

@@ -517,17 +517,31 @@ class RunSet:
     ) -> np.ndarray:
         """Total execution time of every matching run, in ``runs`` order.
 
-        Simulator-backed runs only — custom-runner records hold an opaque
-        payload with no ``total_time`` and are rejected explicitly.
+        Simulator-backed runs participate via ``SimResult.total_time``.
+        Custom-runner payloads participate via the **interval-times
+        protocol**: a payload ``dict`` that carries ``"total_time"`` (a
+        float, preferred) and/or ``"interval_times"`` (a list of floats
+        summed as a fallback) declares its timing to the reporting
+        helpers — ``repro.timing.runner.timing_runner`` emits both.
+        Payloads that declare neither key are rejected explicitly, as
+        before.
         """
-        recs = self.select(scenario, policy)
-        for r in recs:
-            if not isinstance(r.result, SimResult):
+        out = []
+        for r in self.select(scenario, policy):
+            res = r.result
+            if isinstance(res, SimResult):
+                out.append(res.total_time)
+            elif isinstance(res, dict) and "total_time" in res:
+                out.append(float(res["total_time"]))
+            elif isinstance(res, dict) and "interval_times" in res:
+                out.append(float(np.sum(res["interval_times"])))
+            else:
                 raise TypeError(
-                    f"total_times() needs simulator results; run "
+                    f"total_times() needs simulator results or payloads "
+                    f"with 'total_time'/'interval_times'; run "
                     f"{r.scenario!r}/{r.policy!r} has backend={r.backend!r}"
                 )
-        return np.array([r.result.total_time for r in recs])
+        return np.array(out)
 
     # ----------------------------------------------------- serialization
     def to_json(self, indent: int | None = None) -> str:

@@ -46,6 +46,13 @@ class HardwareProfile:
     # but dependent chains serialize a fraction of the smaller tier's time
     # behind the larger one. 0 = perfect overlap, 1 = fully serial.
     cross_tier_serial: float = 0.4
+    # write-path asymmetry (None = same as the read path). The interval
+    # cost model is read-modeled and never reads these; the address-level
+    # timing engine (repro.timing) charges stores with them, which is what
+    # makes write-heavy traces a divergence regime between the two clocks.
+    lat_fast_write: float | None = None
+    lat_slow_write: float | None = None
+    bw_slow_write: float | None = None
 
 
 # Calibrated to reproduce the paper's testbed behaviour (Xeon Gold 6252 +
@@ -64,6 +71,11 @@ OPTANE_LIKE = HardwareProfile(
     direct_reclaim_stall=4.0e-6,
     promote_fail_penalty=1.5e-6,
     llc_pages=1024,  # LLC scaled with the workloads (~4 MB of 4 KB pages)
+    # Optane's write path is far worse than its read path (~3x latency,
+    # ~1/4 bandwidth); DRAM writes are roughly symmetric.
+    lat_fast_write=90e-9,
+    lat_slow_write=1000e-9,
+    bw_slow_write=8e9,
 )
 
 # TPU v5e chip: HBM 819 GB/s fast tier, host DRAM behind ~50 GB/s link as the

@@ -33,6 +33,11 @@ class PageMapper:
     and thresholds on). A random gather is one cache line and one touch per
     element; a sequential scan is ``elem_bytes/64`` cache lines per element
     but only one touch per page per scan.
+
+    ``write_frac`` on an access marks that fraction of its cache lines as
+    stores (deterministic expected-value accounting, no RNG draw — a
+    ``write_frac=0.0`` workload emits bit-identical traces with or without
+    the knob). Intervals with no stores flush with ``writes=None``.
     """
 
     def __init__(self, name: str, page_bytes: int = 4096, num_threads: int = 1):
@@ -44,6 +49,7 @@ class PageMapper:
         self._seq_acc = 0.0
         self._counts_vec: np.ndarray | None = None  # cache-line accesses
         self._touch_vec: np.ndarray | None = None  # fault-like events
+        self._write_vec: np.ndarray | None = None  # store cache lines
         self.trace = Trace(name=name, rss_pages=0, num_threads=num_threads)
 
     # ------------------------------------------------------------ regions
@@ -60,6 +66,7 @@ class PageMapper:
         self.trace.rss_pages = self._next_page
         self._counts_vec = np.zeros(self._next_page, dtype=np.float64)
         self._touch_vec = np.zeros(self._next_page, dtype=np.float64)
+        self._write_vec = np.zeros(self._next_page, dtype=np.float64)
         return self
 
     def pages_of(self, name: str, idx: np.ndarray) -> np.ndarray:
@@ -74,6 +81,7 @@ class PageMapper:
         idx: np.ndarray,
         ops_per_access: float = 0.0,
         sequential: bool = False,
+        write_frac: float = 0.0,
     ) -> None:
         """Record element accesses into region ``name`` (vectorized)."""
         r = self._regions[name]
@@ -87,14 +95,25 @@ class PageMapper:
             self._counts_vec += hist * cl_per_elem
             self._touch_vec += (hist > 0)
             self._seq_acc += pages.size * cl_per_elem
+            if write_frac > 0.0:
+                self._write_vec += hist * (cl_per_elem * write_frac)
         else:
             hist = np.bincount(pages, minlength=self._counts_vec.size)
             self._counts_vec += hist
             self._touch_vec += hist
             self._rand_acc += pages.size
+            if write_frac > 0.0:
+                self._write_vec += hist * write_frac
         self._ops += ops_per_access * pages.size
 
-    def touch_range(self, name: str, lo: int, hi: int, ops_per_access: float = 0.0):
+    def touch_range(
+        self,
+        name: str,
+        lo: int,
+        hi: int,
+        ops_per_access: float = 0.0,
+        write_frac: float = 0.0,
+    ):
         """Record a dense sequential scan of elements [lo, hi)."""
         r = self._regions[name]
         n = max(0, hi - lo)
@@ -104,8 +123,11 @@ class PageMapper:
         p1 = int(r.base_page + ((hi - 1) * r.elem_bytes) // self.page_bytes)
         cl_per_page = self.page_bytes // CACHELINE
         total_cl = max(1.0, n * r.elem_bytes / CACHELINE)
-        self._counts_vec[p0 : p1 + 1] += min(cl_per_page, total_cl / (p1 - p0 + 1))
+        cl_here = min(cl_per_page, total_cl / (p1 - p0 + 1))
+        self._counts_vec[p0 : p1 + 1] += cl_here
         self._touch_vec[p0 : p1 + 1] += 1
+        if write_frac > 0.0:
+            self._write_vec[p0 : p1 + 1] += cl_here * write_frac
         self._seq_acc += total_cl
         self._ops += ops_per_access * n
 
@@ -121,6 +143,11 @@ class PageMapper:
             return
         counts = np.maximum(1, np.rint(self._counts_vec[pages])).astype(np.int64)
         touches = np.maximum(1, np.rint(self._touch_vec[pages])).astype(np.int64)
+        writes = None
+        if np.any(self._write_vec):
+            writes = np.minimum(
+                counts, np.rint(self._write_vec[pages]).astype(np.int64)
+            )
         tot = self._rand_acc + self._seq_acc
         rand_frac = (self._rand_acc / tot) if tot else 1.0
         self.trace.append(
@@ -130,10 +157,12 @@ class PageMapper:
                 ops=self._ops,
                 rand_frac=rand_frac,
                 touches=touches,
+                writes=writes,
             )
         )
         self._counts_vec[:] = 0.0
         self._touch_vec[:] = 0.0
+        self._write_vec[:] = 0.0
         self._ops = 0.0
         self._rand_acc = 0.0
         self._seq_acc = 0.0

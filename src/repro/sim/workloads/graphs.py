@@ -41,6 +41,7 @@ def bfs_trace(
     n_sources: int = 32,
     dist_cache_rate: int = 8,
     page_bytes: int = 4096,
+    write_frac: float = 0.0,
 ) -> Trace:
     """Direction-optimizing BFS (GAP): top-down gathers for small
     frontiers, bottom-up sweeps with a frontier *bitmap* for large ones.
@@ -81,8 +82,10 @@ def bfs_trace(
                 pm.touch("dist", neigh[::dist_cache_rate], ops_per_access=2.0)
                 unvisited = neigh[dist[neigh] < 0]
                 nxt = np.unique(unvisited)
-                pm.touch("dist", nxt, ops_per_access=1.0)
-                pm.touch("bitmap", nxt // 8, ops_per_access=1.0)
+                pm.touch("dist", nxt, ops_per_access=1.0,
+                         write_frac=write_frac)
+                pm.touch("bitmap", nxt // 8, ops_per_access=1.0,
+                         write_frac=write_frac)
                 budget += pos.size
             else:
                 # ---- bottom-up: every unvisited vertex scans its edges and
@@ -96,8 +99,10 @@ def bfs_trace(
                 pm.touch("edges", pos, ops_per_access=1.0, sequential=True)
                 pm.touch("bitmap", (neigh[::dist_cache_rate] // 8),
                          ops_per_access=1.0)
-                pm.touch_range("dist", 0, n, ops_per_access=1.0)
-                pm.touch("bitmap", nxt // 8, ops_per_access=1.0)
+                pm.touch_range("dist", 0, n, ops_per_access=1.0,
+                               write_frac=write_frac)
+                pm.touch("bitmap", nxt // 8, ops_per_access=1.0,
+                         write_frac=write_frac)
                 budget += pos.size
             dist[nxt] = level + 1
             frontier = nxt.astype(np.int64)
@@ -116,6 +121,7 @@ def sssp_trace(
     n_sources: int = 12,
     delta: float = 0.1,
     page_bytes: int = 4096,
+    write_frac: float = 0.0,
 ) -> Trace:
     """Single-source shortest path via bucketed (delta-stepping-style)
     frontier relaxation over weighted edges."""
@@ -157,7 +163,8 @@ def sssp_trace(
             improved = mins < dist[uniq]
             uniq, mins = uniq[improved], mins[improved]
             dist[uniq] = mins
-            pm.touch("dist", uniq, ops_per_access=1.0)
+            pm.touch("dist", uniq, ops_per_access=1.0,
+                     write_frac=write_frac)
             active = uniq.astype(np.int64)
             rounds += 1
             budget += pos.size
@@ -175,6 +182,7 @@ def pagerank_trace(
     iters: int = 12,
     damping: float = 0.85,
     page_bytes: int = 4096,
+    write_frac: float = 0.0,
 ) -> Trace:
     """Power-iteration PageRank; each iteration is split into edge-range
     chunks that map onto profiling intervals."""
@@ -211,7 +219,8 @@ def pagerank_trace(
             # is the random, tiering-sensitive stream
             pm.touch("contrib", src_of_pos[seg][:: max(1, (hi - lo) // 200_000)],
                      ops_per_access=0.0, sequential=True)
-            pm.touch("rank", edges[seg], ops_per_access=2.0)
+            pm.touch("rank", edges[seg], ops_per_access=2.0,
+                     write_frac=write_frac)
             pm.end_interval()
         rank = (1.0 - damping) / n + damping * new_rank
     return pm.trace

@@ -36,6 +36,7 @@ def thrash_trace(
     reps: int = 6,
     seed: int = 23,
     page_bytes: int = 4096,
+    write_frac: float = 0.0,
 ) -> Trace:
     """Rotating-window churn over a table of ``rss_pages`` pages.
 
@@ -43,7 +44,10 @@ def thrash_trace(
     fraction of the RSS; ``rotate_frac`` advances its origin per interval
     as a fraction of the window; ``reps`` random gathers per window page
     per interval put every window page past the default promotion
-    threshold (``hot_thr=4``) with high probability.
+    threshold (``hot_thr=4``) with high probability. ``write_frac`` marks
+    that fraction of the hash-probe gathers as stores (read-modify-write
+    probes); the default 0.0 keeps the trace bit-identical to before the
+    write channel existed.
     """
     rng = np.random.default_rng(seed)
     pm = PageMapper("thrash", page_bytes=page_bytes, num_threads=8)
@@ -65,7 +69,7 @@ def thrash_trace(
         idx = np.repeat(win, reps) * elems_per_page + rng.integers(
             0, elems_per_page, size=hot_pages * reps
         )
-        pm.touch("table", idx, ops_per_access=4.0)
+        pm.touch("table", idx, ops_per_access=4.0, write_frac=write_frac)
         # sparse cold-tail sprinkle: single touches stay far below the
         # promotion threshold but keep the whole RSS in the ranking
         bg = rng.choice(rss_pages, size=bg_n, replace=False).astype(np.int64)

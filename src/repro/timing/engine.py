@@ -1,0 +1,247 @@
+"""Address-level timing engine: event replay with bounded MLP.
+
+One interval's accesses are expanded into a deterministic stream of
+memory events and replayed against a two-channel (fast/slow) memory
+model in the tracehm mold:
+
+* each event occupies its tier's channel for ``occupancy`` seconds —
+  the channel's ``avail_cycle`` advances as
+  ``avail = max(avail, ready) + occupancy``, so concurrent events on one
+  tier serialize through its bandwidth;
+* each event then waits its tier's access latency; latency is hidden
+  across the **in-flight window** (at most ``mlp x num_threads`` events
+  outstanding) but exposed along per-page dependence chains — a page's
+  random accesses issue back-to-back (same-row/bank serialization,
+  pointer-chase locality), which is exactly the skewed-participation
+  effect the interval model can only proxy via the participation ratio;
+* sequential runs are prefetched: one latency exposure per page run,
+  bytes charged to the channel in a single burst.
+
+The replay is exact under this model but vectorized: the stream is
+processed in windows of ``W = mlp x num_threads`` events; within a
+window, per-tier channel finish times come from the single-server queue
+identity ``finish_k = C_k + max(avail, max_{j<=k}(ready_j - C_{j-1}))``
+(``C`` = cumulative occupancy), computed with ``cumsum`` +
+``maximum.accumulate``. Very large intervals are coarsened
+deterministically: every event stands for ``w`` real accesses and the
+window shrinks to ``W/w`` slots — the same queueing system at scale
+``w`` — so replay cost is bounded by ``max_events`` per interval.
+
+Determinism: the only randomness is the page interleave permutation,
+drawn from ``np.random.default_rng((seed, interval_index))`` — replays
+are bit-identical across runs and fan-out workers.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.timing.latency import FAST, SLOW, TimingParams, absorb_llc
+
+
+@dataclass(frozen=True)
+class TimedInterval:
+    """Realized timing of one interval (comparable 1:1 with IntervalCosts)."""
+
+    total: float  # realized seconds, all terms composed
+    t_app: float  # event-replay makespan (memory side)
+    t_compute: float  # arithmetic term (overlaps t_app)
+    t_migrate: float  # migration software overhead
+    t_stall: float  # direct-reclaim + failed-promotion stalls
+    events: int  # events materialized for the replay
+    scale: float  # accesses represented per event (coarsening factor)
+    bytes_fast: int  # application bytes served by the fast tier
+    bytes_slow: int  # application bytes served by the slow tier
+
+    @property
+    def t_mem(self) -> float:
+        return self.t_app
+
+
+class AddressTimingEngine:
+    """Replays intervals event-by-event; seeded-deterministic."""
+
+    def __init__(self, params: TimingParams, seed: int = 0) -> None:
+        self.params = params
+        self.seed = int(seed)
+
+    # ------------------------------------------------------------ replay
+    def replay_interval(
+        self,
+        index: int,
+        pages: np.ndarray,
+        counts: np.ndarray,
+        tiers: np.ndarray,
+        ops: float,
+        num_threads: int = 1,
+        rand_frac: float = 1.0,
+        writes: np.ndarray | None = None,
+        pm_pr: int = 0,
+        pm_de: int = 0,
+        pm_fail: int = 0,
+        direct_reclaimed: int = 0,
+    ) -> TimedInterval:
+        """Time one interval's accesses against the given placement.
+
+        ``tiers`` gives the tier backing each page *at access time*
+        (0=fast, 1=slow); ``writes`` is the per-page store count
+        (``None`` = all reads). Migrations preload channel occupancy and
+        add their software overhead; stalls are additive, compute
+        overlaps with memory (roofline composition, same as the interval
+        model — the clocks differ in the memory term, which is the
+        comparison this engine exists for).
+        """
+        p = self.params
+        threads = max(1, int(num_threads))
+        counts = absorb_llc(
+            np.asarray(counts, dtype=np.int64),
+            p.llc_pages,
+            max(1, p.page_bytes // p.access_bytes),
+        )
+        tiers = np.asarray(tiers)
+        if tiers.shape != counts.shape or (
+            tiers.size and not np.all((tiers == FAST) | (tiers == SLOW))
+        ):
+            raise ValueError("tiers must be 0/1 and aligned with counts")
+        if writes is None:
+            writes = np.zeros_like(counts)
+        else:
+            writes = np.minimum(np.asarray(writes, dtype=np.int64), counts)
+
+        t_compute = ops / (p.ops_per_s * threads)
+        t_migrate = (pm_pr + pm_de) * p.migrate_page_overhead / threads
+        t_stall = (
+            direct_reclaimed * p.direct_reclaim_stall
+            + pm_fail * p.promote_fail_penalty
+        )
+        bytes_fast = int(counts[tiers == FAST].sum()) * p.access_bytes
+        bytes_slow = int(counts[tiers == SLOW].sum()) * p.access_bytes
+        if counts.size == 0 or counts.sum() == 0:
+            return TimedInterval(
+                total=t_compute + t_migrate + t_stall,
+                t_app=0.0,
+                t_compute=t_compute,
+                t_migrate=t_migrate,
+                t_stall=t_stall,
+                events=0,
+                scale=1.0,
+                bytes_fast=bytes_fast,
+                bytes_slow=bytes_slow,
+            )
+
+        ev = self._build_events(index, counts, tiers, writes, rand_frac)
+        chan = np.array(p.migration_channel_seconds(pm_pr, pm_de))
+        t_app = self._replay(ev, chan, threads)
+
+        total = max(t_compute, t_app) + t_migrate + t_stall
+        return TimedInterval(
+            total=total,
+            t_app=t_app,
+            t_compute=t_compute,
+            t_migrate=t_migrate,
+            t_stall=t_stall,
+            events=int(ev["page"].size),
+            scale=float(ev["scale"]),
+            bytes_fast=bytes_fast,
+            bytes_slow=bytes_slow,
+        )
+
+    # ----------------------------------------------------- event stream
+    def _build_events(self, index, counts, tiers, writes, rand_frac):
+        """Expand per-page histograms into an ordered event stream.
+
+        Per page: a chain of random-access events (back-to-back on the
+        page) followed by one prefetched sequential burst if the page has
+        a sequential share. Chains from different pages are interleaved
+        round-robin in a seeded-permutation order, the most-even
+        interleave — deliberately matching the microbenchmark's stride
+        pattern so divergence from the interval model comes from the
+        histogram's shape, not an adversarial event order.
+        """
+        p = self.params
+        n = counts.size
+        rand = np.rint(counts * float(np.clip(rand_frac, 0.0, 1.0))).astype(np.int64)
+        seq = counts - rand
+        wr_rand = np.minimum(writes, rand)
+        wr_seq = writes - wr_rand
+
+        total_rand = int(rand.sum())
+        scale = max(1.0, total_rand / max(1, p.max_events))
+        n_ev = np.ceil(rand / scale).astype(np.int64)  # random events per page
+        has_seq = seq > 0
+        chain_len = n_ev + has_seq
+
+        total = int(chain_len.sum())
+        page_rep = np.repeat(np.arange(n, dtype=np.int64), chain_len)
+        off = np.repeat(np.cumsum(chain_len) - chain_len, chain_len)
+        pos = np.arange(total, dtype=np.int64) - off  # position in chain
+
+        is_seq_ev = pos == n_ev[page_rep]
+        # lines represented by each event (floats; conserves counts exactly)
+        lines_rand = np.divide(
+            rand, n_ev, out=np.zeros(n, dtype=np.float64), where=n_ev > 0
+        )
+        lines = np.where(is_seq_ev, seq[page_rep], lines_rand[page_rep]).astype(
+            np.float64
+        )
+        # write flags: the last wr-share of each page's random chain, plus
+        # the sequential burst when stores dominate its lines
+        n_wr_ev = np.rint(
+            np.divide(
+                n_ev * wr_rand, rand, out=np.zeros(n, float), where=rand > 0
+            )
+        ).astype(np.int64)
+        is_wr = (~is_seq_ev) & (pos >= (n_ev - n_wr_ev)[page_rep])
+        is_wr |= is_seq_ev & (wr_seq[page_rep] * 2 > seq[page_rep])
+
+        t = tiers[page_rep].astype(np.int64)
+        occ_unit = np.where(
+            is_wr, np.array(p.occ_wr)[t], np.array(p.occ_rd)[t]
+        )
+        lat = np.where(is_wr, np.array(p.lat_wr)[t], np.array(p.lat_rd)[t])
+
+        rng = np.random.default_rng((self.seed, int(index)))
+        perm = rng.permutation(n)
+        order = np.lexsort((perm[page_rep], pos))
+        return {
+            "page": page_rep[order],
+            "tier": t[order],
+            "occ": (lines * occ_unit)[order],
+            "lat": lat[order],
+            "scale": scale,
+            "n_pages": n,
+        }
+
+    # ----------------------------------------------------------- replay
+    def _replay(self, ev, chan, threads):
+        p = self.params
+        w_slots = max(1, int(round(p.window * threads / ev["scale"])))
+        page = ev["page"]
+        tier = ev["tier"]
+        occ = ev["occ"]
+        lat = ev["lat"]
+        page_done = np.zeros(ev["n_pages"], dtype=np.float64)
+        t_open = 0.0
+        end = float(chan.max())
+        chan = chan.astype(np.float64).copy()
+        for k in range(0, page.size, w_slots):
+            sl = slice(k, k + w_slots)
+            pg = page[sl]
+            ready = np.maximum(page_done[pg], t_open)
+            done = np.empty(pg.size, dtype=np.float64)
+            for tr in (FAST, SLOW):
+                m = tier[sl] == tr
+                if not m.any():
+                    continue
+                srv = occ[sl][m]
+                c = np.cumsum(srv)
+                base = np.maximum.accumulate(ready[m] - (c - srv))
+                finish = np.maximum(base, chan[tr]) + c
+                done[m] = finish + lat[sl][m]
+                chan[tr] = finish[-1]
+            page_done[pg] = done
+            t_open = float(done.min())
+            end = max(end, float(done.max()))
+        return max(end, float(chan.max()))

@@ -214,6 +214,23 @@ RULE_FIXTURES = {
             "        ctl.set_size(s)\n"
         ),
     },
+    "TUNA010": {
+        "path": "src/repro/timing/probe.py",
+        "flagged": (
+            "from repro.sim.engine import simulate\n"
+            "def clock(trace):\n"
+            "    return simulate(trace)\n"
+        ),
+        "clean": (
+            "from repro.sim.costmodel import HardwareProfile\n"
+            "def clock(hw: HardwareProfile):\n"
+            "    return hw.lat_fast\n"
+        ),
+        "suppressed": (
+            "from repro.sim.engine import simulate  "
+            "# tuna: ignore[TUNA010] fixture: teaching example\n"
+        ),
+    },
     "TUNA008": {
         "path": "benchmarks/drv.py",
         "flagged": (

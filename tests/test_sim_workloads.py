@@ -256,3 +256,87 @@ ENTRY %main (p0: f32[8]) -> f32[8] {
         assert wire_factor("all-gather", 16) == pytest.approx(15 / 16)
         assert wire_factor("collective-permute", 16) == 1.0
         assert wire_factor("all-reduce", 1) == 0.0
+
+
+class TestWriteChannel:
+    """Optional per-access is_write channel (tracegen-style): default
+    all-reads is bit-exact with the pre-channel format; write_frac knobs
+    produce a conserved store subset that survives the npz round trip."""
+
+    def test_default_traces_have_no_writes(self, small_traces):
+        for name, tr in small_traces.items():
+            assert all(ia.writes is None for ia in tr), name
+
+    def test_write_frac_zero_is_bit_exact(self):
+        base = WORKLOADS["thrash"](n_intervals=6, rss_pages=3_000)
+        knob = WORKLOADS["thrash"](n_intervals=6, rss_pages=3_000,
+                                   write_frac=0.0)
+        assert len(base) == len(knob)
+        for a, b in zip(base, knob):
+            np.testing.assert_array_equal(a.pages, b.pages)
+            np.testing.assert_array_equal(a.counts, b.counts)
+            np.testing.assert_array_equal(a.touches, b.touches)
+            assert a.writes is None and b.writes is None
+            assert a.rand_frac == b.rand_frac and a.ops == b.ops
+
+    def test_write_frac_emits_conserved_stores(self):
+        tr = WORKLOADS["thrash"](n_intervals=6, rss_pages=3_000,
+                                 write_frac=0.5)
+        wrote = 0
+        for ia in tr.intervals[1:]:  # skip the allocation interval
+            assert ia.writes is not None
+            assert (ia.writes >= 0).all()
+            assert (ia.writes <= ia.counts).all()
+            wrote += int(ia.writes.sum())
+        assert wrote > 0
+        # identical access structure: only the read/write split changes
+        base = WORKLOADS["thrash"](n_intervals=6, rss_pages=3_000)
+        for a, b in zip(base, tr):
+            np.testing.assert_array_equal(a.pages, b.pages)
+            np.testing.assert_array_equal(a.counts, b.counts)
+
+    @pytest.mark.parametrize("name,kwargs", [
+        ("thrash", dict(n_intervals=5, rss_pages=2_000, write_frac=0.3)),
+        ("bfs", dict(n=40_000, n_sources=2, write_frac=0.4)),
+        ("sssp", dict(n=40_000, n_sources=2, write_frac=0.4)),
+        ("pagerank", dict(n=40_000, iters=2, write_frac=0.4)),
+    ])
+    def test_registry_roundtrip_with_writes(self, name, kwargs, tmp_path):
+        tr = WORKLOADS[name](**kwargs)
+        assert any(ia.writes is not None for ia in tr), name
+        save_trace(tr, tmp_path / "t.npz")
+        tr2 = load_trace(tmp_path / "t.npz")
+        assert len(tr2) == len(tr)
+        for a, b in zip(tr, tr2):
+            np.testing.assert_array_equal(a.pages, b.pages)
+            np.testing.assert_array_equal(a.counts, b.counts)
+            if a.writes is None:
+                assert b.writes is None
+            else:
+                np.testing.assert_array_equal(a.writes, b.writes)
+
+    def test_load_pre_channel_npz(self, tmp_path):
+        # caches written before the channel existed load as all-reads
+        tr = WORKLOADS["thrash"](n_intervals=4, rss_pages=2_000)
+        save_trace(tr, tmp_path / "t.npz")
+        z = dict(np.load(tmp_path / "t.npz", allow_pickle=False))
+        z.pop("writes")
+        z.pop("has_writes")
+        np.savez_compressed(tmp_path / "old.npz", **z)
+        tr2 = load_trace(tmp_path / "old.npz")
+        assert len(tr2) == len(tr)
+        assert all(ia.writes is None for ia in tr2)
+
+    def test_writes_validation(self):
+        from repro.core.trace import IntervalAccess
+
+        with pytest.raises(ValueError, match="writes"):
+            IntervalAccess(
+                pages=np.array([1, 2]), counts=np.array([4, 4]),
+                ops=0.0, writes=np.array([5, 0]),
+            )
+        with pytest.raises(ValueError, match="writes"):
+            IntervalAccess(
+                pages=np.array([1, 2]), counts=np.array([4, 4]),
+                ops=0.0, writes=np.array([1]),
+            )
